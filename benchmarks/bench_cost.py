@@ -1,0 +1,61 @@
+"""Paper Table 9 / App. K: time- and cost-to-solution on reliable vs
+preemptible fleets (public on-demand/spot price sheet, mid-2021 as in the
+paper)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import SwarmRunner, SwarmConfig, T4, V100
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+PRICES = {  # $/h, on-demand vs preemptible (paper-era public cloud)
+    ("V100", False): 7.834 / 8, ("V100", True): 5.383 / 8,
+    ("T4", True): 3.536 / 32,
+}
+PAPER_TABLE9 = {"8xV100 reliable": (175.4, 1374),
+                "8xV100 preemptible": (192.6, 1037),
+                "32xT4 preemptible": (140.8, 497.8)}
+
+MODEL = ArchConfig(name="albert-sim", family="dense", n_layers=4,
+                   d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+                   vocab_size=30000, tie_embeddings=True)
+TARGET_SAMPLES = 4096 * 4000     # samples to reach the target loss
+
+
+def _fleet_throughput(n, profile, preemptible):
+    scfg = SwarmConfig(n_stages=4, microbatch_size=8, seq_len=512,
+                       global_batch=4096, n_trainers=8,
+                       rebalance_period=300.0, compress=True)
+    r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0,
+                    profile_fn=lambda i: profile)
+    r.build(peers_per_stage=n // 4)
+    if preemptible:
+        from repro.core.faults import synth_preemptible_trace
+        r.apply_trace(synth_preemptible_trace(
+            horizon_s=1800.0, target_peers=n,
+            mean_lifetime_s=6 * 3600.0, seed=5))
+    r.run(until=1800.0)
+    return r.throughput()
+
+
+def run(csv=True):
+    print("# time/cost to solution (paper Table 9)")
+    print("name,us_per_call,derived")
+    for tag, n, prof, pre, paper in (
+            ("8xV100_reliable", 8, V100, False,
+             PAPER_TABLE9["8xV100 reliable"]),
+            ("8xV100_preempt", 8, V100, True,
+             PAPER_TABLE9["8xV100 preemptible"]),
+            ("32xT4_preempt", 32, T4, True,
+             PAPER_TABLE9["32xT4 preemptible"])):
+        thr = _fleet_throughput(n, prof, pre)
+        hours = TARGET_SAMPLES / max(thr, 1e-9) / 3600.0
+        price = PRICES[(prof.name, pre)] * n
+        cost = hours * price
+        print(f"cost/{tag},0,hours={hours:.1f} hourly=${price:.2f} "
+              f"total=${cost:.0f} paper={paper[0]}h/${paper[1]}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Paper Fig. 6: SWARM throughput scales ~linearly in the number of
+(homogeneous T4) peers; plus Tables 3-4: actual-vs-best-case throughput and
+optimal bandwidth per device class."""
+from __future__ import annotations
+
+import time
+
+from repro.core import SwarmRunner, SwarmConfig, T4, A100
+from repro.models.config import ArchConfig
+from repro.models import flops as F
+from repro.optim import adamw
+
+MODEL = ArchConfig(name="swarm1b-sim", family="dense", n_layers=3,
+                   d_model=4096, n_heads=32, n_kv_heads=32, d_ff=16384,
+                   vocab_size=50257, tie_embeddings=True)
+
+
+def _throughput(n_peers, profile_fn, compress=True, horizon=900.0):
+    scfg = SwarmConfig(n_stages=3, microbatch_size=1, seq_len=2048,
+                       global_batch=512, n_trainers=3 * n_peers,
+                       rebalance_period=300.0, compress=compress)
+    r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0,
+                    profile_fn=profile_fn)
+    r.build(peers_per_stage=n_peers // 3)
+    r.run(until=horizon)
+    return r.throughput()
+
+
+def _best_case(n_peers, profile):
+    """Paper's 'ideal case ignoring all network operations'."""
+    ctx = F._ctx_for(MODEL, 2048, causal_avg=True)
+    fpt = sum(F.per_token_layer_flops(MODEL, k, ctx)
+              for k in MODEL.block_kinds) \
+        + 2 * MODEL.d_model * MODEL.vocab_size
+    t_per_sample = profile.compute_time(3 * fpt * 2048)
+    return n_peers / t_per_sample / 3.0        # 3 stages share the peers
+
+
+def run(csv=True):
+    print("# scaling with number of nodes (paper Fig. 6, Tables 3-4)")
+    print("name,us_per_call,derived")
+    base = None
+    for n in (6, 12, 24, 48):
+        t0 = time.perf_counter()
+        thr = _throughput(n, lambda i: T4)
+        dt = (time.perf_counter() - t0) * 1e6
+        if base is None:
+            base = thr / n
+        lin = thr / (base * n)
+        print(f"scaling/T4x{n},{dt:.0f},samples_s={thr:.2f} "
+              f"linearity={lin:.2f}")
+
+    # Tables 3-4: actual vs best-case, T4 vs A100 vs mixed
+    for tag, prof_fn, prof in (
+            ("T4", lambda i: T4, T4), ("A100", lambda i: A100, A100),
+            ("mixed", lambda i: T4 if i % 2 else A100, None)):
+        t0 = time.perf_counter()
+        thr = _throughput(24, prof_fn)
+        dt = (time.perf_counter() - t0) * 1e6
+        if prof is not None:
+            best = _best_case(24, prof)
+            print(f"bandwidth/{tag}x24,{dt:.0f},actual={thr:.2f} "
+                  f"best_case={best:.2f} ratio={thr/best:.2f}")
+        else:
+            print(f"bandwidth/{tag}x24,{dt:.0f},actual={thr:.2f} "
+                  f"(heterogeneous: balanced by IWRR)")
+
+    # optimal bandwidth to saturate a T4 (paper Table 3 right columns)
+    ctx = F._ctx_for(MODEL, 2048, causal_avg=True)
+    fpt = sum(F.per_token_layer_flops(MODEL, k, ctx)
+              for k in MODEL.block_kinds[:1])
+    t_c = T4.compute_time(3 * fpt * 2048)
+    nbytes = F.boundary_bytes(MODEL, 1, 2048, "int8")
+    bw_mbps = 2 * nbytes / t_c / 125_000.0
+    print(f"bandwidth/T4_optimal_mbps,0,required={bw_mbps:.0f}Mb/s "
+          f"paper=318-398Mb/s")
+
+
+if __name__ == "__main__":
+    run()

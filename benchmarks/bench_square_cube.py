@@ -1,0 +1,46 @@
+"""Paper Fig. 3 + Table 1: the square-cube law — GPU utilization vs model
+size, bandwidth and latency, for the four §4.1 layer configurations."""
+from __future__ import annotations
+
+import time
+
+from repro.core import square_cube as sc
+
+# Paper Table 1 reference values (relative GPU utilization, 500 Mb/s)
+PAPER_TABLE1 = {
+    0.0: {"base": 0.180, "xxlarge": 0.321, "GPT-3": 0.821, "Ours": 0.895},
+    0.010: {"base": 0.118, "xxlarge": 0.289, "GPT-3": 0.793, "Ours": 0.872},
+    0.050: {"base": 0.0488, "xxlarge": 0.201, "GPT-3": 0.703, "Ours": 0.795},
+    0.100: {"base": 0.0278, "xxlarge": 0.149, "GPT-3": 0.602, "Ours": 0.715},
+    0.200: {"base": 0.0153, "xxlarge": 0.101, "GPT-3": 0.485, "Ours": 0.592},
+}
+
+
+def run(csv=True):
+    rows = []
+    t0 = time.perf_counter()
+    for rtt, paper in PAPER_TABLE1.items():
+        for spec in sc.ALL_SPECS:
+            u = sc.utilization(spec, bandwidth_mbps=500.0, rtt_s=rtt)
+            rows.append((spec.name, rtt, u, paper[spec.name]))
+    us = (time.perf_counter() - t0) * 1e6 / len(rows)
+
+    ok_order = True
+    for rtt in PAPER_TABLE1:
+        us_ = [r[2] for r in rows if r[1] == rtt]
+        ok_order &= us_ == sorted(us_)
+    if csv:
+        print("# square-cube law (paper Fig.3/Table 1)")
+        print("name,us_per_call,derived")
+        for name, rtt, u, pu in rows:
+            print(f"square_cube/{name}/rtt{int(rtt*1000)}ms,{us:.2f},"
+                  f"util={u:.3f} paper={pu:.3f}")
+        print(f"square_cube/ordering_preserved,{us:.2f},{ok_order}")
+        fe, ce = sc.scaling_exponents(sc.XXLARGE)
+        print(f"square_cube/exponents,{us:.2f},"
+              f"compute_exp={fe:.2f} comm_exp={ce:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,131 @@
+"""Paper Table 2: SWARM vs GPipe vs 1F1B vs ZeRO-Offload — training
+throughput and All-Reduce time, 'xxlarge' and 'GPT-3' 4-layer stacks on 16
+V100 workers at 500 Mb/s, with and without injected latency.
+
+Calibration note: Tables 1 and 2 of the paper imply mutually inconsistent
+effective per-GPU throughputs (§4.1's idle-time measurements put xxlarge
+compute ~7x faster than §4.2's absolute samples/s would allow), so absolute
+samples/s are not recoverable from the text.  We therefore use ONE
+calibration — the square-cube efficiency curve fit to Table 1 — and report
+the quantity the paper actually argues about: SWARM's throughput RELATIVE
+to GPipe/1F1B/ZeRO-Offload, plus absolute All-Reduce seconds, which our
+fp32-payload @ 27 MB/s model reproduces to within ~10% for both model
+sizes (44.17 s and 403 s).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import SwarmRunner, SwarmConfig
+from repro.core.peer import DeviceProfile, MBPS
+from repro.models.config import ArchConfig
+from repro.models import flops as F
+from repro.optim import adamw
+
+# §4.2: "the pipeline does not contain embeddings or language modeling
+# heads" — vocab is set to a token 2 so the head contributes nothing;
+# standard (GELU, 2-matmul) FFN as in the paper's TransformerEncoderLayer.
+XXLARGE = ArchConfig(name="xxlarge4", family="dense", n_layers=4,
+                     d_model=4096, n_heads=32, n_kv_heads=32, d_ff=16384,
+                     vocab_size=2, act="gelu", tie_embeddings=True)
+GPT3 = ArchConfig(name="gpt3-4", family="dense", n_layers=4,
+                  d_model=12288, n_heads=96, n_kv_heads=96, d_ff=49152,
+                  vocab_size=2, act="gelu", tie_embeddings=True)
+
+from repro.core import square_cube as sc
+
+
+def _eff(d_model: int) -> float:
+    return sc.PEAK_FLOPS * sc.matmul_efficiency(d_model)
+
+
+AR_BW = 27e6                  # all-reduce effective bytes/s (fit: Table 2)
+PCIE_BW = 4e9                 # pinned-memory PCIe streaming (fit)
+OFFLOAD_SLOWDOWN = 1.15       # optimizer-offload stall factor (fit)
+
+PAPER = {  # (throughput, allreduce_nolat, allreduce_lat)
+    ("xxlarge", "SWARM"): (2.358, 45.36, 51.27),
+    ("xxlarge", "GPipe"): (2.541, 44.17, 64.83),
+    ("xxlarge", "1F1B"): (2.550, 44.17, 64.83),
+    ("xxlarge", "Offload"): (3.08, 168.71, 252.26),
+    ("GPT-3", "SWARM"): (0.619, 441.7, 455.4),
+    ("GPT-3", "GPipe"): (0.633, 403.0, 469.6),
+    ("GPT-3", "1F1B"): (0.638, 403.0, 469.6),
+    ("GPT-3", "Offload"): (0.382, 1527.9, 1635.4),
+}
+
+
+def _sample_flops(cfg):
+    ctx = F._ctx_for(cfg, 512, causal_avg=True)
+    return 3 * sum(F.per_token_layer_flops(cfg, k, ctx)
+                   for k in cfg.block_kinds) * 512
+
+
+def _layer_params(cfg):
+    d, f = cfg.d_model, cfg.d_ff
+    return cfg.n_layers * (4 * d * d + 2 * d * f)
+
+
+def _allreduce(cfg, k, n_stages, latency):
+    grad_bytes = 4.0 * _layer_params(cfg) / n_stages      # fp32
+    return 2 * (k - 1) / k * grad_bytes / AR_BW + 2 * k * latency
+
+
+def _swarm(cfg, micro, latency):
+    prof = DeviceProfile("V100c", _eff(cfg.d_model), 500 * MBPS,
+                         500 * MBPS, 0.003 + latency)
+    scfg = SwarmConfig(n_stages=4, microbatch_size=micro, seq_len=512,
+                       global_batch=10 ** 9, n_trainers=128,
+                       rebalance_period=0.0, compress=False)
+    r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
+                    profile_fn=lambda i: prof)
+    r.build(peers_per_stage=4)
+    r.run(until=400.0)
+    return r.throughput()
+
+
+def _gpipe(cfg, micro, latency, n_mb=32):
+    """Synchronous pipeline with exposed (blocking) transfers + bubble."""
+    t_c = _sample_flops(cfg) / 4 * micro / _eff(cfg.d_model)
+    nbytes = micro * 512 * cfg.d_model * 2
+    t_n = 2 * (nbytes / (500 * MBPS) + 0.003 + latency)
+    t_batch = (n_mb + 3) * (t_c + t_n)
+    return 4 * n_mb * micro / t_batch
+
+
+def _offload(cfg, micro, latency):
+    t = _sample_flops(cfg) * micro / _eff(cfg.d_model) * OFFLOAD_SLOWDOWN
+    param_bytes = 2.0 * F.total_params(cfg)
+    if param_bytes > 12e9:                               # exceeds V100 HBM
+        t += 2 * param_bytes / PCIE_BW
+    return 16 * micro / t
+
+
+def run(csv=True):
+    print("# SWARM vs baselines (paper Table 2)")
+    print("name,us_per_call,derived")
+    for cfg, tag, micro in ((XXLARGE, "xxlarge", 4), (GPT3, "GPT-3", 1)):
+        for latency, ltag, pidx in ((0.0, "nolat", 1), (0.075, "lat", 2)):
+            rows = []
+            t0 = time.perf_counter()
+            thr = _swarm(cfg, micro, latency)
+            rows.append(("SWARM", thr, _allreduce(cfg, 4, 4, latency)))
+            g = _gpipe(cfg, micro, latency)
+            rows.append(("GPipe", g, _allreduce(cfg, 4, 4, latency)))
+            rows.append(("1F1B", g, _allreduce(cfg, 4, 4, latency)))
+            rows.append(("Offload", _offload(cfg, micro, latency),
+                         _allreduce(cfg, 16, 1, latency)))
+            dt = (time.perf_counter() - t0) * 1e6 / 4
+            swarm_thr = rows[0][1]
+            for name, thr, ar in rows:
+                p = PAPER[(tag, name)]
+                rel = thr / swarm_thr
+                prel = p[0] / PAPER[(tag, "SWARM")][0]
+                print(f"throughput/{tag}/{ltag}/{name},{dt:.0f},"
+                      f"rel_to_swarm={rel:.2f} paper_rel={prel:.2f} "
+                      f"sim_samples_s={thr:.3f} allreduce_s={ar:.1f} "
+                      f"paper_allreduce={p[pidx]}")
+
+
+if __name__ == "__main__":
+    run()

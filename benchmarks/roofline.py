@@ -1,0 +1,161 @@
+"""Roofline analysis (§Roofline): per (arch x shape x mesh), derive the
+three terms from the compiled dry-run artifacts:
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory     = HLO_bytes / (chips x 819 GB/s)
+    collective = collective_bytes / (chips x 50 GB/s/link)
+
+HLO FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device, scan
+bodies counted once — reconstructed via the layer probe; see
+repro/launch/hlo_analysis.py).  Collective bytes are parsed from the
+partitioned HLO (per-device) and trip-count scaled.  MODEL_FLOPS uses the
+6·N·D convention with N = activated params.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+PEAK_FLOPS = 197e12          # bf16 / chip (v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                       "dryrun")
+
+
+def corrected_flops_per_device(rec: dict) -> float:
+    """graph x accum + (n_r - 1) x probe_layer / chips per scanned run
+    (grad-accumulation microbatch loops are while loops too)."""
+    accum = rec.get("accum", 1) or 1
+    total = float(rec["hlo_flops_per_device_raw"]) * accum
+    probe = rec.get("probe")
+    if probe:
+        chips = rec["n_devices"]
+        for kind, n in probe["runs"]:
+            if n > 1 and kind in probe["kinds"]:
+                total += (n - 1) * probe["kinds"][kind] / chips
+    return total
+
+
+def corrected_bytes_per_device(rec: dict) -> float:
+    """HBM traffic: scale the raw per-device bytes by the same ratio as the
+    FLOP correction (layer bodies dominate both)."""
+    raw_b = float(rec["hlo_bytes_per_device_raw"])
+    raw_f = float(rec["hlo_flops_per_device_raw"])
+    corr_f = corrected_flops_per_device(rec)
+    if raw_f <= 0:
+        return raw_b
+    return raw_b * (corr_f / raw_f)
+
+
+def model_flops(rec: dict) -> float:
+    """6·N_active·D for the cell's token count (per device)."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import get_config, SHAPES
+    from repro.models import flops as F
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_active = F.active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 1.0
+    elif shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        mult = 1.0 / 3.0           # forward only: 2·N·D
+    else:
+        tokens = shape.global_batch  # one token per sequence
+        mult = 1.0 / 3.0
+    return 6.0 * n_active * tokens * mult / rec["n_devices"]
+
+
+def analyze(rec: dict) -> dict:
+    flops = corrected_flops_per_device(rec)
+    bytes_hbm = corrected_bytes_per_device(rec)
+    bytes_coll = float(rec["collectives"]["total_bytes"])
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_hbm / HBM_BW
+    t_coll = bytes_coll / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec)
+    # ideal step time: compute at peak, but never below one pass over the
+    # resident state (params+caches) — the binding floor for decode
+    min_bytes = rec["memory"]["argument_bytes"]
+    ideal = max(mf / PEAK_FLOPS, min_bytes / HBM_BW)
+    bound = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "hlo_flops": flops, "hlo_bytes": bytes_hbm,
+        "coll_bytes": bytes_coll,
+        "model_flops": mf,
+        "useful_ratio": mf / flops if flops else 0.0,
+        # roofline fraction: ideal compute time / achievable step time
+        # (step time >= max of the three terms)
+        "roofline_frac": ideal / bound if bound else 0.0,
+        "peak_mem_gib": rec["memory"]["peak_per_device"] / 2 ** 30,
+        "fits_16g": rec["memory"]["peak_per_device"] <= 16 * 2 ** 30,
+    }
+
+
+def load_records(mesh: str = "single") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(ART_DIR, f"{mesh}__*.json"))):
+        rec = json.load(open(path))
+        out.append(rec)
+    return out
+
+
+def what_would_help(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_ratio"] < 0.4:
+            return ("cut non-useful FLOPs (remat recompute, causal-block "
+                    "skip, MoE capacity)")
+        return "compute-bound near peak: increase arithmetic efficiency"
+    if d == "memory":
+        return ("reduce HBM traffic: fuse norms/quant (Pallas), bf16 "
+                "master/grad, larger fusion blocks")
+    return ("cut collective bytes: int8 collectives, 2D-sharded layouts, "
+            "overlap via pipelined scan")
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | collective s | "
+           "dominant | MODEL/HLO | roofline | peak GiB |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} | "
+            f"{r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} | "
+            f"{r['dominant']} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.2f} | {r['peak_mem_gib']:.1f}"
+            f"{'' if r['fits_16g'] else ' (!)'} |")
+    return hdr + "\n".join(lines)
+
+
+def main(mesh: str = "single"):
+    rows = []
+    for rec in load_records(mesh):
+        if rec.get("status") == "skipped":
+            print(f"skipped,{rec['arch']},{rec['shape']},{rec['reason']}")
+            continue
+        if rec.get("status") != "ok":
+            print(f"ERROR,{rec['arch']},{rec['shape']},"
+                  f"{rec.get('error', '?')}")
+            continue
+        rows.append(analyze(rec))
+    print(markdown_table(rows))
+    for r in rows:
+        print(f"hint,{r['arch']},{r['shape']},{what_would_help(r)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else "single")

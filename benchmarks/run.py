@@ -1,0 +1,58 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV per benchmark plus the roofline
+tables derived from the dry-run artifacts (if present).
+
+    PYTHONPATH=src python -m benchmarks.run [--only <name>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (bench_square_cube, bench_throughput,
+                            bench_rebalance, bench_scaling,
+                            bench_compression, bench_cost, roofline)
+    suites = {
+        "square_cube": bench_square_cube.run,     # Fig.3 / Table 1
+        "throughput": bench_throughput.run,       # Table 2
+        "rebalance": bench_rebalance.run,         # Table 5 / Fig.5 / Fig.7
+        "scaling": bench_scaling.run,             # Fig.6 / Tables 3-4
+        "compression": bench_compression.run,     # Table 7/8
+        "cost": bench_cost.run,                   # Table 9
+    }
+    failed = []
+    for name, fn in suites.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} took {time.time() - t0:.1f}s\n")
+
+    if not args.only or args.only == "roofline":
+        try:
+            print("# roofline (single-pod baseline, from dry-run artifacts)")
+            roofline.main("single")
+        except Exception:
+            failed.append("roofline")
+            traceback.print_exc()
+
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train a small LM with SWARM parallelism on CPU.
+
+Spins up 2 pipeline stages x 2 peers + 3 trainer processes on the
+virtual clock, with real JAX math and 8-bit compressed stage boundaries,
+and shows the loss falling — then kills a peer mid-run to show nothing
+breaks.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import SwarmRunner, SwarmConfig, TraceEvent
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+
+
+def main():
+    cfg = ArchConfig(name="quickstart-lm", family="dense", n_layers=4,
+                     d_model=128, n_heads=4, n_kv_heads=2, d_ff=512,
+                     vocab_size=512, head_dim=32,
+                     compute_dtype="float32", param_dtype="float32")
+    scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=64,
+                       global_batch=16, n_trainers=3,
+                       rebalance_period=30.0, compress=True, max_steps=10)
+    runner = SwarmRunner(cfg, scfg, adamw(lr=3e-3), numeric=True, seed=0)
+    runner.build(peers_per_stage=2)
+    # a preemption one virtual second in: SWARM reroutes and keeps going
+    runner.apply_trace([TraceEvent(1.0, -1)])
+
+    print("training a 4-layer LM across a 2-stage swarm "
+          "(int8 boundaries, 1 preemption)...")
+    metrics = runner.run(until=1e9)
+    for i, loss in enumerate(metrics["loss"]):
+        print(f"  step {i + 1}: loss {loss:.4f}")
+    print(f"peers failed: {metrics['failures']}, "
+          f"migrations: {metrics['migrations']}, "
+          f"throughput: {runner.throughput():.2f} samples/s (virtual)")
+    assert metrics["loss"][-1] < metrics["loss"][0], "loss did not fall"
+    print("OK — loss fell despite the failure.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Checkpointing: atomic save/restore of arbitrary pytrees.
+
+This is the restart half of SWARM's fault-tolerance story on TPU
+(DESIGN.md §3): any surviving replica can serve the state, and a restarted
+job may load onto a *different* topology — arrays are stored unsharded, so
+re-sharding on restore is just pjit placement with new shardings.
+Peer-to-peer "download state from neighbors" (paper Fig. 2) is modelled by
+``repro.core.peer.PeerStore`` on top of the same serialization.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+Tree = Any
+
+_MANIFEST = "manifest.json"
+
+
+def _flatten_with_paths(tree: Tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save_checkpoint(directory: str, step: int, tree: Tree) -> str:
+    """Atomically write ``{directory}/step_{step}`` and return its path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        paths, leaves, _ = _flatten_with_paths(tree)
+        arrays, dtypes = {}, []
+        for i, x in enumerate(leaves):
+            a = np.asarray(x)
+            dtypes.append(str(a.dtype))
+            if a.dtype.name == "bfloat16":      # npz has no bf16 cast
+                a = a.astype(np.float32)
+            arrays[f"a{i}"] = a
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump({"step": step, "paths": paths, "dtypes": dtypes}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_")]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(directory: str, like: Tree,
+                       step: Optional[int] = None) -> tuple[Tree, int]:
+    """Restore into the structure of ``like`` (shapes/dtypes validated)."""
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, _MANIFEST)) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    paths, leaves, treedef = _flatten_with_paths(like)
+    if paths != manifest["paths"]:
+        raise ValueError("checkpoint tree structure mismatch")
+    new_leaves = []
+    for i, leaf in enumerate(leaves):
+        arr = data[f"a{i}"]
+        if tuple(arr.shape) != tuple(np.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch at {paths[i]}: {arr.shape} vs "
+                f"{np.shape(leaf)}")
+        new_leaves.append(arr.astype(np.asarray(leaf).dtype)
+                          if hasattr(leaf, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), step

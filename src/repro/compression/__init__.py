@@ -1,0 +1,12 @@
+from repro.compression.quant8 import (
+    blockwise_quantize, blockwise_dequantize, compress_boundary,
+    quantization_error,
+)
+from repro.compression.bottleneck import bottleneck_specs, apply_bottleneck
+from repro.compression.maxout import maxout_specs, apply_maxout
+
+__all__ = [
+    "blockwise_quantize", "blockwise_dequantize", "compress_boundary",
+    "quantization_error", "bottleneck_specs", "apply_bottleneck",
+    "maxout_specs", "apply_maxout",
+]

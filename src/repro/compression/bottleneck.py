@@ -1,0 +1,52 @@
+"""Linear bottleneck compression layer (paper App. J.1).
+
+``Bottleneck(x) = LayerNorm(LayerNorm(MLP(x)) @ w_c) @ w_d`` — ``w_c`` lives
+on the sending stage, ``w_d`` on the receiving stage; the wire carries the
+``c``-dim tensor, an ``m/c``× reduction.  The paper finds LayerNorm around
+the projection critical for stable training.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+Tree = Any
+
+
+def _ln(x: jax.Array) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    mu = x32.mean(-1, keepdims=True)
+    var = ((x32 - mu) ** 2).mean(-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + 1e-6)).astype(x.dtype)
+
+
+def bottleneck_specs(d_model: int, d_compress: int,
+                     dtype=jnp.float32) -> Tree:
+    return {
+        "w_c": ParamSpec((d_model, d_compress), dtype,
+                         axes=("embed", "bottleneck")),
+        "w_d": ParamSpec((d_compress, d_model), dtype,
+                         axes=("bottleneck", "embed")),
+    }
+
+
+def compress(p: Tree, x: jax.Array) -> jax.Array:
+    """Sending stage: [.., m] -> [.., c] (this is what crosses the wire)."""
+    return _ln(_ln(x) @ p["w_c"].astype(x.dtype))
+
+
+def decompress(p: Tree, z: jax.Array) -> jax.Array:
+    """Receiving stage: [.., c] -> [.., m]."""
+    return z @ p["w_d"].astype(z.dtype)
+
+
+def apply_bottleneck(p: Tree, x: jax.Array) -> jax.Array:
+    return decompress(p, compress(p, x))
+
+
+def wire_ratio(d_model: int, d_compress: int) -> float:
+    return d_compress / d_model

@@ -1,0 +1,41 @@
+"""Maxout compression layer (paper App. J.1, Goodfellow et al. 2013).
+
+``Maxout_k`` reduces the hidden dim by k by taking the max over
+non-overlapping windows of k features; a decompression matrix ``w_d`` on the
+receiving stage restores ``m``.  Autodiff through ``max`` is the standard
+subgradient (winner-takes-all), matching the original.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+from repro.compression.bottleneck import _ln
+
+Tree = Any
+
+
+def maxout_specs(d_model: int, k: int, dtype=jnp.float32) -> Tree:
+    assert d_model % k == 0
+    return {
+        "w_d": ParamSpec((d_model // k, d_model), dtype,
+                         axes=("bottleneck", "embed")),
+    }
+
+
+def compress(x: jax.Array, k: int) -> jax.Array:
+    """[.., m] -> [.., m/k]: maxout_k(LayerNorm(x)) (crosses the wire)."""
+    x = _ln(x)
+    m = x.shape[-1]
+    return x.reshape(*x.shape[:-1], m // k, k).max(-1)
+
+
+def decompress(p: Tree, z: jax.Array) -> jax.Array:
+    return _ln(z) @ p["w_d"].astype(z.dtype)
+
+
+def apply_maxout(p: Tree, x: jax.Array, k: int) -> jax.Array:
+    return decompress(p, compress(x, k))

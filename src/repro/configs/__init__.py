@@ -1,0 +1,59 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>`` resolution."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ArchConfig, reduced
+
+from repro.configs import (
+    yi_6b, h2o_danube_3_4b, qwen15_4b, gemma_2b, qwen2_vl_2b, xlstm_125m,
+    whisper_large_v3, hymba_1_5b, llama4_scout_17b_a16e, deepseek_v2_236b,
+    swarm1b,
+)
+
+_MODULES = [yi_6b, h2o_danube_3_4b, qwen15_4b, gemma_2b, qwen2_vl_2b,
+            xlstm_125m, whisper_large_v3, hymba_1_5b, llama4_scout_17b_a16e,
+            deepseek_v2_236b, swarm1b]
+
+REGISTRY: dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
+
+# The ten assigned architectures (the paper's own model is extra).
+ASSIGNED = [
+    "yi-6b", "h2o-danube-3-4b", "qwen1.5-4b", "gemma-2b", "qwen2-vl-2b",
+    "xlstm-125m", "whisper-large-v3", "hymba-1.5b", "llama4-scout-17b-a16e",
+    "deepseek-v2-236b",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def get_config(name: str) -> ArchConfig:
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(REGISTRY)}")
+    return REGISTRY[name]
+
+
+def get_reduced(name: str) -> ArchConfig:
+    return reduced(get_config(name))
+
+
+def cell_supported(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is (arch x shape) runnable? Returns (ok, reason-if-not)."""
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return False, ("pure full-attention arch: 500k context is "
+                       "unservable (DESIGN.md §5)")
+    return True, ""

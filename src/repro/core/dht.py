@@ -1,0 +1,61 @@
+"""Distributed Hash Table, in-process (Kademlia semantics à la hivemind).
+
+SWARM uses the DHT for (a) peer discovery — each peer announces the stage it
+serves with a TTL and re-announces every few minutes; trainers ban peers
+until their next re-announcement (§3.2) — and (b) the rebalancing protocol,
+which writes per-peer queue sizes under ``DHT[stage]`` as (subkey -> value)
+pairs (Alg. 2 line 4).
+
+We model the *semantics* (multi-writer keys, expiration, staleness) on the
+virtual clock; network latency for DHT RPCs is charged by the caller via the
+cost model.  Replication/routing internals of Kademlia are irrelevant to the
+algorithms built on top and are not simulated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Hashable, Optional
+
+
+@dataclasses.dataclass
+class DHTRecord:
+    value: Any
+    expiration: float
+
+
+class DHT:
+    def __init__(self, clock: Callable[[], float]):
+        self._clock = clock
+        self._store: dict[Hashable, dict[Hashable, DHTRecord]] = {}
+
+    def store(self, key: Hashable, subkey: Hashable, value: Any,
+              ttl: float) -> None:
+        self._store.setdefault(key, {})[subkey] = DHTRecord(
+            value, self._clock() + ttl)
+
+    def get(self, key: Hashable) -> dict[Hashable, DHTRecord]:
+        now = self._clock()
+        recs = self._store.get(key, {})
+        live = {sk: r for sk, r in recs.items() if r.expiration > now}
+        self._store[key] = live
+        return dict(live)
+
+    def get_value(self, key: Hashable, subkey: Hashable,
+                  default: Any = None) -> Any:
+        rec = self.get(key).get(subkey)
+        return rec.value if rec is not None else default
+
+    def delete(self, key: Hashable, subkey: Optional[Hashable] = None):
+        if subkey is None:
+            self._store.pop(key, None)
+        else:
+            self._store.get(key, {}).pop(subkey, None)
+
+    # convenience namespaces used by SWARM
+    @staticmethod
+    def stage_key(stage: int) -> str:
+        return f"stage/{stage}"
+
+    @staticmethod
+    def load_key(stage: int) -> str:
+        return f"load/{stage}"

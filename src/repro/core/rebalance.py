@@ -1,0 +1,97 @@
+"""Adaptive swarm rebalancing (paper §3.2 + Appendix D, Algorithm 2).
+
+Every ``T`` seconds each peer writes its local queue size under
+``DHT[load/<stage>]``; the peer with the smallest queue in the
+minimum-load stage migrates to the maximum-load stage, downloading the
+target stage's parameters + optimizer state from its new neighbors.
+Complexity O(M·S) per round (App. D); only the single migrating peer stops
+serving during the download.
+
+``plan_migration`` is the pure decision function (unit-tested directly and
+reused by the TPU launcher's stage->pod rebalancing, DESIGN.md §3); the
+coroutine that executes it lives in :mod:`repro.core.swarm`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Hashable, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Migration:
+    peer: Hashable
+    src_stage: int
+    dst_stage: int
+
+
+def stage_loads(dht, n_stages: int) -> list[float]:
+    """Sum the per-peer queue sizes announced for every stage (lines 7-18)."""
+    loads = []
+    for s in range(n_stages):
+        recs = dht.get(dht.load_key(s))
+        loads.append(float(sum(r.value for r in recs.values())))
+    return loads
+
+
+def plan_migration(dht, n_stages: int,
+                   peers_per_stage: dict[int, list[Hashable]]
+                   ) -> Optional[Migration]:
+    """Algorithm 2, lines 5-31, computed from the DHT snapshot.
+
+    Never empties a stage (SWARM requires >= 1 peer per stage, App. A).
+    Returns None when the swarm is already balanced or the min stage has a
+    single peer.
+    """
+    loads = stage_loads(dht, n_stages)
+    s_min = min(range(n_stages), key=lambda s: loads[s])
+    s_max = max(range(n_stages), key=lambda s: loads[s])
+    if s_min == s_max or loads[s_max] <= loads[s_min]:
+        return None
+    donors = peers_per_stage.get(s_min, [])
+    if len(donors) <= 1:
+        return None
+
+    recs = dht.get(dht.load_key(s_min))
+    q_min, peer_min = math.inf, None
+    for peer in donors:
+        q = recs.get(peer)
+        qv = q.value if q is not None else math.inf
+        if qv < q_min:
+            q_min, peer_min = qv, peer
+    if peer_min is None:
+        return None
+    return Migration(peer_min, s_min, s_max)
+
+
+def optimal_assignment(n_peers: int, n_stages: int,
+                       stage_costs: Optional[list[float]] = None
+                       ) -> list[int]:
+    """Throughput-optimal peer counts per stage (the 'always optimal'
+    baseline of Table 5): proportional to per-stage compute cost, each
+    stage >= 1."""
+    costs = stage_costs or [1.0] * n_stages
+    total = sum(costs)
+    alloc = [max(1, round(n_peers * c / total)) for c in costs]
+    # fix rounding to sum exactly n_peers, never dropping below 1
+    while sum(alloc) > n_peers:
+        i = max(range(n_stages), key=lambda j: alloc[j])
+        if alloc[i] > 1:
+            alloc[i] -= 1
+        else:
+            break
+    while sum(alloc) < n_peers:
+        i = min(range(n_stages),
+                key=lambda j: alloc[j] / max(costs[j], 1e-9))
+        alloc[i] += 1
+    return alloc
+
+
+def pipeline_throughput(alloc: list[int], peer_speed: float = 1.0,
+                        stage_costs: Optional[list[float]] = None) -> float:
+    """Steady-state pipeline throughput = min over stages of aggregate
+    stage speed (the weakest-link law, §3.2)."""
+    costs = stage_costs or [1.0] * len(alloc)
+    if any(a <= 0 for a in alloc):
+        return 0.0
+    return min(a * peer_speed / c for a, c in zip(alloc, costs))

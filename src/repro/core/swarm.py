@@ -1,0 +1,439 @@
+"""SwarmRunner — the full SWARM parallelism system on the virtual clock.
+
+Composition (paper Fig. 2): consecutive swarms of peers serve pipeline
+stages; trainer processes route microbatches via stochastic wiring; a DHT
+carries liveness + load; adaptive rebalancing migrates peers between
+stages; once the global batch is accumulated, every stage All-Reduces its
+gradients and applies the (optionally delayed, DPU) optimizer step.
+
+Two modes:
+  numeric=True   — real JAX math per stage (convergence experiments,
+                   equivalence tests; Fig. 4 / App. E analogues).
+  numeric=False  — timing only (Tables 2-5, Figs. 5-7 analogues: 400-peer,
+                   32-hour traces run in seconds of wall time).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import Sim, Sleep, Spawn
+from repro.core.dht import DHT
+from repro.core.peer import Peer, DeviceProfile, PeerFailure, T4
+from repro.core.wiring import StochasticWiring
+from repro.core.trainer import Trainer, Microbatch
+from repro.core import rebalance as rb
+from repro.core.faults import TraceEvent
+from repro.core.stage_model import StageProgram, build_stage_programs, \
+    init_stage_params
+from repro.models.config import ArchConfig
+from repro.models import flops as F
+from repro.optim.adamw import Optimizer
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class SwarmConfig:
+    n_stages: int = 3
+    microbatch_size: int = 1
+    seq_len: int = 128
+    global_batch: int = 8                # sequences per optimizer step
+    n_trainers: int = 4
+    rebalance_period: float = 300.0      # T (paper §4.3)
+    announce_interval: float = 120.0
+    announce_ttl: float = 300.0
+    wiring_gamma: float = 0.1            # EMA alpha (paper §4.3)
+    compress: bool = True                # 8-bit boundary compression
+    quant_block: int = 64
+    dpu: bool = False
+    max_steps: Optional[int] = None
+    allreduce_bw: float = 50e6           # bytes/s effective per peer
+
+
+class SwarmRunner:
+    def __init__(self, cfg: ArchConfig, scfg: SwarmConfig,
+                 optimizer: Optimizer, *, numeric: bool = True,
+                 seed: int = 0,
+                 profile_fn: Optional[Callable[[int], DeviceProfile]] = None,
+                 data_fn: Optional[Callable[[int], dict]] = None):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.optimizer = optimizer
+        self.numeric = numeric
+        self.sim = Sim()
+        self.dht = DHT(lambda: self.sim.now)
+        self.n_stages = scfg.n_stages
+        self.compress = scfg.compress
+        self.quant_block = scfg.quant_block
+        self.rng = np.random.default_rng(seed)
+        self.profile_fn = profile_fn or (lambda i: T4)
+        self.data_fn = data_fn
+
+        self.programs: list[StageProgram] = build_stage_programs(
+            cfg, scfg.n_stages, scfg.seq_len) if numeric else \
+            [None] * scfg.n_stages
+        self._ref_params: Optional[list[Tree]] = None
+        if numeric:
+            self._ref_params = init_stage_params(
+                self.programs, jax.random.PRNGKey(seed))
+            self._ref_opt = [optimizer.init(p) for p in self._ref_params]
+
+        self.peers: dict[str, Peer] = {}
+        self.wirings: list[StochasticWiring] = []
+        self.trainers: list[Trainer] = []
+
+        # training progress
+        self.stopped = False
+        self._mb_counter = 0
+        self._inflight = 0
+        self._dispatch_paused = False
+        self._round_dispatched = 0           # samples handed out this round
+        self.step = 0
+        self.metrics: dict[str, list] = {
+            "loss": [], "step_time": [], "samples_done": [],
+            "throughput_t": [], "throughput_v": [], "migrations": 0,
+            "failures": 0, "joins": 0, "recomputed_microbatches": 0,
+        }
+        self._samples_done_total = 0
+        self._flops_per_sample_total = 0.0
+
+    # ================================================== setup
+    def add_peer(self, stage: int, profile: Optional[DeviceProfile] = None
+                 ) -> Peer:
+        peer = Peer(self.sim, profile or self.profile_fn(len(self.peers)),
+                    stage)
+        self.peers[peer.id] = peer
+        if self.numeric:
+            peer.state.params = jax.tree.map(lambda x: x,
+                                             self._ref_params[stage])
+            peer.state.opt = jax.tree.map(lambda x: x, self._ref_opt[stage])
+            peer.state.grad_acc = jax.tree.map(jnp.zeros_like,
+                                               peer.state.params)
+        self._announce(peer)
+        for w in self.wirings:
+            w.add_server(peer.id, [stage])
+        self.sim.spawn(self._announcer(peer))
+        return peer
+
+    def build(self, peers_per_stage: int | list[int]):
+        if isinstance(peers_per_stage, int):
+            peers_per_stage = [peers_per_stage] * self.n_stages
+        for s, n in enumerate(peers_per_stage):
+            for _ in range(n):
+                self.add_peer(s)
+        for i in range(self.scfg.n_trainers):
+            w = StochasticWiring(self.n_stages,
+                                 gamma=self.scfg.wiring_gamma,
+                                 seed=1000 + i)
+            for pid, p in self.peers.items():
+                if p.alive:
+                    w.add_server(pid, [p.stage])
+            self.wirings.append(w)
+            t = Trainer(self.sim, self, w, f"trainer{i}")
+            self.trainers.append(t)
+            self.sim.spawn(t.run())
+        self.sim.spawn(self._sync_loop())
+        if self.scfg.rebalance_period > 0:
+            self.sim.spawn(self._rebalance_loop())
+
+    # ================================================== DHT liveness
+    def _announce(self, peer: Peer):
+        self.dht.store(self.dht.stage_key(peer.stage), peer.id, peer.stage,
+                       self.scfg.announce_ttl)
+
+    def _announcer(self, peer: Peer):
+        while peer.alive and not self.stopped:
+            self._announce(peer)
+            yield Sleep(self.scfg.announce_interval)
+
+    def announced_stages(self) -> dict[str, int]:
+        out = {}
+        for s in range(self.n_stages):
+            for pid, rec in self.dht.get(self.dht.stage_key(s)).items():
+                peer = self.peers.get(pid)
+                if peer is not None and peer.alive and peer.stage == s:
+                    out[pid] = s
+        return out
+
+    # ================================================== data / dispatch
+    def next_microbatch(self) -> Optional[Microbatch]:
+        """Hand out work while the current round's global batch is short —
+        SWARM accumulates *exactly* ``global_batch`` samples per optimizer
+        step (App. E: synchronous semantics), re-issuing samples lost to
+        dead peers."""
+        if self.stopped or self._dispatch_paused:
+            return None
+        if self._round_dispatched + self.scfg.microbatch_size \
+                > self.scfg.global_batch:
+            return None
+        self._round_dispatched += self.scfg.microbatch_size
+        idx = self._mb_counter
+        self._mb_counter += 1
+        self._inflight += 1
+        b, S = self.scfg.microbatch_size, self.scfg.seq_len
+        mb = Microbatch(index=idx, size=b, n_tokens=b * S)
+        if self.numeric:
+            batch = (self.data_fn(idx) if self.data_fn else
+                     self._default_data(idx))
+            mb.tokens, mb.labels = batch["tokens"], batch["labels"]
+        return mb
+
+    def _default_data(self, idx: int) -> dict:
+        from repro.data.synthetic import SyntheticLM
+        ds = SyntheticLM(self.cfg.vocab_size, self.scfg.seq_len,
+                         self.scfg.microbatch_size, seed=17)
+        return ds.batch(idx)
+
+    def microbatch_done(self, mb: Microbatch, ok: bool):
+        self._inflight -= 1
+        if ok:
+            self._samples_done_total += mb.size
+            self.metrics["throughput_t"].append(self.sim.now)
+            self.metrics["throughput_v"].append(self._samples_done_total)
+        else:
+            # the microbatch never landed anywhere: free its budget so a
+            # replacement sample is dispatched (App. A)
+            self._round_dispatched -= mb.size
+
+    # ================================================== cost model
+    def compute_time(self, peer: Peer, kind: str, stage: int,
+                     mb: Microbatch) -> float:
+        prog = self.programs[stage]
+        if prog is not None:
+            fpt = (prog.fwd_flops_per_token if kind == "fwd"
+                   else prog.bwd_flops_per_token)
+        else:
+            ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
+            per = self.cfg.n_layers // self.n_stages
+            kinds = self.cfg.block_kinds[stage * per:(stage + 1) * per]
+            fpt = sum(F.per_token_layer_flops(self.cfg, k, ctx)
+                      for k in kinds)
+            if stage == self.n_stages - 1:
+                fpt += 2 * self.cfg.d_model * self.cfg.vocab_size
+            if kind == "bwd":
+                fpt *= 3.0
+        return peer.profile.compute_time(fpt * mb.n_tokens)
+
+    def boundary_nbytes(self, mb: Microbatch) -> float:
+        return F.boundary_bytes(
+            self.cfg, mb.size, self.scfg.seq_len,
+            "int8" if self.compress else "none")
+
+    # ================================================== gradient sync
+    def _stage_samples(self, s: int) -> int:
+        return sum(p.state.sample_count for p in self.peers.values()
+                   if p.alive and p.stage == s)
+
+    def accumulate(self, peer: Peer, gp: Optional[Tree], mb: Microbatch,
+                   loss: Optional[float]):
+        st = peer.state
+        if gp is not None:
+            st.grad_acc = jax.tree.map(
+                lambda a, g: a + g.astype(a.dtype), st.grad_acc, gp)
+        st.sample_count += mb.size
+        st.token_count += mb.n_tokens
+        if loss is not None:
+            st.loss_sum += loss
+
+    def _sync_loop(self):
+        """Trigger All-Reduce + optimizer step when global batch reached."""
+        gb = self.scfg.global_batch
+        while not self.stopped:
+            short = min(self._stage_samples(s)
+                        for s in range(self.n_stages))
+            if short < gb:
+                # App. A: samples whose gradients died with a failed peer
+                # must be recomputed by survivors — when the dispatch
+                # budget is spent and nothing is in flight, re-open it
+                if self._inflight == 0 and self._round_dispatched >= gb:
+                    self.metrics["recomputed_microbatches"] += \
+                        (gb - short) // max(self.scfg.microbatch_size, 1)
+                    self._round_dispatched = short
+                yield Sleep(0.2)
+                continue
+            # barrier: stop dispatch, drain in-flight microbatches
+            self._dispatch_paused = True
+            while self._inflight > 0:
+                yield Sleep(0.1)
+            # lost-gradient check (App. A): a stage may have lost samples
+            # with dead peers — survivors recompute (dispatch resumes below)
+            short = min(self._stage_samples(s) for s in range(self.n_stages))
+            if short < gb:
+                self.metrics["recomputed_microbatches"] += (gb - short) \
+                    // max(self.scfg.microbatch_size, 1)
+                self._round_dispatched = short
+                self._dispatch_paused = False
+                continue
+            t0 = self.sim.now
+            yield from self._all_reduce_and_step()
+            self.metrics["step_time"].append(self.sim.now - t0)
+            self._round_dispatched = 0
+            self._dispatch_paused = False
+            if (self.scfg.max_steps is not None
+                    and self.step >= self.scfg.max_steps):
+                self.stopped = True
+
+    def _all_reduce_and_step(self):
+        """Per-stage ring All-Reduce (time) + optimizer step (numerics)."""
+        for s in range(self.n_stages):
+            group = [p for p in self.peers.values()
+                     if p.alive and p.stage == s]
+            if not group:
+                continue
+            k = len(group)
+            nbytes = group[0].state_nbytes() / 3.0   # grads only
+            if nbytes == 0.0:                        # throughput mode
+                nbytes = 2.0 * F.total_params(self.cfg) / self.n_stages
+            ar_time = (2 * (k - 1) / max(k, 1)) * nbytes \
+                / self.scfg.allreduce_bw + 0.01 * k
+            yield Sleep(ar_time)
+            if not self.numeric:
+                for p in group:
+                    p.state.zero_grads() if p.state.grad_acc is not None \
+                        else None
+                    p.state.sample_count = 0
+                continue
+            # average gradients over the stage (token-weighted sum / tokens)
+            total_tokens = sum(p.state.token_count for p in group)
+            gsum = group[0].state.grad_acc
+            for p in group[1:]:
+                gsum = jax.tree.map(lambda a, b: a + b, gsum,
+                                    p.state.grad_acc)
+            gmean = jax.tree.map(lambda g: g / max(total_tokens, 1), gsum)
+            params, opt = group[0].state.params, group[0].state.opt
+            updates, opt = self.optimizer.update(gmean, opt, params)
+            params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+            loss_sum = sum(p.state.loss_sum for p in group)
+            if s == self.n_stages - 1 and total_tokens:
+                self.metrics["loss"].append(loss_sum / total_tokens)
+            for p in group:
+                p.state.params = params
+                p.state.opt = opt
+                p.state.version += 1
+                p.state.zero_grads()
+        self.step += 1
+
+    # ================================================== rebalancing
+    def _rebalance_loop(self):
+        T = self.scfg.rebalance_period
+        while not self.stopped:
+            yield Sleep(T)
+            # peers report queue sizes (Alg. 2 line 4)
+            for p in self.peers.values():
+                if p.alive:
+                    self.dht.store(self.dht.load_key(p.stage), p.id,
+                                   p.queue_size() + 1e-3, T * 1.5)
+            pps = {s: [p.id for p in self.peers.values()
+                       if p.alive and p.stage == s]
+                   for s in range(self.n_stages)}
+            mig = rb.plan_migration(self.dht, self.n_stages, pps)
+            if mig is None:
+                continue
+            yield from self._migrate(self.peers[mig.peer], mig.dst_stage)
+
+    def _migrate(self, peer: Peer, dst: int):
+        """Stage switch: stop serving, download state, re-announce."""
+        donors = [p for p in self.peers.values()
+                  if p.alive and p.stage == dst and p is not peer]
+        src = peer.stage
+        peer.stage = dst                       # stops accepting src work
+        if donors and self.numeric:
+            donor = donors[0]
+            yield Sleep(peer.profile.recv_time(donor.state_nbytes()))
+            peer.adopt_state_from(donor)
+        else:
+            yield Sleep(1.0)
+            if self.numeric and self._ref_params is not None and not donors:
+                # stage died entirely: restore from checkpointed reference
+                peer.state.params = jax.tree.map(
+                    lambda x: x, self._ref_params[dst])
+                peer.state.opt = jax.tree.map(lambda x: x,
+                                              self._ref_opt[dst])
+                peer.state.grad_acc = jax.tree.map(
+                    jnp.zeros_like, peer.state.params)
+        self._announce(peer)
+        self.dht.delete(self.dht.load_key(src), peer.id)
+        for w in self.wirings:
+            w.move_server(peer.id, [dst])
+        self.metrics["migrations"] += 1
+
+    # ================================================== fault injection
+    def apply_trace(self, trace: list[TraceEvent]):
+        self.sim.spawn(self._trace_proc(trace))
+
+    def _trace_proc(self, trace: list[TraceEvent]):
+        for ev in trace:
+            dt = ev.time - self.sim.now
+            if dt > 0:
+                yield Sleep(dt)
+            if self.stopped:
+                return
+            if ev.delta < 0:
+                for _ in range(-ev.delta):
+                    self._fail_random_peer()
+            else:
+                for _ in range(ev.delta):
+                    yield from self._join_new_peer()
+
+    def _fail_random_peer(self):
+        live = [p for p in self.peers.values() if p.alive]
+        candidates = [p for p in live
+                      if sum(1 for q in live
+                             if q.stage == p.stage and q.alive) > 1]
+        if not candidates:
+            return
+        victim = candidates[self.rng.integers(len(candidates))]
+        victim.fail()
+        self.metrics["failures"] += 1
+        for w in self.wirings:
+            w.ban_server(victim.id)
+        self.dht.delete(self.dht.stage_key(victim.stage), victim.id)
+        self.dht.delete(self.dht.load_key(victim.stage), victim.id)
+
+    def _join_new_peer(self):
+        # new peers join the most loaded stage (§3.2 "assigned to the
+        # optimal pipeline stage by following the same protocol")
+        loads = []
+        for s in range(self.n_stages):
+            group = [p for p in self.peers.values()
+                     if p.alive and p.stage == s]
+            q = sum(p.queue_size() for p in group)
+            loads.append((q + 1) / max(len(group), 1e-9))
+        dst = int(np.argmax(loads))
+        peer = self.add_peer(dst)
+        self.metrics["joins"] += 1
+        if self.numeric:
+            donors = [p for p in self.peers.values()
+                      if p.alive and p.stage == dst and p is not peer]
+            if donors:
+                yield Sleep(peer.profile.recv_time(donors[0].state_nbytes()))
+                peer.adopt_state_from(donors[0])
+
+    # ================================================== run
+    def run(self, until: Optional[float] = None,
+            max_steps: Optional[int] = None):
+        if max_steps is not None:
+            self.scfg = dataclasses.replace(self.scfg, max_steps=max_steps)
+            # _sync_loop reads scfg.max_steps each iteration via self.scfg
+        self.sim.run(until=until)
+        self.stopped = True
+        return self.metrics
+
+    def throughput(self, window: float = None) -> float:
+        """Samples/s over the run (optionally trailing window)."""
+        ts, vs = (self.metrics["throughput_t"],
+                  self.metrics["throughput_v"])
+        if len(ts) < 2:
+            return 0.0
+        if window:
+            import bisect
+            lo = bisect.bisect_left(ts, ts[-1] - window)
+            lo = min(lo, len(ts) - 2)
+            return (vs[-1] - vs[lo]) / max(ts[-1] - ts[lo], 1e-9)
+        return vs[-1] / max(ts[-1], 1e-9)

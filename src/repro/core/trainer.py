@@ -1,0 +1,192 @@
+"""Trainer processes (paper §3.2 / App. C).
+
+Trainers own no parameters and no GPU: they form microbatches and route
+them through one peer per stage (forward), then back (backward), using
+stochastic wiring.  On a peer failure anywhere along the path the trainer
+bans the peer and re-routes — backward can go to a *different* peer than
+forward because stages recompute activations from the boundary input
+(activation checkpointing, App. A).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sim import Sim, Sleep
+from repro.core.peer import Peer, PeerFailure
+from repro.core.wiring import StochasticWiring
+from repro.compression.quant8 import _roundtrip
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class Microbatch:
+    index: int
+    tokens: Any = None          # numeric mode: jnp [b, S]
+    labels: Any = None
+    size: int = 1               # sequences
+    n_tokens: int = 0
+
+
+class Trainer:
+    def __init__(self, sim: Sim, swarm, wiring: StochasticWiring,
+                 name: str, *, max_retries: int = 50,
+                 refresh_interval: float = 30.0):
+        self.sim = sim
+        self.swarm = swarm
+        self.wiring = wiring
+        self.name = name
+        self.max_retries = max_retries
+        self.refresh_interval = refresh_interval
+        self._last_refresh = -1e9
+
+    # ------------------------------------------------------------ helpers
+    def _maybe_refresh(self):
+        if self.sim.now - self._last_refresh >= self.refresh_interval:
+            self.wiring.refresh_from_dht(
+                self.swarm.dht, self.swarm.announced_stages())
+            self._last_refresh = self.sim.now
+
+    def _pick(self, stage: int):
+        """Choose a live peer for a stage, waiting if none available."""
+        self._maybe_refresh()
+        peer_id = self.wiring.choose_server(stage)
+        if peer_id is None:
+            return None
+        peer = self.swarm.peers.get(peer_id)
+        if peer is None or not peer.alive or peer.stage != stage:
+            self.wiring.ban_server(peer_id)
+            return None
+        return peer
+
+    def _boundary_bytes(self, mb: Microbatch) -> float:
+        return self.swarm.boundary_nbytes(mb)
+
+    # ------------------------------------------------------------ core
+    def run_microbatch(self, mb: Microbatch):
+        """Generator process: one microbatch through fwd+bwd. Yields sim
+        commands; returns (loss_sum, ok)."""
+        swarm = self.swarm
+        S = swarm.n_stages
+        numeric = swarm.numeric
+        acts: list[Any] = [None] * S        # boundary input of each stage
+        path: list[Optional[Peer]] = [None] * S
+
+        # ---------------- forward
+        x = mb.tokens if numeric else None
+        s = 0
+        retries = 0
+        while s < S:
+            peer = self._pick(s)
+            if peer is None:
+                retries += 1
+                if retries > self.max_retries:
+                    return None, False
+                yield Sleep(1.0)
+                continue
+            nbytes = self._boundary_bytes(mb) if s > 0 else \
+                mb.n_tokens * 4.0
+            t0 = self.sim.now
+            try:
+                yield Sleep(peer.profile.recv_time(nbytes))
+                prog = swarm.programs[s] if numeric else None
+                inp = x
+
+                if numeric:
+                    if s == S - 1:
+                        thunk = (lambda _p=peer, _prog=prog, _i=inp:
+                                 _prog.fwd(_p.state.params, _i, mb.labels))
+                    else:
+                        thunk = (lambda _p=peer, _prog=prog, _i=inp:
+                                 _prog.fwd(_p.state.params, _i))
+                else:
+                    thunk = lambda: None
+                ct = swarm.compute_time(peer, "fwd", s, mb)
+                y = yield peer.submit("fwd", ct, thunk).wait()
+                # response travels back / onward
+                yield Sleep(peer.profile.send_time(
+                    self._boundary_bytes(mb) if s < S - 1 else 64.0))
+                self.wiring.observe(peer.id, self.sim.now - t0)
+                acts[s] = inp
+                path[s] = peer
+                if numeric and s < S - 1:
+                    y = _roundtrip(y, swarm.quant_block) \
+                        if swarm.compress else y
+                x = y
+                s += 1
+                retries = 0
+            except PeerFailure:
+                self.wiring.ban_server(peer.id)
+                retries += 1
+                if retries > self.max_retries:
+                    return None, False
+
+        # ---------------- backward (reverse, re-routable per stage)
+        loss_sum = float(x) if numeric else 0.0
+        dy = None
+        s = S - 1
+        retries = 0
+        while s >= 0:
+            peer = path[s]
+            if peer is None or not peer.alive or peer.stage != s:
+                peer = self._pick(s)
+            if peer is None:
+                retries += 1
+                if retries > self.max_retries:
+                    return None, False
+                yield Sleep(1.0)
+                continue
+            nbytes = self._boundary_bytes(mb)
+            t0 = self.sim.now
+            try:
+                yield Sleep(peer.profile.recv_time(nbytes))
+                if numeric:
+                    prog = swarm.programs[s]
+                    if s == S - 1:
+                        def thunk(_p=peer, _prog=prog, _i=acts[s]):
+                            loss, gx, gp = _prog.bwd(_p.state.params, _i,
+                                                     mb.labels)
+                            self.swarm.accumulate(_p, gp, mb, float(loss))
+                            return gx
+                    else:
+                        def thunk(_p=peer, _prog=prog, _i=acts[s], _dy=dy):
+                            gx, gp = _prog.bwd(_p.state.params, _i, _dy)
+                            self.swarm.accumulate(_p, gp, mb, None)
+                            return gx
+                else:
+                    def thunk(_p=peer):
+                        self.swarm.accumulate(_p, None, mb, None)
+                        return None
+                ct = swarm.compute_time(peer, "bwd", s, mb)
+                gx = yield peer.submit("bwd", ct, thunk).wait()
+                yield Sleep(peer.profile.send_time(nbytes if s > 0 else 64.0))
+                self.wiring.observe(peer.id, self.sim.now - t0)
+                if numeric and gx is not None and swarm.compress:
+                    gx = _roundtrip(gx, swarm.quant_block)
+                dy = gx
+                s -= 1
+                retries = 0
+            except PeerFailure:
+                self.wiring.ban_server(peer.id)
+                retries += 1
+                if retries > self.max_retries:
+                    return None, False
+
+        return loss_sum, True
+
+    def run(self):
+        """Main trainer loop: pull microbatch indices until stopped."""
+        swarm = self.swarm
+        while not swarm.stopped:
+            mb = swarm.next_microbatch()
+            if mb is None:
+                yield Sleep(0.5)
+                continue
+            result = yield from self.run_microbatch(mb)
+            loss_sum, ok = result if result is not None else (None, False)
+            swarm.microbatch_done(mb, ok)

@@ -1,0 +1,130 @@
+"""Stochastic wiring (paper §3.2 + Appendix C, Algorithm 1).
+
+Interleaved Weighted Round-Robin over a priority queue: every peer serving a
+stage carries *the total processing time over all previous requests*; a
+microbatch routes to the peer with the smallest total, whose priority is
+then bumped by the EMA of its response time.  A device that is 2× faster
+thus receives 2× the requests.  Failed peers are banned (priority = ∞)
+until they re-announce in the DHT.
+
+Faithfulness notes vs Algorithm 1:
+  * ``ema`` starts at ``epsilon`` and is updated as
+    ``ema = gamma*dt + (1-gamma)*ema`` (line 30).
+  * ``choose_server`` bumps priority by the *current* EMA before dispatch
+    (lines 14-19) so concurrent trainers spread load.
+  * different trainers keep independent EMAs — this is what makes routing
+    topology-aware (§3.2 "trainers automatically adjust to the network
+    topology").
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import math
+from typing import Hashable, Optional
+
+INF = math.inf
+
+
+@dataclasses.dataclass
+class _Entry:
+    priority: float
+    seq: int
+    server: Hashable
+    valid: bool = True
+
+
+class StagePriorityQueue:
+    """Lazy-deletion priority queue keyed by accumulated processing time."""
+
+    def __init__(self):
+        self._heap: list[tuple[float, int, _Entry]] = []
+        self._entries: dict[Hashable, _Entry] = {}
+        self._seq = 0
+
+    def update(self, server: Hashable, priority: float) -> None:
+        old = self._entries.get(server)
+        if old is not None:
+            old.valid = False
+        self._seq += 1
+        e = _Entry(priority, self._seq, server)
+        self._entries[server] = e
+        if priority != INF:
+            heapq.heappush(self._heap, (priority, self._seq, e))
+
+    def remove(self, server: Hashable) -> None:
+        old = self._entries.pop(server, None)
+        if old is not None:
+            old.valid = False
+
+    def top(self) -> Optional[tuple[Hashable, float]]:
+        while self._heap:
+            priority, _, e = self._heap[0]
+            if not e.valid:
+                heapq.heappop(self._heap)
+                continue
+            return e.server, priority
+        return None
+
+    def servers(self) -> list[Hashable]:
+        return [s for s, e in self._entries.items() if e.priority != INF]
+
+
+class StochasticWiring:
+    """Algorithm 1. One instance per *trainer* (per-trainer EMAs)."""
+
+    def __init__(self, n_stages: int, gamma: float = 0.1,
+                 epsilon: float = 1e-3, seed: Optional[int] = None):
+        self.n_stages = n_stages
+        self.gamma = gamma
+        self.epsilon = epsilon
+        self.ema: dict[Hashable, float] = {}
+        self.queues = [StagePriorityQueue() for _ in range(n_stages)]
+        self._stages_of: dict[Hashable, list[int]] = {}
+        import random
+        self._rng = random.Random(seed)
+
+    # ------------------------------------------------------------ peers
+    def add_server(self, server: Hashable, stages: list[int]) -> None:
+        # jittered priors break the herd: with exactly-equal priorities
+        # every trainer's first assignments pile onto one peer until EMAs
+        # diverge (real deployments never observe identical times).
+        prior = self.epsilon * self._rng.uniform(0.5, 1.5)
+        self.ema.setdefault(server, prior)
+        self._stages_of[server] = list(stages)
+        for s in stages:
+            self.queues[s].update(server, self.ema[server])
+
+    def remove_server(self, server: Hashable) -> None:
+        for s in self._stages_of.pop(server, []):
+            self.queues[s].remove(server)
+
+    def ban_server(self, server: Hashable) -> None:
+        for s in self._stages_of.get(server, []):
+            self.queues[s].update(server, INF)
+
+    def move_server(self, server: Hashable, new_stages: list[int]) -> None:
+        self.remove_server(server)
+        self.add_server(server, new_stages)
+
+    # ------------------------------------------------------------ routing
+    def choose_server(self, stage: int) -> Optional[Hashable]:
+        top = self.queues[stage].top()
+        if top is None:
+            return None
+        server, priority = top
+        self.queues[stage].update(server, priority + self.ema[server])
+        return server
+
+    def observe(self, server: Hashable, dt: float) -> None:
+        """EMA update after a completed request (Alg. 1 line 30)."""
+        prev = self.ema.get(server, self.epsilon)
+        self.ema[server] = self.gamma * dt + (1 - self.gamma) * prev
+
+    def refresh_from_dht(self, dht, stage_of_peer) -> None:
+        """Re-admit banned peers that re-announced (§3.2) and discover new
+        ones. ``stage_of_peer``: server -> stage from DHT records."""
+        for server, stage in stage_of_peer.items():
+            cur = self._stages_of.get(server)
+            if cur != [stage]:
+                self.move_server(server, [stage])

@@ -1,0 +1,3 @@
+from repro.data.synthetic import SyntheticLM, make_batch
+
+__all__ = ["SyntheticLM", "make_batch"]

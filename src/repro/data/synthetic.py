@@ -1,0 +1,66 @@
+"""Deterministic synthetic LM data.
+
+A learnable-but-nontrivial stream: order-2 Markov chain over a small state
+space embedded into the vocab, so tiny models visibly reduce loss within a
+few hundred steps (used by the convergence-parity tests, Fig. 4 analogue).
+Batches are a pure function of (seed, step) — any peer can regenerate any
+microbatch, which is exactly the property SWARM's fault tolerance relies on
+("the data loader state can be recomputed from the last known SGD step",
+App. A).  Host-sharding slices the batch deterministically by host index.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_states: int = 64          # markov states (mapped into vocab)
+    curriculum_steps: int = 0   # paper App. G: linear seq-len warmup
+
+    def _seq_len_at(self, step: int) -> int:
+        if self.curriculum_steps and step < self.curriculum_steps:
+            frac = (step + 1) / self.curriculum_steps
+            s = max(16, int(self.seq_len * frac))
+            return max(16, 1 << (s - 1).bit_length() >> 1)  # pow2 floor
+        return self.seq_len
+
+    def batch(self, step: int, host_index: int = 0,
+              host_count: int = 1) -> Tree:
+        assert self.global_batch % host_count == 0
+        b = self.global_batch // host_count
+        seq = self._seq_len_at(step)
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(self.seed), step),
+            host_index)
+        k1, k2 = jax.random.split(key)
+        n = min(self.n_states, self.vocab_size)
+        # order-2 markov: next = (a*prev + b*prev2 + noise) mod n
+        x0 = jax.random.randint(k1, (b, 2), 0, n)
+        noise = jax.random.randint(k2, (b, seq + 1), 0, 3)
+
+        def step_fn(carry, eps):
+            p1, p2 = carry
+            nxt = (5 * p1 + 3 * p2 + eps) % n
+            return (nxt, p1), nxt
+
+        _, toks = jax.lax.scan(step_fn, (x0[:, 0], x0[:, 1]),
+                               noise.swapaxes(0, 1))
+        toks = toks.swapaxes(0, 1).astype(jnp.int32)   # [b, seq+1]
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_batch(vocab_size: int, seq_len: int, batch: int, step: int = 0,
+               seed: int = 0) -> Tree:
+    return SyntheticLM(vocab_size, seq_len, batch, seed).batch(step)

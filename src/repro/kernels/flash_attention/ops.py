@@ -1,0 +1,5 @@
+"""jit'd public wrapper for the Pallas flash-attention forward."""
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention_fwd", "attention_ref"]

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: blockwise dynamic int8 quantization (Dettmers 2021).
+
+This is the compression hot spot of SWARM (§4.3): every pipeline-boundary
+tensor is quantized before hitting the wire and dequantized on arrival.
+
+TPU mapping: the flat tensor is viewed as [rows, block]; a grid step loads a
+[ROW_TILE, block] tile into VMEM, computes per-row absmax on the VPU, and
+writes int8 codes + f32 scales.  ``block`` is the quantization granularity
+(64, paper-faithful); ROW_TILE x block = 128 x 64 keeps the tile layout
+(8,128)-aligned for the VPU while staying well under VMEM limits
+(128*64*4B = 32 KiB in, 8 KiB + 0.5 KiB out).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 128
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                 # [ROW_TILE, block]
+    scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    q = jnp.round(x / jnp.maximum(scale, 1e-12) * 127.0)
+    q_ref[...] = jnp.clip(q, -127, 127).astype(jnp.int8)
+    s_ref[...] = scale
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref, *, dtype):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...] / 127.0).astype(dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(1, 2))
+def quantize(x: jax.Array, block: int = 64, interpret: bool = True):
+    """x: flat [n], n % block == 0 -> (int8 [n/block, block], f32 scales)."""
+    rows = x.shape[0] // block
+    xr = x.reshape(rows, block)
+    row_tile = min(ROW_TILE, rows)
+    assert rows % row_tile == 0, (rows, row_tile)
+    grid = (rows // row_tile,)
+    q, s = pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_tile, block), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((row_tile, block), lambda i: (i, 0)),
+                   pl.BlockSpec((row_tile, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((rows, block), jnp.int8),
+                   jax.ShapeDtypeStruct((rows, 1), jnp.float32)],
+        interpret=interpret,
+    )(xr)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def dequantize(q: jax.Array, s: jax.Array, dtype=jnp.float32,
+               interpret: bool = True):
+    rows, block = q.shape
+    row_tile = min(ROW_TILE, rows)
+    assert rows % row_tile == 0
+    out = pl.pallas_call(
+        functools.partial(_dequant_kernel, dtype=dtype),
+        grid=(rows // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, block), lambda i: (i, 0)),
+                  pl.BlockSpec((row_tile, 1), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((row_tile, block), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, block), dtype),
+        interpret=interpret,
+    )(q, s)
+    return out

@@ -1,0 +1,43 @@
+"""jit'd public wrappers: arbitrary-shape blockwise int8 round trip."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.quant8 import kernel as K
+from repro.kernels.quant8 import ref as R
+
+
+def quantize(x: jax.Array, block: int = 64, *, use_kernel: bool = True,
+             interpret: bool = True):
+    """Any-shape x -> (codes [nb, block] int8, scales [nb,1] f32, meta)."""
+    shape, dtype = x.shape, x.dtype
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % block
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    if use_kernel:
+        q, s = K.quantize(flat, block, interpret)
+    else:
+        q, s = R.quantize_ref(flat, block)
+    return q, s, (shape, dtype, pad)
+
+
+def dequantize(q, s, meta, *, use_kernel: bool = True,
+               interpret: bool = True):
+    shape, dtype, pad = meta
+    if use_kernel:
+        flat = K.dequantize(q, s, dtype, interpret).reshape(-1)
+    else:
+        flat = R.dequantize_ref(q, s, dtype).reshape(-1)
+    if pad:
+        flat = flat[:flat.shape[0] - pad]
+    return flat.reshape(shape)
+
+
+def roundtrip(x: jax.Array, block: int = 64, *, use_kernel: bool = True,
+              interpret: bool = True) -> jax.Array:
+    q, s, meta = quantize(x, block, use_kernel=use_kernel,
+                          interpret=interpret)
+    return dequantize(q, s, meta, use_kernel=use_kernel,
+                      interpret=interpret)

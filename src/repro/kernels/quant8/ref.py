@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the blockwise int8 quantization kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_ref(x: jax.Array, block: int = 64):
+    """x [n] (flat, n % block == 0) -> (codes int8 [n//block, block],
+    scales f32 [n//block, 1])."""
+    blocks = x.reshape(-1, block).astype(jnp.float32)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True)
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12) * 127.0),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_ref(q: jax.Array, scale: jax.Array,
+                   dtype=jnp.float32) -> jax.Array:
+    return (q.astype(jnp.float32) * scale / 127.0).astype(dtype)
+
+
+def roundtrip_ref(x: jax.Array, block: int = 64) -> jax.Array:
+    q, s = quantize_ref(x, block)
+    return dequantize_ref(q, s, x.dtype).reshape(x.shape)

@@ -1,0 +1,46 @@
+"""Pallas TPU kernel: fused RMSNorm.
+
+One grid step normalizes a [ROW_TILE, d] tile: the f32 upcast, mean-square
+reduction, rsqrt and scale all stay in VMEM/VREGs — the unfused jnp version
+round-trips an f32 copy of the activation through HBM (2.5x the bytes).
+``d`` is the full model dim (128-aligned for every assigned arch).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 256
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)              # [ROW_TILE, d]
+    var = jnp.mean(x * x, axis=1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps)
+                  * s_ref[...].astype(jnp.float32)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnums=(2, 3))
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            interpret: bool = True) -> jax.Array:
+    """x [..., d] -> rmsnorm(x) * scale."""
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    xr = x.reshape(rows, d)
+    row_tile = min(ROW_TILE, rows)
+    while rows % row_tile:
+        row_tile //= 2
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows // row_tile,),
+        in_specs=[pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+                  pl.BlockSpec((1, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((row_tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(xr, scale.reshape(1, d))
+    return out.reshape(shape)

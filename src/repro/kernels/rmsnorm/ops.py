@@ -1,0 +1,4 @@
+from repro.kernels.rmsnorm.kernel import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+__all__ = ["rmsnorm", "rmsnorm_ref"]

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = (x32 ** 2).mean(-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)
+            * scale.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,166 @@
+"""Attention: chunked (flash-style) pure-jnp implementation + decode paths.
+
+The chunked implementation is the memory-safe reference used for CPU dry-runs
+and as the oracle for the Pallas kernel in ``repro/kernels/flash_attention``.
+Online-softmax over key chunks keeps the working set at
+``O(chunk_q * chunk_k)`` instead of ``O(S^2)``.
+
+Supports: GQA/MQA (kv-head broadcast), causal & bidirectional, sliding
+window, logit soft-capping, distinct qk/v head dims (for MLA), query offset
+(for chunked prefill / decode).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.probe import probe_enabled
+
+NEG_INF = -1e30
+
+
+def _mask_bias(qpos: jax.Array, kpos: jax.Array, *, causal: bool,
+               window: int, kv_len: Optional[jax.Array]) -> jax.Array:
+    """Additive bias [Sq, Sk] from position comparisons."""
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    if kv_len is not None:
+        ok &= kpos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def chunked_attention(
+    q: jax.Array,            # [B, Sq, H, Dq]
+    k: jax.Array,            # [B, Sk, KV, Dq]
+    v: jax.Array,            # [B, Sk, KV, Dv]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_k: int = 1024,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Flash-style attention, returns [B, Sq, H, Dv]."""
+    B, Sq, H, Dq = q.shape
+    _, Sk, KV, _ = k.shape
+    Dv = v.shape[-1]
+    assert H % KV == 0, (H, KV)
+    G = H // KV
+    scale = scale if scale is not None else Dq ** -0.5
+
+    if probe_enabled():           # collapse chunking for FLOP probing
+        chunk_q, chunk_k = Sq, Sk
+    cq = min(chunk_q, Sq)
+    ck = min(chunk_k, Sk)
+    # pad to multiples
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    pq, pk = nq * cq - Sq, nk * ck - Sk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+
+    # [nq, B, cq, KV, G, Dq]
+    qc = q.reshape(B, nq, cq, KV, G, Dq).transpose(1, 0, 2, 3, 4, 5)
+    kc = k.reshape(B, nk, ck, KV, Dq).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, ck, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    kv_valid = Sk  # mask out key padding
+
+    def q_chunk(qi_q):
+        qi, qblk = qi_q                       # qblk [B, cq, KV, G, Dq]
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_chunk(carry, ki_kv):
+            m, l, acc = carry
+            ki, kblk, vblk = ki_kv
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            if softcap > 0.0:
+                s = jnp.tanh(s / softcap) * softcap
+            bias = _mask_bias(qpos, kpos, causal=causal, window=window,
+                              kv_len=jnp.asarray(kv_valid))
+            s = s + bias[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_chunk, (m0, l0, a0), (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)     # [B, cq, KV, G, Dv]
+
+    outs = jax.lax.map(q_chunk, (jnp.arange(nq), qc))  # [nq, B, cq, KV, G, Dv]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * cq, H, Dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def decode_attention(
+    q: jax.Array,            # [B, 1, H, Dq]
+    k_cache: jax.Array,      # [B, S, KV, Dq]
+    v_cache: jax.Array,      # [B, S, KV, Dv]
+    pos: jax.Array,          # [] current position (number of valid cache slots)
+    *,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+) -> jax.Array:
+    """Single-token attention over a KV cache. Returns [B, 1, H, Dv]."""
+    B, _, H, Dq = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else Dq ** -0.5
+    qg = q.reshape(B, KV, G, Dq)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(S)
+    ok = kpos[None, :] <= pos  # attend to cache + current token
+    if window > 0:
+        ok &= kpos[None, :] > (pos - window)
+    s = jnp.where(ok[None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, H, v_cache.shape[-1]).astype(v_cache.dtype)
+
+
+def naive_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0, scale=None):
+    """O(S^2)-memory oracle used in tests only."""
+    B, Sq, H, Dq = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = scale if scale is not None else Dq ** -0.5
+    qg = q.reshape(B, Sq, KV, G, Dq)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    if softcap > 0.0:
+        s = jnp.tanh(s / softcap) * softcap
+    qpos = q_offset + jnp.arange(Sq)
+    bias = _mask_bias(qpos, jnp.arange(Sk), causal=causal, window=window,
+                      kv_len=None)
+    s = s + bias[None, None, None]
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, v.shape[-1]).astype(v.dtype)

@@ -1,0 +1,319 @@
+"""Block registry: one (specs, apply, decode, cache_specs) tuple per kind.
+
+Kinds:
+  attn      — self-attention + dense FFN            (dense LMs, VLM backbone)
+  moe       — self-attention + MoE FFN              (llama4-scout)
+  mla       — multi-head latent attention + FFN     (deepseek dense layer)
+  mla_moe   — MLA + MoE FFN                         (deepseek-v2)
+  mlstm     — xLSTM matrix-memory block
+  slstm     — xLSTM scalar-memory block
+  hymba     — parallel attention ∥ mamba heads + FFN (hymba-1.5b)
+  mamba     — pure selective-SSM block
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import layers as L
+from repro.models import mla as mla_lib
+from repro.models import ssm as ssm_lib
+
+Tree = Any
+
+
+def _residual_ffn(cfg, p, x):
+    return x + L.apply_ffn(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+
+
+# ---------------------------------------------------------------- attn
+def attn_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+
+
+def attn_apply(cfg, p, x, positions):
+    x = x + L.apply_attn(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                         positions)
+    return _residual_ffn(cfg, p, x), 0.0
+
+
+def attn_decode(cfg, p, x, cache, pos, positions):
+    h, cache = L.apply_attn_decode(
+        cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), cache, pos, positions)
+    x = x + h
+    return _residual_ffn(cfg, p, x), cache
+
+
+def attn_cache(cfg, batch, seq):
+    # ring buffer for sliding-window archs: never cache beyond the window
+    if cfg.sliding_window:
+        seq = min(seq, cfg.sliding_window)
+    return L.attn_cache_specs(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------- moe
+def moe_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "moe": L.moe_specs(cfg)}
+
+
+def moe_apply(cfg, p, x, positions):
+    x = x + L.apply_attn(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                         positions)
+    y, aux = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, aux
+
+
+def moe_decode(cfg, p, x, cache, pos, positions):
+    h, cache = L.apply_attn_decode(
+        cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x), cache, pos, positions)
+    x = x + h
+    y, _ = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, cache
+
+
+# ---------------------------------------------------------------- mla
+def mla_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "mla": mla_lib.mla_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+
+
+def mla_apply(cfg, p, x, positions):
+    x = x + mla_lib.apply_mla(cfg, p["mla"], L.apply_norm(cfg, p["ln1"], x),
+                              positions)
+    return _residual_ffn(cfg, p, x), 0.0
+
+
+def mla_decode(cfg, p, x, cache, pos, positions):
+    h, cache = mla_lib.apply_mla_decode(
+        cfg, p["mla"], L.apply_norm(cfg, p["ln1"], x), cache, pos, positions)
+    x = x + h
+    return _residual_ffn(cfg, p, x), cache
+
+
+def mla_cache(cfg, batch, seq):
+    return mla_lib.mla_cache_specs(cfg, batch, seq)
+
+
+# ---------------------------------------------------------------- mla_moe
+def mla_moe_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "mla": mla_lib.mla_specs(cfg),
+            "ln2": L.norm_specs(cfg), "moe": L.moe_specs(cfg)}
+
+
+def mla_moe_apply(cfg, p, x, positions):
+    x = x + mla_lib.apply_mla(cfg, p["mla"], L.apply_norm(cfg, p["ln1"], x),
+                              positions)
+    y, aux = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, aux
+
+
+def mla_moe_decode(cfg, p, x, cache, pos, positions):
+    h, cache = mla_lib.apply_mla_decode(
+        cfg, p["mla"], L.apply_norm(cfg, p["ln1"], x), cache, pos, positions)
+    x = x + h
+    y, _ = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, cache
+
+
+# ---------------------------------------------------------------- xLSTM
+def mlstm_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "cell": ssm_lib.mlstm_specs(cfg)}
+
+
+def mlstm_apply(cfg, p, x, positions):
+    del positions
+    return x + ssm_lib.apply_mlstm(cfg, p["cell"],
+                                   L.apply_norm(cfg, p["ln1"], x)), 0.0
+
+
+def mlstm_decode(cfg, p, x, cache, pos, positions):
+    del pos, positions
+    y, cache = ssm_lib.apply_mlstm_decode(
+        cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x), cache)
+    return x + y, cache
+
+
+def mlstm_cache(cfg, batch, seq):
+    del seq
+    return ssm_lib.mlstm_cache_specs(cfg, batch)
+
+
+def slstm_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "cell": ssm_lib.slstm_specs(cfg)}
+
+
+def slstm_apply(cfg, p, x, positions):
+    del positions
+    return x + ssm_lib.apply_slstm(cfg, p["cell"],
+                                   L.apply_norm(cfg, p["ln1"], x)), 0.0
+
+
+def slstm_decode(cfg, p, x, cache, pos, positions):
+    del pos, positions
+    y, cache = ssm_lib.apply_slstm_decode(
+        cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x), cache)
+    return x + y, cache
+
+
+def slstm_cache(cfg, batch, seq):
+    del seq
+    return ssm_lib.slstm_cache_specs(cfg, batch)
+
+
+# ---------------------------------------------------------------- hymba
+def hymba_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "mamba": ssm_lib.mamba_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+
+
+def hymba_apply(cfg, p, x, positions):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    ya = L.apply_attn(cfg, p["attn"], h, positions)
+    ys = ssm_lib.apply_mamba(cfg, p["mamba"], h)
+    x = x + 0.5 * (ya + ys)
+    return _residual_ffn(cfg, p, x), 0.0
+
+
+def hymba_decode(cfg, p, x, cache, pos, positions):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    ya, kv = L.apply_attn_decode(cfg, p["attn"], h, cache["kv"], pos,
+                                 positions)
+    ys, st = ssm_lib.apply_mamba_decode(cfg, p["mamba"], h, cache["ssm"])
+    x = x + 0.5 * (ya + ys)
+    return _residual_ffn(cfg, p, x), {"kv": kv, "ssm": st}
+
+
+def hymba_cache(cfg, batch, seq):
+    if cfg.sliding_window:
+        seq = min(seq, cfg.sliding_window)
+    return {"kv": L.attn_cache_specs(cfg, batch, seq),
+            "ssm": ssm_lib.mamba_cache_specs(cfg, batch)}
+
+
+# ---------------------------------------------------------------- mamba
+def mamba_specs(cfg):
+    return {"ln1": L.norm_specs(cfg), "cell": ssm_lib.mamba_specs(cfg)}
+
+
+def mamba_apply(cfg, p, x, positions):
+    del positions
+    return x + ssm_lib.apply_mamba(cfg, p["cell"],
+                                   L.apply_norm(cfg, p["ln1"], x)), 0.0
+
+
+def mamba_decode(cfg, p, x, cache, pos, positions):
+    del pos, positions
+    y, cache = ssm_lib.apply_mamba_decode(
+        cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x), cache)
+    return x + y, cache
+
+
+def mamba_cache(cfg, batch, seq):
+    del seq
+    return ssm_lib.mamba_cache_specs(cfg, batch)
+
+
+# ---------------------------------------------------------------- prefill
+# Each prefill runs the full-sequence path AND emits the decode cache so a
+# serving stack can hand off prefill -> decode (SWA caches land in ring
+# layout via L.ring_place).
+def _pad_kv(cfg, k, v, cache_len):
+    if cfg.sliding_window:
+        cache_len = min(cache_len, cfg.sliding_window)
+    return {"k": L.ring_place(k.astype(cfg.compute_jdtype), cache_len),
+            "v": L.ring_place(v.astype(cfg.compute_jdtype), cache_len)}
+
+
+def _attn_kv_prefill(cfg, p, x, positions, cache_len):
+    y, (k, v) = L.apply_attn(cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+                             positions, return_kv=True)
+    return y, _pad_kv(cfg, k, v, cache_len)
+
+
+def attn_prefill(cfg, p, x, positions, cache_len):
+    y, cache = _attn_kv_prefill(cfg, p, x, positions, cache_len)
+    x = x + y
+    return _residual_ffn(cfg, p, x), 0.0, cache
+
+
+def moe_prefill(cfg, p, x, positions, cache_len):
+    y, cache = _attn_kv_prefill(cfg, p, x, positions, cache_len)
+    x = x + y
+    y, aux = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, aux, cache
+
+
+def _mla_prefill_inner(cfg, p, x, positions, cache_len):
+    y, (c_kv, k_rope) = mla_lib.apply_mla(
+        cfg, p["mla"], L.apply_norm(cfg, p["ln1"], x), positions,
+        return_cache=True)
+    cache = {"c_kv": L.ring_place(c_kv.astype(cfg.compute_jdtype), cache_len),
+             "k_rope": L.ring_place(k_rope.astype(cfg.compute_jdtype),
+                                    cache_len)}
+    return y, cache
+
+
+def mla_prefill(cfg, p, x, positions, cache_len):
+    y, cache = _mla_prefill_inner(cfg, p, x, positions, cache_len)
+    x = x + y
+    return _residual_ffn(cfg, p, x), 0.0, cache
+
+
+def mla_moe_prefill(cfg, p, x, positions, cache_len):
+    y, cache = _mla_prefill_inner(cfg, p, x, positions, cache_len)
+    x = x + y
+    y, aux = L.apply_moe(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    return x + y, aux, cache
+
+
+def mlstm_prefill(cfg, p, x, positions, cache_len):
+    del positions, cache_len
+    y, st = ssm_lib.apply_mlstm(cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x),
+                                return_state=True)
+    return x + y, 0.0, st
+
+
+def slstm_prefill(cfg, p, x, positions, cache_len):
+    del positions, cache_len
+    y, st = ssm_lib.apply_slstm(cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x),
+                                return_state=True)
+    return x + y, 0.0, st
+
+
+def hymba_prefill(cfg, p, x, positions, cache_len):
+    h = L.apply_norm(cfg, p["ln1"], x)
+    ya, (k, v) = L.apply_attn(cfg, p["attn"], h, positions, return_kv=True)
+    ys, st = ssm_lib.apply_mamba(cfg, p["mamba"], h, return_state=True)
+    x = x + 0.5 * (ya + ys)
+    cache = {"kv": _pad_kv(cfg, k, v, cache_len), "ssm": st}
+    return _residual_ffn(cfg, p, x), 0.0, cache
+
+
+def mamba_prefill(cfg, p, x, positions, cache_len):
+    del positions, cache_len
+    y, st = ssm_lib.apply_mamba(cfg, p["cell"], L.apply_norm(cfg, p["ln1"], x),
+                                return_state=True)
+    return x + y, 0.0, st
+
+
+REGISTRY = {
+    "attn": (attn_specs, attn_apply, attn_decode, attn_cache, attn_prefill),
+    "moe": (moe_specs, moe_apply, moe_decode, attn_cache, moe_prefill),
+    "mla": (mla_specs, mla_apply, mla_decode, mla_cache, mla_prefill),
+    "mla_moe": (mla_moe_specs, mla_moe_apply, mla_moe_decode, mla_cache,
+                mla_moe_prefill),
+    "mlstm": (mlstm_specs, mlstm_apply, mlstm_decode, mlstm_cache,
+              mlstm_prefill),
+    "slstm": (slstm_specs, slstm_apply, slstm_decode, slstm_cache,
+              slstm_prefill),
+    "hymba": (hymba_specs, hymba_apply, hymba_decode, hymba_cache,
+              hymba_prefill),
+    "mamba": (mamba_specs, mamba_apply, mamba_decode, mamba_cache,
+              mamba_prefill),
+}

@@ -1,0 +1,198 @@
+"""Flash attention with a custom VJP (pure jnp; the memory-correct path).
+
+Why custom VJP: autodiff through the online-softmax scan saves per-chunk
+residuals — the *full* S^2 score tensor materializes in the backward pass,
+defeating the point of chunking.  The FlashAttention-2 backward recomputes
+each (q-chunk x kv-chunk) tile from (q, k, v, o, lse):
+
+    Dsum_i = rowsum(do_i * o_i)
+    p_ij  = exp(q_i k_j^T * scale + bias - lse_i)
+    dv_j += p_ij^T do_i
+    ds_ij = p_ij * (do_i v_j^T - Dsum_i) * scale
+    dq_i += ds_ij k_j ;  dk_j += ds_ij^T q_i
+
+so the working set stays O(chunk_q x chunk_k) in both directions.  This is
+also the oracle for the Pallas TPU kernel (repro/kernels/flash_attention).
+
+Supports GQA broadcast, causal, sliding window, q_offset, distinct qk/v
+head dims.  (Soft-capping falls back to the autodiff path — no assigned
+arch uses it.)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _bias(qpos, kpos, causal, window, kv_len):
+    ok = jnp.ones((qpos.shape[0], kpos.shape[0]), bool)
+    if causal:
+        ok &= qpos[:, None] >= kpos[None, :]
+    if window > 0:
+        ok &= (qpos[:, None] - kpos[None, :]) < window
+    if kv_len is not None:
+        ok &= kpos[None, :] < kv_len
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _pad_seq(x, mult):
+    S = x.shape[1]
+    pad = (-S) % mult
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)) + ((0, 0),) * (x.ndim - 2))
+    return x
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash(q, k, v, causal, window, q_offset, cq, ck, scale):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck,
+                             scale)
+    return out
+
+
+def _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck, scale):
+    """Returns (out [B,Sq,H,Dv], lse [B,KV,G,Sq])."""
+    B, Sq, H, Dq = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+    qp = _pad_seq(q, cq)
+    kp, vp = _pad_seq(k, ck), _pad_seq(v, ck)
+    qc = qp.reshape(B, nq, cq, KV, G, Dq).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(B, nk, ck, KV, Dq).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, ck, KV, Dv).transpose(1, 0, 2, 3, 4)
+
+    def q_chunk(carry, qi_q):
+        qi, qblk = qi_q
+        qpos = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_chunk(inner, ki_kv):
+            m, l, acc = inner
+            ki, kblk, vblk = ki_kv
+            kpos = ki * ck + jnp.arange(ck)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _bias(qpos, kpos, causal, window,
+                          jnp.asarray(Sk))[None, None, None]
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bckd->bkgqd", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, KV, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, KV, G, cq, Dv), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_chunk, (m0, l0, a0),
+                                      (jnp.arange(nk), kc, vc))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return carry, (out.transpose(0, 3, 1, 2, 4), lse)
+
+    _, (outs, lses) = jax.lax.scan(q_chunk, None, (jnp.arange(nq), qc))
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * cq, H, Dv)
+    lse = lses.transpose(1, 2, 3, 0, 4).reshape(B, KV, G, nq * cq)
+    return out[:, :Sq].astype(v.dtype), lse[..., :Sq]
+
+
+def _flash_fwd(q, k, v, causal, window, q_offset, cq, ck, scale):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, q_offset, cq, ck,
+                               scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, window, q_offset, cq, ck, scale, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, Dq = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Dv = v.shape[-1]
+    G = H // KV
+    nq, nk = -(-Sq // cq), -(-Sk // ck)
+
+    qp = _pad_seq(q, cq)
+    kp, vp = _pad_seq(k, ck), _pad_seq(v, ck)
+    dop = _pad_seq(do, cq)
+    outp = _pad_seq(out, cq)
+    qc = qp.reshape(B, nq, cq, KV, G, Dq).transpose(1, 0, 2, 3, 4, 5)
+    kc = kp.reshape(B, nk, ck, KV, Dq).transpose(1, 0, 2, 3, 4)
+    vc = vp.reshape(B, nk, ck, KV, Dv).transpose(1, 0, 2, 3, 4)
+    doc = dop.reshape(B, nq, cq, KV, G, Dv).transpose(1, 0, 2, 3, 4, 5)
+    # Dsum_i = rowsum(do * o): [nq, B, KV, G, cq]
+    dsum = jnp.einsum("bshd,bshd->bsh", dop.astype(jnp.float32),
+                      outp.astype(jnp.float32))
+    dsum = dsum.reshape(B, nq, cq, KV, G).transpose(1, 0, 3, 4, 2)
+    lsep = jnp.pad(lse, ((0, 0),) * 3 + ((0, nq * cq - Sq),))
+    lsec = lsep.reshape(B, KV, G, nq, cq).transpose(3, 0, 1, 2, 4)
+
+    def kv_chunk(dq_acc, ki_kv):
+        ki, kblk, vblk = ki_kv
+        kpos = ki * ck + jnp.arange(ck)
+
+        def q_chunk(inner, args):
+            dk, dv = inner
+            qi, qblk, doblk, ds_i, lse_i = args
+            qpos = q_offset + qi * cq + jnp.arange(cq)
+            s = jnp.einsum("bqkgd,bckd->bkgqc", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            s = s + _bias(qpos, kpos, causal, window,
+                          jnp.asarray(Sk))[None, None, None]
+            p = jnp.exp(s - lse_i[..., None])           # [B,KV,G,cq,ck]
+            dv = dv + jnp.einsum("bkgqc,bqkgd->bckd",
+                                 p, doblk.astype(jnp.float32))
+            dp = jnp.einsum("bqkgd,bckd->bkgqc",
+                            doblk.astype(jnp.float32),
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - ds_i[..., None]) * scale
+            dk = dk + jnp.einsum("bkgqc,bqkgd->bckd", ds,
+                                 qblk.astype(jnp.float32))
+            dq_c = jnp.einsum("bkgqc,bckd->bqkgd", ds,
+                              kblk.astype(jnp.float32))
+            return (dk, dv), dq_c
+
+        dk0 = jnp.zeros((B, ck, KV, Dq), jnp.float32)
+        dv0 = jnp.zeros((B, ck, KV, Dv), jnp.float32)
+        (dk, dv), dq_cs = jax.lax.scan(
+            q_chunk, (dk0, dv0),
+            (jnp.arange(nq), qc, doc, dsum, lsec))
+        dq_acc = dq_acc + dq_cs
+        return dq_acc, (dk, dv)
+
+    dq0 = jnp.zeros((nq, B, cq, KV, G, Dq), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_chunk, dq0,
+                                  (jnp.arange(nk), kc, vc))
+    dq = dq.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * cq, KV * G, Dq)
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, nk * ck, KV, Dq)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, nk * ck, KV, Dv)
+    return (dq[:, :Sq].astype(q.dtype), dk[:, :Sk].astype(k.dtype),
+            dv[:, :Sk].astype(v.dtype))
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    q_offset=0, chunk_q=512, chunk_k=1024,
+                    scale: Optional[float] = None):
+    """Drop-in for chunked_attention with a memory-correct backward."""
+    from repro.models.probe import probe_enabled
+    B, Sq, H, Dq = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else Dq ** -0.5
+    if probe_enabled():
+        chunk_q, chunk_k = Sq, Sk
+    cq, ck = min(chunk_q, Sq), min(chunk_k, Sk)
+    if softcap > 0.0:
+        from repro.models.attention import chunked_attention
+        return chunked_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, q_offset=q_offset,
+                                 chunk_q=cq, chunk_k=ck, scale=scale)
+    return _flash(q, k, v, causal, window, q_offset, cq, ck, scale)

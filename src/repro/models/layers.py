@@ -1,0 +1,247 @@
+"""Norms, FFNs, dense attention projections, and MoE with scatter dispatch."""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models import attention as attn_lib
+from repro.models import flash as flash_lib
+from repro.models import rope as rope_lib
+
+Tree = Any
+
+
+# ---------------------------------------------------------------- norms
+def norm_specs(cfg: ArchConfig, d: Optional[int] = None) -> Tree:
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": ParamSpec((d,), cfg.param_jdtype, "ones", ("embed",)),
+                "bias": ParamSpec((d,), cfg.param_jdtype, "zeros", ("embed",))}
+    return {"scale": ParamSpec((d,), cfg.param_jdtype, "ones", ("embed",))}
+
+
+def apply_norm(cfg: ArchConfig, p: Tree, x: jax.Array) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = x.mean(-1, keepdims=True)
+        var = ((x - mu) ** 2).mean(-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(dt)
+    var = (x ** 2).mean(-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + 1e-6)
+    # gemma-style (1 + scale) keeps init at identity; standard rmsnorm when
+    # scale is initialised to ones.  We use plain scale*x with ones-init.
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- FFN
+def ffn_specs(cfg: ArchConfig, d_ff: Optional[int] = None) -> Tree:
+    d, f, pd = cfg.d_model, d_ff or cfg.d_ff, cfg.param_jdtype
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "wi_gate": ParamSpec((d, f), pd, axes=("embed", "mlp")),
+            "wi_up": ParamSpec((d, f), pd, axes=("embed", "mlp")),
+            "wo": ParamSpec((f, d), pd, axes=("mlp", "embed")),
+        }
+    return {
+        "wi": ParamSpec((d, f), pd, axes=("embed", "mlp")),
+        "wo": ParamSpec((f, d), pd, axes=("mlp", "embed")),
+    }
+
+
+def apply_ffn(cfg: ArchConfig, p: Tree, x: jax.Array) -> jax.Array:
+    cd = x.dtype
+    if cfg.act in ("swiglu", "geglu"):
+        g = x @ p["wi_gate"].astype(cd)
+        u = x @ p["wi_up"].astype(cd)
+        act = jax.nn.silu(g) if cfg.act == "swiglu" else jax.nn.gelu(g)
+        return (act * u) @ p["wo"].astype(cd)
+    h = jax.nn.gelu(x @ p["wi"].astype(cd))
+    return h @ p["wo"].astype(cd)
+
+
+# ---------------------------------------------------------------- attention
+def attn_specs(cfg: ArchConfig) -> Tree:
+    d, H, KV, hd, pd = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+                        cfg.param_jdtype)
+    s = {
+        "wq": ParamSpec((d, H, hd), pd, axes=("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, KV, hd), pd, axes=("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, KV, hd), pd, axes=("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), pd, axes=("heads", "head_dim", "embed")),
+    }
+    if cfg.qkv_bias:
+        s["bq"] = ParamSpec((H, hd), pd, "zeros", ("heads", "head_dim"))
+        s["bk"] = ParamSpec((KV, hd), pd, "zeros", ("kv_heads", "head_dim"))
+        s["bv"] = ParamSpec((KV, hd), pd, "zeros", ("kv_heads", "head_dim"))
+    return s
+
+
+def _project_qkv(cfg: ArchConfig, p: Tree, x: jax.Array):
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    return q, k, v
+
+
+def _pos_embed(cfg: ArchConfig, q, k, positions):
+    if cfg.rope == "rope":
+        q = rope_lib.apply_rope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = rope_lib.apply_mrope(q, positions, cfg.rope_theta)
+        k = rope_lib.apply_mrope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def apply_attn(cfg: ArchConfig, p: Tree, x: jax.Array, positions: jax.Array,
+               *, causal: Optional[bool] = None, window: Optional[int] = None,
+               chunk_q: int = 512, chunk_k: int = 1024,
+               return_kv: bool = False):
+    """Full-sequence (training / prefill) attention. x [B, S, d]."""
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _pos_embed(cfg, q, k, positions)
+    out = flash_lib.flash_attention(
+        q, k, v,
+        causal=cfg.causal if causal is None else causal,
+        window=cfg.sliding_window if window is None else window,
+        softcap=cfg.attn_logit_softcap,
+        chunk_q=chunk_q, chunk_k=chunk_k)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def ring_place(x_seq: jax.Array, cache_len: int) -> jax.Array:
+    """Place the last ``cache_len`` sequence entries of ``x_seq`` [B,S,...]
+    into ring-buffer slots ``t % cache_len`` (prefill -> decode handoff)."""
+    S = x_seq.shape[1]
+    W = min(cache_len, S)
+    tail = x_seq[:, S - W:]
+    slots = jnp.arange(S - W, S) % cache_len
+    out = jnp.zeros((x_seq.shape[0], cache_len) + x_seq.shape[2:],
+                    x_seq.dtype)
+    return out.at[:, slots].set(tail)
+
+
+def apply_attn_decode(cfg: ArchConfig, p: Tree, x: jax.Array, cache: Tree,
+                      pos: jax.Array, positions: jax.Array,
+                      *, window: Optional[int] = None):
+    """One-token decode. x [B, 1, d]; cache {'k','v'} [B, S_c, KV, hd].
+
+    Sliding-window archs use a **ring buffer** cache of exactly ``window``
+    slots: entry ``pos`` lands in slot ``pos % window``, overwriting the
+    token that just fell out of the window.  RoPE is applied at absolute
+    positions before insertion, and softmax is permutation-invariant over
+    keys, so scores are unaffected by the wrap.  This is what keeps the
+    ``long_500k`` KV footprint at O(window) instead of O(500k) (DESIGN §5).
+    """
+    window = cfg.sliding_window if window is None else window
+    S_c = cache["k"].shape[1]
+    ring = window > 0 and S_c == window
+    slot = jnp.remainder(pos, S_c) if ring else pos
+    q, k, v = _project_qkv(cfg, p, x)
+    q, k = _pos_embed(cfg, q, k, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    out = attn_lib.decode_attention(
+        q, k_cache, v_cache, pos,
+        window=0 if ring else window,   # ring geometry enforces the window
+        softcap=cfg.attn_logit_softcap)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def attn_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    hd = cfg.hd
+    dt = cfg.compute_jdtype
+    return {
+        "k": ParamSpec((batch, seq, cfg.n_kv_heads, hd), dt, "zeros",
+                       ("batch", "kv_seq", "kv_heads", "head_dim")),
+        "v": ParamSpec((batch, seq, cfg.n_kv_heads, hd), dt, "zeros",
+                       ("batch", "kv_seq", "kv_heads", "head_dim")),
+    }
+
+
+# ---------------------------------------------------------------- MoE
+def moe_specs(cfg: ArchConfig) -> Tree:
+    m = cfg.moe
+    d, f, pd = cfg.d_model, m.d_ff_expert, cfg.param_jdtype
+    s = {
+        "router": ParamSpec((d, m.num_experts), jnp.float32,
+                            axes=("embed", "experts")),
+        "wi_gate": ParamSpec((m.num_experts, d, f), pd,
+                             axes=("experts", "embed", "expert_mlp")),
+        "wi_up": ParamSpec((m.num_experts, d, f), pd,
+                           axes=("experts", "embed", "expert_mlp")),
+        "wo": ParamSpec((m.num_experts, f, d), pd,
+                        axes=("experts", "expert_mlp", "embed")),
+    }
+    if m.num_shared:
+        s["shared"] = ffn_specs(cfg, d_ff=m.num_shared * m.d_ff_expert)
+    return s
+
+
+def apply_moe(cfg: ArchConfig, p: Tree, x: jax.Array):
+    """Capacity-bounded top-k MoE with scatter dispatch / gather combine.
+
+    Dispatch is expressed as scatter-add into per-expert buffers rather than
+    the GShard one-hot einsum: the einsum form costs ``O(T^2 * k * d)`` FLOPs
+    (quadratic in tokens) which would dominate every roofline; scatter/gather
+    moves the same bytes at zero matmul FLOPs. x: [B, S, d].
+    Returns (y, aux_loss).
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    E, k = m.num_experts, m.top_k
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, sel = jax.lax.top_k(probs, k)                    # [T, k]
+    weights = weights / jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balance aux loss (Switch): E * sum_e f_e * P_e
+    dispatch_frac = jnp.zeros(E).at[sel.reshape(-1)].add(1.0) / (T * k)
+    aux = E * jnp.sum(dispatch_frac * probs.mean(0))
+
+    C = max(1, int(m.capacity_factor * T * k / E))
+    e_flat = sel.reshape(T * k)                               # [T*k]
+    onehot = jax.nn.one_hot(e_flat, E, dtype=jnp.int32)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # [T*k]
+    keep = (pos_in_e >= 0) & (pos_in_e < C)
+    slot = jnp.clip(pos_in_e, 0, C - 1)
+
+    xk = jnp.repeat(xt, k, axis=0)                            # [T*k, d]
+    buf = jnp.zeros((E, C, d), xt.dtype).at[e_flat, slot].add(
+        xk * keep[:, None].astype(xt.dtype))
+
+    cd = xt.dtype
+    g = jnp.einsum("ecd,edf->ecf", buf, p["wi_gate"].astype(cd))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["wi_up"].astype(cd))
+    h = jax.nn.silu(g) * u
+    eo = jnp.einsum("ecf,efd->ecd", h, p["wo"].astype(cd))    # [E, C, d]
+
+    gathered = eo[e_flat, slot]                               # [T*k, d]
+    gathered = gathered * (weights.reshape(T * k, 1).astype(cd)
+                           * keep[:, None].astype(cd))
+    y = gathered.reshape(T, k, d).sum(1)
+
+    if m.num_shared:
+        y = y + apply_ffn(cfg, p["shared"], xt)
+    return y.reshape(B, S, d), aux * m.aux_loss_coef

@@ -1,0 +1,135 @@
+"""DeepSeek-V2 Multi-head Latent Attention (MLA).
+
+Training path: expand the compressed latent into per-head K/V and run
+flash-style attention with distinct qk/v head dims.
+
+Decode path: **absorbed** form — W_uk is folded into the query and W_uv into
+the output so attention runs directly against the cached latent
+``c_kv [B, S, r]`` + shared rope key ``k_rope [B, S, dr]``.  The cache is
+``r + dr`` floats/token instead of ``2 * H * hd`` (576 vs 32768 for V2) —
+this is the production memory win of MLA.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models import attention as attn_lib
+from repro.models import flash as flash_lib
+from repro.models import rope as rope_lib
+
+Tree = Any
+
+
+def mla_specs(cfg: ArchConfig) -> Tree:
+    a = cfg.mla
+    d, H, pd = cfg.d_model, cfg.n_heads, cfg.param_jdtype
+    qd = a.qk_nope_dim + a.qk_rope_dim
+    s: Tree = {
+        "w_dkv": ParamSpec((d, a.kv_lora_rank), pd, axes=("embed", "kv_lora")),
+        "w_krope": ParamSpec((d, a.qk_rope_dim), pd, axes=("embed", "head_dim")),
+        "w_uk": ParamSpec((a.kv_lora_rank, H, a.qk_nope_dim), pd,
+                          axes=("kv_lora", "heads", "head_dim")),
+        "w_uv": ParamSpec((a.kv_lora_rank, H, a.v_head_dim), pd,
+                          axes=("kv_lora", "heads", "head_dim")),
+        "wo": ParamSpec((H, a.v_head_dim, d), pd,
+                        axes=("heads", "head_dim", "embed")),
+    }
+    if a.q_lora_rank:
+        s["w_dq"] = ParamSpec((d, a.q_lora_rank), pd, axes=("embed", "q_lora"))
+        s["w_uq"] = ParamSpec((a.q_lora_rank, H, qd), pd,
+                              axes=("q_lora", "heads", "head_dim"))
+    else:
+        s["wq"] = ParamSpec((d, H, qd), pd, axes=("embed", "heads", "head_dim"))
+    return s
+
+
+def _queries(cfg: ArchConfig, p: Tree, x: jax.Array):
+    a, cd = cfg.mla, x.dtype
+    if a.q_lora_rank:
+        cq = x @ p["w_dq"].astype(cd)
+        q = jnp.einsum("bsr,rhk->bshk", cq, p["w_uq"].astype(cd))
+    else:
+        q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    return q[..., :a.qk_nope_dim], q[..., a.qk_nope_dim:]   # nope, rope
+
+
+def apply_mla(cfg: ArchConfig, p: Tree, x: jax.Array, positions: jax.Array,
+              *, chunk_q: int = 512, chunk_k: int = 1024,
+              return_cache: bool = False):
+    """Training / prefill. x [B, S, d]."""
+    a, cd = cfg.mla, x.dtype
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope = _queries(cfg, p, x)
+    q_rope = rope_lib.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = x @ p["w_dkv"].astype(cd)                         # [B, S, r]
+    k_rope = rope_lib.apply_rope(
+        (x @ p["w_krope"].astype(cd))[:, :, None, :], positions,
+        cfg.rope_theta)                                      # [B, S, 1, dr]
+    k_nope = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,rhk->bshk", c_kv, p["w_uv"].astype(cd))
+
+    # concat rope dims so a single flash pass computes both inner products
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (B, S, H, a.qk_rope_dim))], axis=-1)
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+    out = flash_lib.flash_attention(
+        q, k, v, causal=cfg.causal, softcap=cfg.attn_logit_softcap,
+        chunk_q=chunk_q, chunk_k=chunk_k, scale=scale)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+    if return_cache:
+        return y, (c_kv, k_rope[:, :, 0, :])
+    return y
+
+
+def mla_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    a, dt = cfg.mla, cfg.compute_jdtype
+    return {
+        "c_kv": ParamSpec((batch, seq, a.kv_lora_rank), dt, "zeros",
+                          ("batch", "kv_seq", "kv_lora")),
+        "k_rope": ParamSpec((batch, seq, a.qk_rope_dim), dt, "zeros",
+                            ("batch", "kv_seq", "head_dim")),
+    }
+
+
+def apply_mla_decode(cfg: ArchConfig, p: Tree, x: jax.Array, cache: Tree,
+                     pos: jax.Array, positions: jax.Array):
+    """Absorbed decode. x [B, 1, d]. cache: c_kv [B,S,r], k_rope [B,S,dr]."""
+    a, cd = cfg.mla, x.dtype
+    B = x.shape[0]
+    q_nope, q_rope = _queries(cfg, p, x)                     # [B,1,H,*]
+    q_rope = rope_lib.apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_new = x @ p["w_dkv"].astype(cd)                        # [B, 1, r]
+    kr_new = rope_lib.apply_rope(
+        (x @ p["w_krope"].astype(cd))[:, :, None, :], positions,
+        cfg.rope_theta)[:, :, 0, :]                          # [B, 1, dr]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), pos, axis=1)
+
+    # absorb W_uk into q: q_abs [B, H, r]
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_uk"].astype(cd))
+    s_nope = jnp.einsum("bhr,bsr->bhs", q_abs, c_kv,
+                        preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bhk,bsk->bhs", q_rope[:, 0], k_rope,
+                        preferred_element_type=jnp.float32)
+    scale = (a.qk_nope_dim + a.qk_rope_dim) ** -0.5
+    s = (s_nope + s_rope) * scale
+    S = c_kv.shape[1]
+    ok = jnp.arange(S)[None, :] <= pos
+    s = jnp.where(ok[:, None], s, attn_lib.NEG_INF)
+    pattn = jax.nn.softmax(s, axis=-1)
+    # attend in latent space, then absorb W_uv
+    out_c = jnp.einsum("bhs,bsr->bhr", pattn.astype(cd), c_kv)
+    out = jnp.einsum("bhr,rhk->bhk", out_c, p["w_uv"].astype(cd))
+    y = jnp.einsum("bhk,hkd->bd", out, p["wo"].astype(cd))[:, None]
+    return y, {"c_kv": c_kv, "k_rope": k_rope}

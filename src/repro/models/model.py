@@ -1,0 +1,262 @@
+"""Unified decoder-LM assembly: embed -> segmented block scan -> head.
+
+Layer patterns are grouped into runs of identical block kinds; each run is a
+single ``lax.scan`` over stacked parameters (fast compile, small HLO — the
+dry-run relies on this).  ALBERT-style layer sharing (the paper's 1B model,
+§4.3) stores ``share_groups`` parameter groups and re-applies each group
+``n_layers / share_groups`` times.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models import layers as L
+from repro.models import rope as rope_lib
+from repro.models.blocks import REGISTRY
+from repro.dist.constrain import constrain
+
+Tree = Any
+
+
+def segments(pattern: tuple[str, ...]) -> list[tuple[str, int]]:
+    runs: list[tuple[str, int]] = []
+    for k in pattern:
+        if runs and runs[-1][0] == k:
+            runs[-1] = (k, runs[-1][1] + 1)
+        else:
+            runs.append((k, 1))
+    return runs
+
+
+def stack_specs(tree: Tree, n: int) -> Tree:
+    def s(p: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + p.shape, p.dtype, p.init,
+                         ("layers",) + p.axes, p.scale)
+    return jax.tree.map(s, tree, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def lm_specs(cfg: ArchConfig) -> Tree:
+    d, V, pd = cfg.d_model, cfg.vocab_size, cfg.param_jdtype
+    specs: Tree = {
+        "embed": ParamSpec((V, d), pd, "embed", ("vocab", "embed")),
+        "final_norm": L.norm_specs(cfg),
+    }
+    if cfg.share_groups:
+        per = cfg.n_layers // cfg.share_groups
+        assert per * cfg.share_groups == cfg.n_layers
+        kind = cfg.block_kinds[0]
+        specs["blocks"] = [stack_specs(REGISTRY[kind][0](cfg),
+                                       cfg.share_groups)]
+    else:
+        specs["blocks"] = [stack_specs(REGISTRY[k][0](cfg), n)
+                           for k, n in segments(cfg.block_kinds)]
+    if not cfg.tie_embeddings:
+        specs["head"] = ParamSpec((d, V), pd, "normal", ("embed", "vocab"))
+    return specs
+
+
+def _embed(cfg: ArchConfig, params: Tree, tokens: jax.Array) -> jax.Array:
+    x = params["embed"][tokens].astype(cfg.compute_jdtype)
+    if cfg.scale_embed:
+        x = x * (cfg.d_model ** 0.5)
+    if x.ndim == 3:
+        x = constrain(x, ("pod", "data"), None, None)
+    return x
+
+
+def _head(cfg: ArchConfig, params: Tree, x: jax.Array) -> jax.Array:
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w = (params["embed"].T if cfg.tie_embeddings else params["head"])
+    logits = x @ w.astype(x.dtype)
+    if logits.ndim == 3:
+        logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits
+
+
+def default_positions(cfg: ArchConfig, batch: int, seq: int,
+                      offset=0) -> jax.Array:
+    if cfg.rope == "mrope":
+        return rope_lib.default_mrope_positions(batch, seq, offset)
+    return jnp.arange(seq) + offset
+
+
+def _sqrt_divisor(n: int) -> int:
+    n1 = max(1, int(n ** 0.5))
+    while n % n1:
+        n1 -= 1
+    return n1
+
+
+def remat_scan(body, carry, xs, mode: str):
+    """Layer scan with selectable checkpointing structure.
+
+    ``block``  — paper-faithful per-block remat: the scan saves one carry
+                 per layer (O(L) boundary activations).
+    ``2level`` — sqrt(L) nesting: an outer checkpointed scan over ~sqrt(L)
+                 groups saves only group-boundary carries; inner carries
+                 are rematerialized per group in backward.  O(2*sqrt(L))
+                 live carries — the dominant memory lever for deep stacks
+                 (EXPERIMENTS.md §Perf).
+    """
+    n = jax.tree.leaves(xs)[0].shape[0]
+    if mode != "2level" or n < 4:
+        return jax.lax.scan(body, carry, xs)
+    n1 = _sqrt_divisor(n)
+    xs2 = jax.tree.map(lambda a: a.reshape(n1, n // n1, *a.shape[1:]), xs)
+
+    def outer(c, xg):
+        c2, _ = jax.lax.scan(body, c, xg)
+        return c2, None
+
+    carry, _ = jax.lax.scan(jax.checkpoint(outer), carry, xs2)
+    return carry, None
+
+
+def lm_apply(cfg: ArchConfig, params: Tree, tokens: jax.Array,
+             positions: Optional[jax.Array] = None,
+             *, remat: bool | str = True) -> tuple[jax.Array, jax.Array]:
+    """Training / prefill forward. tokens [B, S] -> (logits [B,S,V], aux)."""
+    B, S = tokens.shape
+    mode = remat if isinstance(remat, str) else ("block" if remat else "none")
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x = _embed(cfg, params, tokens)
+    aux = jnp.zeros((), jnp.float32)
+
+    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+            else segments(cfg.block_kinds))
+    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
+
+    for (kind, _), seg_params in zip(runs, params["blocks"]):
+        apply_fn = REGISTRY[kind][1]
+
+        def body(carry, p_l, _apply=apply_fn):
+            x, aux = carry
+            y, a = _apply(cfg, p_l, x, positions)
+            return (y, aux + a), None
+
+        if mode != "none":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.share_groups:
+            def group_body(carry, p_g, _body=body):
+                for _ in range(reps):
+                    carry, _ = _body(carry, p_g)
+                return carry, None
+            (x, aux), _ = jax.lax.scan(group_body, (x, aux), seg_params)
+        else:
+            (x, aux), _ = remat_scan(body, (x, aux), seg_params, mode)
+
+    return _head(cfg, params, x), aux
+
+
+def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
+               positions: Optional[jax.Array] = None,
+               *, cache_len: Optional[int] = None, remat: bool = True,
+               last_only: bool = True):
+    """Prefill: forward pass + decode-cache emission.
+
+    ``last_only`` computes logits for the final position only — serving
+    needs just the next token, and a full [B,S,V] logits tensor at 32k x
+    202k vocab is tens of GiB plus 2·T·d·V useless head FLOPs
+    (EXPERIMENTS.md §Perf, whisper/llama4 prefill iterations).
+    Returns (logits [B,S|1,V], caches); caches hand off to
+    ``lm_decode_step`` at ``pos = S``.
+    """
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    if positions is None:
+        positions = default_positions(cfg, B, S)
+    x = _embed(cfg, params, tokens)
+
+    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+            else segments(cfg.block_kinds))
+    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
+    caches = []
+    for (kind, _), seg_params in zip(runs, params["blocks"]):
+        prefill_fn = REGISTRY[kind][4]
+
+        def body(x, p_l, _pf=prefill_fn):
+            y, _, cache = _pf(cfg, p_l, x, positions, cache_len)
+            return y, cache
+
+        if remat:
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.share_groups:
+            def group_body(x, p_g, _body=body):
+                cs = []
+                for _ in range(reps):
+                    x, c = _body(x, p_g)
+                    cs.append(c)
+                return x, jax.tree.map(lambda *a: jnp.stack(a), *cs)
+            x, cs = jax.lax.scan(group_body, x, seg_params)
+            cs = jax.tree.map(
+                lambda a: a.reshape(cfg.n_layers, *a.shape[2:]), cs)
+        else:
+            x, cs = jax.lax.scan(body, x, seg_params)
+        caches.append(cs)
+    if last_only:
+        x = x[:, -1:]
+    return _head(cfg, params, x), caches
+
+
+def lm_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    if cfg.share_groups:
+        kind = cfg.block_kinds[0]
+        return [stack_specs(REGISTRY[kind][3](cfg, batch, seq), cfg.n_layers)]
+    return [stack_specs(REGISTRY[k][3](cfg, batch, seq), n)
+            for k, n in segments(cfg.block_kinds)]
+
+
+def lm_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
+                   caches: Tree, pos: jax.Array,
+                   positions: Optional[jax.Array] = None):
+    """One-token decode. token [B,1] -> (logits [B,1,V], new caches)."""
+    B = token.shape[0]
+    if positions is None:
+        if cfg.rope == "mrope":
+            positions = jnp.broadcast_to(pos, (3, B, 1))
+        else:
+            positions = jnp.broadcast_to(pos, (B, 1))
+    x = _embed(cfg, params, token)
+
+    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+            else segments(cfg.block_kinds))
+    new_caches = []
+    for (kind, _), seg_params, seg_cache in zip(runs, params["blocks"],
+                                                caches):
+        decode_fn = REGISTRY[kind][2]
+        if cfg.share_groups:
+            reps = cfg.n_layers // cfg.share_groups
+
+            def body(x, pc, _decode=decode_fn):
+                p_g, c_ls = pc           # c_ls: caches for this group [reps,..]
+                def inner(x, c_l):
+                    y, c = _decode(cfg, p_g, x, c_l, pos, positions)
+                    return y, c
+                return jax.lax.scan(inner, x, c_ls)
+
+            # regroup stacked caches [L, ...] -> [G, reps, ...]
+            c_regrouped = jax.tree.map(
+                lambda a: a.reshape(cfg.share_groups, reps, *a.shape[1:]),
+                seg_cache)
+            x, cs = jax.lax.scan(lambda x, pc: body(x, pc),
+                                 x, (seg_params, c_regrouped))
+            cs = jax.tree.map(lambda a: a.reshape(cfg.n_layers,
+                                                  *a.shape[2:]), cs)
+        else:
+            def body(x, pc, _decode=decode_fn):
+                p_l, c_l = pc
+                y, c = _decode(cfg, p_l, x, c_l, pos, positions)
+                return y, c
+            x, cs = jax.lax.scan(body, x, (seg_params, seg_cache))
+        new_caches.append(cs)
+
+    return _head(cfg, params, x), new_caches

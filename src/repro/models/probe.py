@@ -1,0 +1,32 @@
+"""FLOP-probe mode.
+
+XLA's cost analysis counts a ``while``-loop body once (verified in
+DESIGN.md §6), so the dry-run under-counts FLOPs inside ``lax.scan``.  The
+probe lowers a *single layer* with every inner scan collapsed to one chunk
+(chunked attention -> one block, chunkwise SSMs -> one chunk): everything is
+then in-graph and fully counted, and total FLOPs are reconstructed as
+``graph + (L-1) x layer``.  Lowering is symbolic — the giant single-chunk
+intermediates are never allocated.
+
+The only loop that cannot be collapsed is the sLSTM time recurrence
+(sequential by construction); its contribution is added analytically from
+:mod:`repro.models.flops`.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_FLAGS = {"probe": False}
+
+
+def probe_enabled() -> bool:
+    return _FLAGS["probe"]
+
+
+@contextlib.contextmanager
+def probe_mode():
+    _FLAGS["probe"] = True
+    try:
+        yield
+    finally:
+        _FLAGS["probe"] = False

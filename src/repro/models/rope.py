@@ -1,0 +1,72 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# M-RoPE splits the rotary half-dim into (temporal, height, width) sections.
+MROPE_SECTIONS = (16, 24, 24)
+
+
+def rope_freqs(dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def rope_angles(positions: jax.Array, dim: int, theta: float) -> jax.Array:
+    """positions [..., S] -> angles [..., S, dim//2]."""
+    f = rope_freqs(dim, theta)
+    return positions[..., None].astype(jnp.float32) * f
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    # x [..., D]; rotate interleaved-as-halves (llama convention).
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x [B, S, H, D], positions [S] or [B, S]."""
+    ang = rope_angles(positions, x.shape[-1], theta)     # [.., S, D/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    if cos.ndim == 2:                                    # [S, D/2]
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    else:                                                # [B, S, D/2]
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=None) -> jax.Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x [B, S, H, D]; positions [3, B, S] (t/h/w streams, produced by the
+    vision-frontend stub; text tokens carry identical t=h=w positions).
+    Each section of the rotary half-dim uses its own position stream.
+    """
+    d2 = x.shape[-1] // 2
+    if sections is None:
+        if d2 == sum(MROPE_SECTIONS):
+            sections = MROPE_SECTIONS          # qwen2-vl hd=128 split
+        else:                                   # keep the 1/4:3/8:3/8 ratio
+            t = d2 // 4
+            h = (d2 - t) // 2
+            sections = (t, h, d2 - t - h)
+    assert sum(sections) == d2, (sections, d2)
+    f = rope_freqs(x.shape[-1], theta)                   # [D/2]
+    # angles per stream: [3, B, S, D/2]
+    ang = positions[..., None].astype(jnp.float32) * f
+    parts, start = [], 0
+    for i, sec in enumerate(sections):
+        parts.append(ang[i, :, :, start:start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                # [B, S, D/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def default_mrope_positions(batch: int, seq: int, offset=0) -> jax.Array:
+    """Text-only fallback: all three streams share sequential positions."""
+    p = jnp.broadcast_to(offset + jnp.arange(seq), (batch, seq))
+    return jnp.broadcast_to(p[None], (3, batch, seq))

@@ -1,0 +1,229 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv audio frontend is a STUB per the shape contract: ``input_specs``
+supplies precomputed frame embeddings ``[B, S_enc, d]``.  Sinusoidal
+positions are added to both streams (the learned-positions detail of the
+original is immaterial to the systems study).  Decode caches the decoder
+self-attention KV ring plus the *precomputed* cross-attention K/V.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+from repro.models import layers as L
+from repro.models import attention as attn_lib
+from repro.dist.constrain import constrain
+
+Tree = Any
+
+
+def sinusoid(seq: int, d: int, dtype) -> jax.Array:
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    div = jnp.exp(jnp.arange(0, d, 2) * (-jnp.log(10000.0) / d))
+    pe = jnp.zeros((seq, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe.astype(dtype)
+
+
+def _xattn_specs(cfg: ArchConfig) -> Tree:
+    d, H, hd, pd = cfg.d_model, cfg.n_heads, cfg.hd, cfg.param_jdtype
+    return {
+        "wq": ParamSpec((d, H, hd), pd, axes=("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, H, hd), pd, axes=("embed", "heads", "head_dim")),
+        "wv": ParamSpec((d, H, hd), pd, axes=("embed", "heads", "head_dim")),
+        "wo": ParamSpec((H, hd, d), pd, axes=("heads", "head_dim", "embed")),
+    }
+
+
+def enc_block_specs(cfg: ArchConfig) -> Tree:
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+
+
+def dec_block_specs(cfg: ArchConfig) -> Tree:
+    return {"ln1": L.norm_specs(cfg), "attn": L.attn_specs(cfg),
+            "lnx": L.norm_specs(cfg), "xattn": _xattn_specs(cfg),
+            "ln2": L.norm_specs(cfg), "mlp": L.ffn_specs(cfg)}
+
+
+def whisper_specs(cfg: ArchConfig) -> Tree:
+    from repro.models.model import stack_specs
+    d, V, pd = cfg.d_model, cfg.vocab_size, cfg.param_jdtype
+    return {
+        "embed": ParamSpec((V, d), pd, "embed", ("vocab", "embed")),
+        "enc_blocks": stack_specs(enc_block_specs(cfg), cfg.encoder_layers),
+        "enc_norm": L.norm_specs(cfg),
+        "dec_blocks": stack_specs(dec_block_specs(cfg), cfg.n_layers),
+        "final_norm": L.norm_specs(cfg),
+        "head": ParamSpec((d, V), pd, "normal", ("embed", "vocab")),
+    }
+
+
+def _cross_kv(cfg, p, enc_out):
+    cd = enc_out.dtype
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"].astype(cd))
+    return k, v
+
+
+def _cross_attend(cfg, p, x, k, v):
+    cd = x.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    from repro.models import flash as flash_lib
+    out = flash_lib.flash_attention(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cd))
+
+
+def encode(cfg: ArchConfig, params: Tree, audio_embed: jax.Array,
+           remat: bool = True) -> jax.Array:
+    """audio_embed [B, S_enc, d] (frontend stub output)."""
+    B, S, d = audio_embed.shape
+    x = audio_embed + sinusoid(S, d, audio_embed.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, p_l):
+        h = L.apply_norm(cfg, p_l["ln1"], x)
+        x = x + L.apply_attn(cfg, p_l["attn"], h, positions, causal=False)
+        x = x + L.apply_ffn(cfg, p_l["mlp"], L.apply_norm(cfg, p_l["ln2"], x))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+    return L.apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(cfg: ArchConfig, params: Tree, tokens: jax.Array,
+                 enc_out: jax.Array, remat: bool = True) -> jax.Array:
+    B, S = tokens.shape
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(cfg.compute_jdtype)
+    x = x + sinusoid(S, d, x.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, p_l):
+        h = L.apply_norm(cfg, p_l["ln1"], x)
+        x = x + L.apply_attn(cfg, p_l["attn"], h, positions, causal=True)
+        k, v = _cross_kv(cfg, p_l["xattn"], enc_out)
+        x = x + _cross_attend(cfg, p_l["xattn"],
+                              L.apply_norm(cfg, p_l["lnx"], x), k, v)
+        x = x + L.apply_ffn(cfg, p_l["mlp"], L.apply_norm(cfg, p_l["ln2"], x))
+        return x, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["head"].astype(x.dtype)
+    return constrain(logits, ("pod", "data"), None, "model")
+
+
+def whisper_apply(cfg: ArchConfig, params: Tree, batch: Tree,
+                  remat: bool = True):
+    enc_out = encode(cfg, params, batch["audio_embed"], remat)
+    logits = decode_train(cfg, params, batch["tokens"], enc_out, remat)
+    return logits, jnp.zeros((), jnp.float32)
+
+
+def whisper_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
+    from repro.models.model import stack_specs
+    H, hd, dt = cfg.n_heads, cfg.hd, cfg.compute_jdtype
+    enc = cfg.encoder_max_len
+    self_kv = stack_specs(L.attn_cache_specs(cfg, batch, seq), cfg.n_layers)
+    cross = stack_specs(
+        {"k": ParamSpec((batch, enc, H, hd), dt, "zeros",
+                        ("batch", "kv_seq", "heads", "head_dim")),
+         "v": ParamSpec((batch, enc, H, hd), dt, "zeros",
+                        ("batch", "kv_seq", "heads", "head_dim"))},
+        cfg.n_layers)
+    return {"self": self_kv, "cross": cross}
+
+
+def prefill_cross_cache(cfg: ArchConfig, params: Tree, enc_out: jax.Array):
+    """Precompute per-layer cross K/V from encoder output."""
+    def body(_, p_l):
+        k, v = _cross_kv(cfg, p_l["xattn"], enc_out)
+        return None, {"k": k, "v": v}
+    _, kv = jax.lax.scan(body, None, params["dec_blocks"])
+    return kv
+
+
+def whisper_prefill(cfg: ArchConfig, params: Tree, batch: Tree,
+                    cache_len: int | None = None, remat: bool = True,
+                    last_only: bool = True):
+    """Encoder pass + decoder prefill; returns (logits, caches)."""
+    enc_out = encode(cfg, params, batch["audio_embed"], remat)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    cache_len = cache_len or S
+    d = cfg.d_model
+    x = params["embed"][tokens].astype(cfg.compute_jdtype)
+    x = x + sinusoid(S, d, x.dtype)
+    positions = jnp.arange(S)
+
+    def body(x, p_l):
+        h = L.apply_norm(cfg, p_l["ln1"], x)
+        y, (k, v) = L.apply_attn(cfg, p_l["attn"], h, positions, causal=True,
+                                 return_kv=True)
+        x = x + y
+        ck, cv = _cross_kv(cfg, p_l["xattn"], enc_out)
+        x = x + _cross_attend(cfg, p_l["xattn"],
+                              L.apply_norm(cfg, p_l["lnx"], x), ck, cv)
+        x = x + L.apply_ffn(cfg, p_l["mlp"], L.apply_norm(cfg, p_l["ln2"], x))
+        cache = {"self": {"k": L.ring_place(k, cache_len),
+                          "v": L.ring_place(v, cache_len)},
+                 "cross": {"k": ck, "v": cv}}
+        return x, cache
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, caches = jax.lax.scan(body, x, params["dec_blocks"])
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = x @ params["head"].astype(x.dtype)
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, {"self": caches["self"], "cross": caches["cross"]}
+
+
+def whisper_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
+                        caches: Tree, pos: jax.Array):
+    """One decoder token. caches = {'self': .., 'cross': ..}."""
+    B = token.shape[0]
+    d = cfg.d_model
+    x = params["embed"][token].astype(cfg.compute_jdtype)
+    pe = sinusoid(cfg.max_seq_len if cfg.max_seq_len < (1 << 16)
+                  else (1 << 16), d, x.dtype)
+    x = x + jax.lax.dynamic_slice_in_dim(pe, jnp.minimum(pos, pe.shape[0] - 1),
+                                         1, axis=0)[None]
+    positions = jnp.broadcast_to(pos, (B, 1))
+
+    def body(x, pc):
+        p_l, c_self, c_cross = pc
+        h = L.apply_norm(cfg, p_l["ln1"], x)
+        y, c_self = L.apply_attn_decode(cfg, p_l["attn"], h, c_self, pos,
+                                        positions)
+        x = x + y
+        cd = x.dtype
+        q = jnp.einsum("bsd,dhk->bshk", L.apply_norm(cfg, p_l["lnx"], x),
+                       p_l["xattn"]["wq"].astype(cd))
+        out = attn_lib.decode_attention(
+            q, c_cross["k"], c_cross["v"],
+            jnp.asarray(c_cross["k"].shape[1] - 1))
+        x = x + jnp.einsum("bshk,hkd->bsd", out,
+                           p_l["xattn"]["wo"].astype(cd))
+        x = x + L.apply_ffn(cfg, p_l["mlp"], L.apply_norm(cfg, p_l["ln2"], x))
+        return x, c_self
+
+    x, new_self = jax.lax.scan(
+        body, x, (params["dec_blocks"], caches["self"], caches["cross"]))
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    logits = x @ params["head"].astype(x.dtype)
+    logits = constrain(logits, ("pod", "data"), None, "model")
+    return logits, {"self": new_self, "cross": caches["cross"]}

@@ -1,0 +1,49 @@
+"""Delayed Parameter Updates (Ren et al., 2021), as used by SWARM (§3.2).
+
+The optimizer step for batch ``t`` is applied while batch ``t+1`` computes —
+semantically the model at step ``t+1`` still sees the pre-update parameters
+of step ``t``.  We reproduce exactly that one-step staleness: ``update``
+returns the update computed from the *previous* step's gradients and banks
+the current gradients for the next call.  With ``delay=0`` this is the
+wrapped optimizer (App. E: disabling DPU makes SWARM fully synchronous).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer
+
+Tree = Any
+
+
+def delayed_parameter_updates(inner: Optimizer, delay: int = 1) -> Optimizer:
+    if delay == 0:
+        return inner
+
+    def init(params: Tree) -> Tree:
+        return {
+            "inner": inner.init(params),
+            "banked": jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            "have_banked": jnp.zeros((), jnp.bool_),
+        }
+
+    def update(grads: Tree, state: Tree, params: Tree):
+        banked, have = state["banked"], state["have_banked"]
+        upd, inner_state = inner.update(banked, state["inner"], params)
+        # first step: no banked grads yet -> apply zero update
+        upd = jax.tree.map(
+            lambda u: jnp.where(have, u, jnp.zeros_like(u)), upd)
+        new_state = {
+            "inner": jax.tree.map(
+                lambda new, old: jnp.where(have, new, old),
+                inner_state, state["inner"]),
+            "banked": jax.tree.map(lambda g: g.astype(jnp.float32), grads),
+            "have_banked": jnp.ones((), jnp.bool_),
+        }
+        return upd, new_state
+
+    return Optimizer(init, update)

@@ -1,0 +1,44 @@
+"""LAMB optimizer (You et al., 2020) — the paper trains its 1B model with
+LAMB at batch 16384 (App. G)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import Optimizer, _zeros_like_f32
+
+Tree = Any
+
+
+def lamb(lr: float = 1e-3, b1: float = 0.9, b2: float = 0.95,
+         eps: float = 1e-6, weight_decay: float = 0.01,
+         trust_clip: float = 10.0) -> Optimizer:
+    def init(params: Tree) -> Tree:
+        return {"m": _zeros_like_f32(params), "v": _zeros_like_f32(params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads: Tree, state: Tree, params: Tree):
+        count = state["count"] + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g,
+                         state["v"], grads)
+
+        def upd(m, v, p):
+            mh = m / (1 - b1 ** count)
+            vh = v / (1 - b2 ** count)
+            u = mh / (jnp.sqrt(vh) + eps) \
+                + weight_decay * p.astype(jnp.float32)
+            pn = jnp.sqrt(jnp.sum(jnp.square(p.astype(jnp.float32))))
+            un = jnp.sqrt(jnp.sum(jnp.square(u)))
+            trust = jnp.where((pn > 0) & (un > 0),
+                              jnp.clip(pn / un, 0.0, trust_clip), 1.0)
+            return (-lr * trust * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update)

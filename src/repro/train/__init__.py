@@ -1,0 +1,7 @@
+from repro.train.steps import (
+    make_train_step, make_serve_step, make_loss_fn, input_specs,
+    make_abstract_state, cross_entropy,
+)
+
+__all__ = ["make_train_step", "make_serve_step", "make_loss_fn",
+           "input_specs", "make_abstract_state", "cross_entropy"]

@@ -1,0 +1,201 @@
+"""train_step / serve_step builders + ShapeDtypeStruct input specs.
+
+``input_specs(cfg, shape)`` is the dry-run contract: weak-type-correct,
+shardable stand-ins for every model input — no device allocation ever
+happens for the full configs.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import model as model_lib
+from repro.models import whisper as whisper_lib
+from repro.models.config import ArchConfig
+from repro.models import params as P
+from repro.optim.adamw import Optimizer
+
+Tree = Any
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Stable mean token CE; logits [B,S,V] (any float), labels [B,S] int.
+
+    The gold logit is extracted with a one-hot contraction instead of
+    ``take_along_axis``: a gather along a model-sharded vocab dim would
+    force GSPMD to all-gather the full logits; the contraction partitions
+    as partial sums + a small all-reduce.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=logits.dtype)
+    gold = jnp.einsum("bsv,bsv->bs", logits, onehot)
+    return jnp.mean(lse - gold)
+
+
+def model_specs(cfg: ArchConfig) -> Tree:
+    if cfg.family == "audio":
+        return whisper_lib.whisper_specs(cfg)
+    return model_lib.lm_specs(cfg)
+
+
+def make_loss_fn(cfg: ArchConfig, remat: bool | str = True):
+    def loss_fn(params: Tree, batch: Tree):
+        if cfg.family == "audio":
+            logits, aux = whisper_lib.whisper_apply(cfg, params, batch, remat)
+        else:
+            logits, aux = model_lib.lm_apply(
+                cfg, params, batch["tokens"], batch.get("positions"),
+                remat=remat)
+        ce = cross_entropy(logits, batch["labels"])
+        return ce + aux, ce
+    return loss_fn
+
+
+def _split_microbatches(batch: Tree, accum: int) -> Tree:
+    def split(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        if name == "positions":                       # [3, B, S]
+            return a.reshape(a.shape[0], accum, a.shape[1] // accum,
+                             *a.shape[2:]).swapaxes(0, 1)
+        return a.reshape(accum, a.shape[0] // accum, *a.shape[1:])
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                    remat: bool | str = True, accum: int = 1):
+    """accum > 1: gradient accumulation over ``accum`` microbatches —
+    activation working set scales with B/accum at zero extra FLOPs (the
+    fp32 grad buffer costs one param-sized f32 tree)."""
+    loss_fn = make_loss_fn(cfg, remat)
+
+    def train_step(state: Tree, batch: Tree):
+        params = state["params"]
+        if accum == 1:
+            (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+        else:
+            mbs = _split_microbatches(batch, accum)
+
+            def mb_step(acc, mb):
+                (l, c), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype),
+                                   acc, g)
+                return acc, (l, c)
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            gacc, (ls, cs) = jax.lax.scan(mb_step, zeros, mbs)
+            grads = jax.tree.map(lambda a: a / accum, gacc)
+            loss, ce = ls.mean(), cs.mean()
+        updates, opt = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+        new_state = {"params": new_params, "opt": opt,
+                     "step": state["step"] + 1}
+        return new_state, {"loss": loss, "ce": ce}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, remat: bool = True,
+                      last_only: bool = True):
+    """Inference prefill: forward + decode-cache emission + first token."""
+    def prefill_step(params: Tree, batch: Tree):
+        if cfg.family == "audio":
+            logits, caches = whisper_lib.whisper_prefill(
+                cfg, params, batch, remat=remat, last_only=last_only)
+        else:
+            logits, caches = model_lib.lm_prefill(
+                cfg, params, batch["tokens"], batch.get("positions"),
+                remat=remat, last_only=last_only)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        return nxt, caches
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    """One greedy decode step: (params, caches, token [B,1], pos) ->
+    (next_token [B,1], caches)."""
+    def serve_step(params: Tree, caches: Tree, token: jax.Array,
+                   pos: jax.Array):
+        if cfg.family == "audio":
+            logits, caches = whisper_lib.whisper_decode_step(
+                cfg, params, token, caches, pos)
+        else:
+            logits, caches = model_lib.lm_decode_step(
+                cfg, params, token, caches, pos)
+        nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(token.dtype)
+        return nxt, caches
+
+    return serve_step
+
+
+def make_state(cfg: ArchConfig, optimizer: Optimizer,
+               key: jax.Array) -> Tree:
+    specs = model_specs(cfg)
+    params = P.init(key, specs)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def make_abstract_state(cfg: ArchConfig) -> Tree:
+    """ShapeDtypeStruct train state for the dry-run (no allocation)."""
+    specs = model_specs(cfg)
+    aparams = P.abstract(specs)
+    m = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                     aparams)
+    return {"params": aparams,
+            "opt": {"m": m, "v": jax.tree.map(lambda x: x, m),
+                    "count": jax.ShapeDtypeStruct((), jnp.int32)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ------------------------------------------------------------ input specs
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                      labels: bool = True) -> Tree:
+    B, S = shape.global_batch, shape.seq_len
+    tok = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    batch: Tree = {"tokens": tok}
+    if labels:
+        batch["labels"] = tok
+    if cfg.rope == "mrope":
+        batch["positions"] = jax.ShapeDtypeStruct((3, B, S), jnp.int32)
+    if cfg.family == "audio":
+        # frontend stub supplies precomputed frame embeddings
+        enc = min(S, cfg.encoder_max_len)
+        batch["audio_embed"] = jax.ShapeDtypeStruct(
+            (B, enc, cfg.d_model), cfg.compute_jdtype)
+    return batch
+
+
+def decode_cache_param_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tree:
+    """Raw ParamSpec tree (carries logical axes for sharding rules)."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        return whisper_lib.whisper_cache_specs(cfg, B, S)
+    return model_lib.lm_cache_specs(cfg, B, S)
+
+
+def decode_cache_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tree:
+    return P.abstract(decode_cache_param_specs(cfg, shape))
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> Tree:
+    """All inputs for the step function of this cell, as ShapeDtypeStructs."""
+    if shape.kind == "train":
+        return {"state": make_abstract_state(cfg),
+                "batch": train_batch_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": P.abstract(model_specs(cfg)),
+                "batch": train_batch_specs(cfg, shape, labels=False)}
+    return {"params": P.abstract(model_specs(cfg)),
+            "caches": decode_cache_specs(cfg, shape),
+            "token": jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((), jnp.int32)}

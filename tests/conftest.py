@@ -1,0 +1,24 @@
+# NOTE: no XLA_FLAGS here — smoke tests must see exactly 1 device
+# (the 512-device override belongs to launch/dryrun.py ONLY).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny_dense_config(**kw):
+    from repro.models.config import ArchConfig
+    base = dict(name="tiny", family="dense", n_layers=4, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                head_dim=16, compute_dtype="float32",
+                param_dtype="float32")
+    base.update(kw)
+    return ArchConfig(**base)

@@ -1,0 +1,43 @@
+"""Baseline-system cost models (paper Table 2 comparisons)."""
+from repro.core.baselines import gpipe, one_f1b, zero_offload
+from repro.core.peer import V100
+from repro.models.config import ArchConfig
+
+XXLARGE = ArchConfig(name="xx4", family="dense", n_layers=4, d_model=4096,
+                     n_heads=32, n_kv_heads=32, d_ff=16384, vocab_size=2,
+                     act="gelu", tie_embeddings=True)
+GPT3 = ArchConfig(name="g3", family="dense", n_layers=4, d_model=12288,
+                  n_heads=96, n_kv_heads=96, d_ff=49152, vocab_size=2,
+                  act="gelu", tie_embeddings=True)
+
+
+def test_gpipe_bubble_hurts_few_microbatches():
+    few = gpipe(XXLARGE, V100, n_microbatches=4)
+    many = gpipe(XXLARGE, V100, n_microbatches=64)
+    assert many.throughput > few.throughput
+    # bubble fraction: (S-1)/(M+S-1)
+    assert many.throughput / few.throughput > 1.3
+
+
+def test_1f1b_matches_gpipe_steady_state():
+    a = gpipe(XXLARGE, V100)
+    b = one_f1b(XXLARGE, V100)
+    assert abs(a.throughput - b.throughput) < 1e-9
+    assert b.name == "1F1B"
+
+
+def test_offload_allreduce_full_model_vs_stage():
+    """Paper §4.2: ZeRO-Offload aggregates the ENTIRE model per peer,
+    pipelines only one stage -> offload All-Reduce is several x larger."""
+    g = gpipe(GPT3, V100)
+    z = zero_offload(GPT3, V100)
+    assert z.allreduce_time > 2.5 * g.allreduce_time
+
+
+def test_square_cube_shifts_the_winner():
+    """Offload's relative position degrades with model size (Table 2)."""
+    rel_small = (zero_offload(XXLARGE, V100).throughput
+                 / gpipe(XXLARGE, V100).throughput)
+    rel_big = (zero_offload(GPT3, V100).throughput
+               / gpipe(GPT3, V100).throughput)
+    assert rel_big < rel_small

@@ -1,0 +1,86 @@
+"""8-bit blockwise quantization + compression-aware layers (paper App. J)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from hypothesis.extra import numpy as hnp
+
+from repro.compression import (blockwise_quantize, blockwise_dequantize,
+                               compress_boundary, quantization_error,
+                               bottleneck_specs, maxout_specs)
+from repro.compression import bottleneck as bn
+from repro.compression import maxout as mx
+from repro.models import params as P
+
+
+def test_roundtrip_small_error():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1024,)) * 3
+    assert float(quantization_error(x)) < 0.01
+
+
+def test_exact_for_blockwise_constant():
+    x = jnp.repeat(jnp.array([1.0, -2.0, 0.5]), 64)
+    q, s, meta = blockwise_quantize(x, 64)
+    xr = blockwise_dequantize(q, s, meta)
+    np.testing.assert_allclose(np.asarray(xr), np.asarray(x), rtol=1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(hnp.arrays(np.float32, hnp.array_shapes(min_dims=1, max_dims=3,
+                                               max_side=65),
+                  elements=st.floats(-1e4, 1e4, width=32)))
+def test_property_error_bound(x):
+    """Absmax int8: per-element error <= absmax/127 per block."""
+    xj = jnp.asarray(x)
+    q, s, meta = blockwise_quantize(xj, 64)
+    xr = blockwise_dequantize(q, s, meta)
+    per_block_bound = np.asarray(s).ravel() / 127.0 * 1.0001 + 1e-6
+    diff = np.abs(np.asarray(xr) - x).ravel()
+    pad = (-diff.size) % 64
+    diff = np.pad(diff, (0, pad))
+    worst = diff.reshape(-1, 64).max(1)
+    assert np.all(worst <= per_block_bound[:worst.size])
+
+
+def test_compressed_dtype_is_int8():
+    q, s, meta = blockwise_quantize(jnp.ones(256), 64)
+    assert q.dtype == jnp.int8 and s.dtype == jnp.float32
+
+
+def test_boundary_ste_gradient():
+    """compress_boundary: fwd quantizes, bwd quantizes the cotangent."""
+    x = jax.random.normal(jax.random.PRNGKey(1), (128,))
+    g = jax.grad(lambda x: jnp.sum(jnp.sin(compress_boundary(x))))(x)
+    # cos(q(x)) quantized: close to cos(x), and exactly a quantized vector
+    ref = jnp.cos(x)
+    assert float(jnp.max(jnp.abs(g - ref))) < 0.05
+    q, s, meta = blockwise_quantize(g, 64)
+    gr = blockwise_dequantize(q, s, meta)
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(g), atol=1e-6)
+
+
+def test_bottleneck_wire_ratio_and_shapes():
+    specs = bottleneck_specs(64, 16)
+    p = P.init(jax.random.PRNGKey(0), specs)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 10, 64))
+    z = bn.compress(p, x)
+    assert z.shape == (4, 10, 16)          # 4x fewer wire bytes
+    y = bn.decompress(p, z)
+    assert y.shape == x.shape
+
+
+def test_maxout_compress():
+    x = jax.random.normal(jax.random.PRNGKey(2), (2, 8, 64))
+    z = mx.compress(x, 4)
+    assert z.shape == (2, 8, 16)
+    specs = maxout_specs(64, 4)
+    p = P.init(jax.random.PRNGKey(3), specs)
+    y = mx.decompress(p, z)
+    assert y.shape == x.shape
+
+
+def test_compressed_bytes_accounting():
+    from repro.compression.quant8 import compressed_bytes
+    x = jnp.zeros(6400)
+    assert compressed_bytes(x, 64) == 6400 + 4 * 100

@@ -1,0 +1,55 @@
+"""DHT semantics: multi-writer keys, TTL expiration, staleness."""
+from repro.core.dht import DHT
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_store_get_multiwriter():
+    clk = FakeClock()
+    dht = DHT(clk)
+    dht.store("k", "a", 1, ttl=10)
+    dht.store("k", "b", 2, ttl=10)
+    recs = dht.get("k")
+    assert {sk: r.value for sk, r in recs.items()} == {"a": 1, "b": 2}
+
+
+def test_ttl_expiration():
+    clk = FakeClock()
+    dht = DHT(clk)
+    dht.store("k", "a", 1, ttl=5)
+    dht.store("k", "b", 2, ttl=50)
+    clk.t = 10.0
+    recs = dht.get("k")
+    assert list(recs) == ["b"]
+
+
+def test_reannounce_refreshes_ttl():
+    clk = FakeClock()
+    dht = DHT(clk)
+    dht.store("k", "a", 1, ttl=5)
+    clk.t = 4.0
+    dht.store("k", "a", 1, ttl=5)     # re-announce (paper: every few min)
+    clk.t = 8.0
+    assert "a" in dht.get("k")
+
+
+def test_overwrite_takes_latest_value():
+    clk = FakeClock()
+    dht = DHT(clk)
+    dht.store("load/0", "p", 3.0, ttl=10)
+    dht.store("load/0", "p", 7.0, ttl=10)
+    assert dht.get_value("load/0", "p") == 7.0
+
+
+def test_delete():
+    clk = FakeClock()
+    dht = DHT(clk)
+    dht.store("k", "a", 1, ttl=10)
+    dht.delete("k", "a")
+    assert dht.get("k") == {}

@@ -1,0 +1,69 @@
+"""Elastic re-meshing policy: balanced stage partitioning + replans."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_config
+from repro.launch.elastic import (balanced_splits, plan_mesh,
+                                  replan_on_failure, replan_on_join,
+                                  layer_costs)
+
+
+def test_uniform_costs_split_evenly():
+    assert balanced_splits([1.0] * 8, 4) == (2, 2, 2, 2)
+
+
+def test_heterogeneous_costs_balance_maxload():
+    # one heavy layer should sit alone
+    costs = [1, 1, 1, 10]
+    assert balanced_splits(costs, 2) == (3, 1)
+
+
+def test_heterogeneous_pod_speeds():
+    # a 2x faster second pod takes ~2x the layers
+    splits = balanced_splits([1.0] * 9, 2, speeds=[1.0, 2.0])
+    assert splits[1] > splits[0]
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.floats(0.1, 10.0), min_size=2, max_size=24),
+       st.integers(1, 4))
+def test_splits_partition_property(costs, n):
+    if n > len(costs):
+        return
+    splits = balanced_splits(costs, n)
+    assert len(splits) == n
+    assert sum(splits) == len(costs)
+    assert all(s >= 1 for s in splits)
+    # optimality sanity: max stage <= total (trivial) and >= total/n
+    prefix, lo = [], 0
+    mx = 0.0
+    for s in splits:
+        mx = max(mx, sum(costs[lo:lo + s]))
+        lo += s
+    assert mx >= sum(costs) / n - 1e-9
+
+
+def test_plan_and_replan_deepseek():
+    cfg = get_config("deepseek-v2-236b")
+    plan = plan_mesh(cfg, n_pods=4)
+    assert sum(plan.layer_splits) == 60
+    assert plan.bubble_fraction == pytest.approx(3 / 11)
+    # pod failure: shrink to 3, all layers still covered
+    p2 = replan_on_failure(cfg, plan, surviving_pods=3)
+    assert sum(p2.layer_splits) == 60 and len(p2.layer_splits) == 3
+    # join back
+    p3 = replan_on_join(cfg, p2, new_total=4)
+    assert p3.layer_splits == plan.layer_splits
+
+
+def test_survives_to_single_pod():
+    cfg = get_config("gemma-2b")
+    plan = plan_mesh(cfg, 2)
+    p = replan_on_failure(cfg, plan, surviving_pods=1)
+    assert p.layer_splits == (cfg.n_layers,)
+
+
+def test_layer_costs_uniform_for_uniform_archs():
+    cfg = get_config("yi-6b")
+    costs = layer_costs(cfg, 4096)
+    assert len(set(costs)) == 1

@@ -1,0 +1,111 @@
+"""System-invariant property tests (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.compression.quant8 import blockwise_quantize, blockwise_dequantize
+from repro.models import rope as rope_lib
+from repro.models import layers as L
+from repro.core.faults import synth_preemptible_trace, active_counts
+
+
+# ------------------------------------------------------------------ quant
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quantization_idempotent(seed):
+    """quant(dequant(quant(x))) == quant(x): re-sending a quantized tensor
+    over a second SWARM boundary is lossless."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,)) * 7
+    q1, s1, meta = blockwise_quantize(x, 64)
+    x1 = blockwise_dequantize(q1, s1, meta)
+    q2, s2, _ = blockwise_quantize(x1, 64)
+    x2 = blockwise_dequantize(q2, s2, meta)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2),
+                               rtol=2e-6, atol=2e-6)
+
+
+# ------------------------------------------------------------------ rope
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_rope_preserves_norms(seed):
+    """Rotations are orthogonal: per-head vector norms are unchanged."""
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(key, (2, 16, 4, 32))
+    y = rope_lib.apply_rope(x, jnp.arange(16), 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_position_invariance():
+    """<rope(q,i), rope(k,j)> depends only on i-j (the RoPE property that
+    makes ring-buffer SWA caches valid: absolute slots don't matter)."""
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 64))
+
+    def score(i, j):
+        qr = rope_lib.apply_rope(q, jnp.array([i]), 10_000.0)
+        kr = rope_lib.apply_rope(k, jnp.array([j]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+
+    assert abs(score(5, 3) - score(105, 103)) < 1e-4
+    assert abs(score(7, 0) - score(1007, 1000)) < 1e-4
+
+
+# ------------------------------------------------------- ring cache
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(2, 12))
+def test_ring_place_keeps_last_window(S, W):
+    """ring_place preserves exactly the last min(S, W) entries, each in
+    slot t % W."""
+    x = jnp.arange(S, dtype=jnp.float32).reshape(1, S, 1) + 1.0
+    out = np.asarray(L.ring_place(x, W))[0, :, 0]
+    kept = min(S, W)
+    for t in range(S - kept, S):
+        assert out[t % W] == t + 1
+    # nothing else is non-zero
+    assert (out != 0).sum() == kept
+
+
+# ------------------------------------------------------------- traces
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000))
+def test_trace_never_kills_last_peer(seed):
+    trace = synth_preemptible_trace(horizon_s=3600.0, target_peers=8,
+                                    mean_lifetime_s=600.0, seed=seed)
+    counts = active_counts(trace, 8, 3600.0, dt=10.0)
+    assert counts.min() >= 1
+
+
+def test_trace_deterministic():
+    a = synth_preemptible_trace(seed=5, horizon_s=1800.0)
+    b = synth_preemptible_trace(seed=5, horizon_s=1800.0)
+    assert [(e.time, e.delta) for e in a] == [(e.time, e.delta) for e in b]
+
+
+# ----------------------------------------------------- attention masks
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 48), st.integers(1, 16))
+def test_sliding_window_never_attends_outside(S, W):
+    """flash(window=W) output at position t is independent of tokens
+    older than t-W+1."""
+    from repro.models.flash import flash_attention
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, S, 2, 8))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, S, 2, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, S, 2, 8))
+    out = flash_attention(q, k, v, causal=True, window=W,
+                          chunk_q=16, chunk_k=16)
+    # perturb the OLDEST token's k/v: last position unchanged iff S > W
+    k2 = k.at[:, 0].add(100.0)
+    v2 = v.at[:, 0].add(100.0)
+    out2 = flash_attention(q, k2, v2, causal=True, window=W,
+                           chunk_q=16, chunk_k=16)
+    changed = float(jnp.max(jnp.abs(out[:, -1] - out2[:, -1])))
+    if S > W:
+        assert changed < 1e-5          # token 0 fell out of the window
+    else:
+        assert changed > 1e-4          # still visible

@@ -1,0 +1,151 @@
+"""End-to-end SWARM behaviour: synchronous-equivalence (App. E),
+fault tolerance (App. A), rebalancing under churn, DPU semantics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_config
+from repro.core import SwarmRunner, SwarmConfig, TraceEvent
+from repro.core.stage_model import build_stage_programs, init_stage_params
+from repro.data.synthetic import SyntheticLM
+from repro.optim import adamw, delayed_parameter_updates
+
+
+def _reference_losses(cfg, opt, n_steps, seq, mb, gb, seed=0,
+                      data_seed=17):
+    programs = build_stage_programs(cfg, 2, seq)
+    params = init_stage_params(programs, jax.random.PRNGKey(seed))
+    opt_states = [opt.init(p) for p in params]
+    ds = SyntheticLM(cfg.vocab_size, seq, mb, seed=data_seed)
+    idx, losses = 0, []
+    for _ in range(n_steps):
+        grads = [jax.tree.map(jnp.zeros_like, p) for p in params]
+        loss_sum, tok = 0.0, 0
+        for _ in range(gb // mb):
+            b = ds.batch(idx)
+            idx += 1
+            x = programs[0].fwd(params[0], b["tokens"])
+            loss, gx, gp1 = programs[1].bwd(params[1], x, b["labels"])
+            _, gp0 = programs[0].bwd(params[0], b["tokens"], gx)
+            grads[0] = jax.tree.map(jnp.add, grads[0], gp0)
+            grads[1] = jax.tree.map(jnp.add, grads[1], gp1)
+            loss_sum += float(loss)
+            tok += mb * seq
+        losses.append(loss_sum / tok)
+        for s in range(2):
+            gm = jax.tree.map(lambda g: g / tok, grads[s])
+            upd, opt_states[s] = opt.update(gm, opt_states[s], params[s])
+            params[s] = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                     params[s], upd)
+    return losses, params
+
+
+@pytest.fixture(scope="module")
+def swarm_setup():
+    cfg = tiny_dense_config()
+    scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
+                       global_batch=8, n_trainers=3, rebalance_period=0.0,
+                       compress=False, max_steps=3)
+    return cfg, scfg
+
+
+def test_swarm_equals_synchronous_training(swarm_setup):
+    """Paper App. E: SWARM's stepwise updates == conventional training."""
+    cfg, scfg = swarm_setup
+    opt = adamw(lr=1e-2, grad_clip=0.0)
+    runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
+    runner.build(peers_per_stage=2)
+    metrics = runner.run(until=1e6)
+    ref_losses, ref_params = _reference_losses(cfg, opt, 3, 32, 2, 8)
+    assert len(metrics["loss"]) == 3
+    np.testing.assert_allclose(metrics["loss"], ref_losses, atol=2e-4)
+    p_sw = next(p for p in runner.peers.values()
+                if p.alive and p.stage == 0).state.params
+    for a, b in zip(jax.tree.leaves(p_sw), jax.tree.leaves(ref_params[0])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=5e-3)
+
+
+def test_swarm_survives_failures_and_joins(swarm_setup):
+    cfg, scfg = swarm_setup
+    import dataclasses
+    scfg = dataclasses.replace(scfg, rebalance_period=2.0, compress=True,
+                               max_steps=4)
+    opt = adamw(lr=1e-2, grad_clip=0.0)
+    runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
+    runner.build(peers_per_stage=3)
+    runner.apply_trace([TraceEvent(0.02, -2), TraceEvent(0.05, -1),
+                        TraceEvent(0.3, +2)])
+    m = runner.run(until=1e6)
+    assert runner.step == 4
+    assert m["failures"] == 3 and m["joins"] == 2
+    # gradients lost with dead peers were recomputed by survivors (App. A)
+    assert all(np.isfinite(m["loss"]))
+    # every stage still servable
+    for s in range(2):
+        assert any(p.alive and p.stage == s for p in runner.peers.values())
+
+
+def test_swarm_loss_decreases():
+    cfg = tiny_dense_config(n_layers=2)
+    scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=32,
+                       global_batch=16, n_trainers=4, rebalance_period=0.0,
+                       compress=True, max_steps=8)
+    opt = adamw(lr=3e-3, grad_clip=0.0)
+    runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=1)
+    runner.build(peers_per_stage=2)
+    m = runner.run(until=1e6)
+    assert m["loss"][-1] < m["loss"][0] - 0.1, m["loss"]
+
+
+def test_8bit_compression_close_to_uncompressed():
+    """App. J: 8-bit boundary compression barely perturbs the step."""
+    cfg = tiny_dense_config(n_layers=2)
+    losses = {}
+    for compress in (False, True):
+        scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
+                           global_batch=8, n_trainers=2,
+                           rebalance_period=0.0, compress=compress,
+                           max_steps=3)
+        r = SwarmRunner(cfg, scfg, adamw(lr=1e-2, grad_clip=0.0),
+                        numeric=True, seed=0)
+        r.build(peers_per_stage=1)
+        losses[compress] = r.run(until=1e6)["loss"]
+    diff = max(abs(a - b) for a, b in zip(losses[True], losses[False]))
+    assert diff < 0.05, (losses, diff)
+
+
+def test_dpu_one_step_delay_semantics():
+    """DPU applies step t's gradients at step t+1 (App. E)."""
+    opt = adamw(lr=1.0, b1=0.0, b2=0.999, weight_decay=0.0, grad_clip=0.0)
+    dpu = delayed_parameter_updates(opt, delay=1)
+    params = {"w": jnp.ones(3)}
+    state = dpu.init(params)
+    g1 = {"w": jnp.array([1.0, 0.0, 0.0])}
+    upd, state = dpu.update(g1, state, params)
+    assert float(jnp.max(jnp.abs(upd["w"]))) == 0.0     # nothing banked yet
+    g2 = {"w": jnp.array([0.0, 1.0, 0.0])}
+    upd, state = dpu.update(g2, state, params)
+    # the applied update must correspond to g1, not g2
+    assert abs(float(upd["w"][0])) > 0.5
+    assert abs(float(upd["w"][1])) < 1e-6
+
+
+def test_rebalancing_improves_throughput_under_churn():
+    """Fig. 5 in miniature: rebalanced swarm beats no-rebalance."""
+    cfg = tiny_dense_config(n_layers=4, d_model=1024, d_ff=4096,
+                            vocab_size=5000)
+    from repro.core.faults import synth_preemptible_trace
+    trace = synth_preemptible_trace(horizon_s=1200.0, target_peers=16,
+                                    mean_lifetime_s=900.0, seed=3)
+    thr = {}
+    for T in (0.0, 60.0):
+        scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=128,
+                           global_batch=64, n_trainers=8,
+                           rebalance_period=T, compress=True)
+        r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=4)
+        r.build(peers_per_stage=8)
+        r.apply_trace(trace)
+        r.run(until=1200.0)
+        thr[T] = r.throughput()
+    assert thr[60.0] >= thr[0.0] * 0.95   # at minimum never much worse

@@ -1,0 +1,85 @@
+"""Stochastic wiring (Algorithm 1) — unit + property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.wiring import StochasticWiring, INF
+
+
+def test_single_server_always_chosen():
+    w = StochasticWiring(1)
+    w.add_server("a", [0])
+    for _ in range(10):
+        assert w.choose_server(0) == "a"
+
+
+def test_ban_and_reannounce():
+    w = StochasticWiring(1)
+    w.add_server("a", [0])
+    w.add_server("b", [0])
+    w.ban_server("a")
+    assert all(w.choose_server(0) == "b" for _ in range(20))
+    w.add_server("a", [0])          # re-announced in the DHT
+    chosen = {w.choose_server(0) for _ in range(20)}
+    assert "a" in chosen
+
+
+def test_empty_stage_returns_none():
+    w = StochasticWiring(2)
+    w.add_server("a", [0])
+    assert w.choose_server(1) is None
+
+
+def test_iwrr_proportional_allocation():
+    """Paper §3.2: a device 2x faster gets 2x the requests."""
+    w = StochasticWiring(1, gamma=1.0)
+    w.add_server("fast", [0])
+    w.add_server("slow", [0])
+    w.observe("fast", 1.0)
+    w.observe("slow", 2.0)
+    counts = {"fast": 0, "slow": 0}
+    for _ in range(3000):
+        s = w.choose_server(0)
+        counts[s] += 1
+        w.observe(s, 1.0 if s == "fast" else 2.0)
+    ratio = counts["fast"] / counts["slow"]
+    assert 1.8 < ratio < 2.2, counts
+
+
+@settings(max_examples=30, deadline=None)
+@given(speeds=st.lists(st.floats(0.1, 10.0), min_size=2, max_size=6))
+def test_iwrr_inverse_time_share_property(speeds):
+    """Request share of peer i converges to (1/t_i) / sum(1/t_j)."""
+    w = StochasticWiring(1, gamma=1.0)
+    names = [f"p{i}" for i in range(len(speeds))]
+    for n in names:
+        w.add_server(n, [0])
+    for n, t in zip(names, speeds):
+        w.observe(n, t)
+    counts = dict.fromkeys(names, 0)
+    for _ in range(4000):
+        s = w.choose_server(0)
+        counts[s] += 1
+    total_inv = sum(1.0 / t for t in speeds)
+    for n, t in zip(names, speeds):
+        expect = (1.0 / t) / total_inv
+        share = counts[n] / 4000
+        assert abs(share - expect) < 0.06, (n, share, expect)
+
+
+def test_ema_update_rule():
+    w = StochasticWiring(1, gamma=0.1, epsilon=0.5)
+    w.add_server("a", [0])
+    w.ema["a"] = 0.5                # pin the (jittered) prior
+    w.observe("a", 1.5)
+    assert math.isclose(w.ema["a"], 0.1 * 1.5 + 0.9 * 0.5)
+
+
+def test_move_server_between_stages():
+    w = StochasticWiring(2)
+    w.add_server("a", [0])
+    w.add_server("b", [0])
+    w.move_server("a", [1])
+    assert w.choose_server(1) == "a"
+    assert all(w.choose_server(0) == "b" for _ in range(5))
