@@ -13,10 +13,58 @@ import time
 import traceback
 
 
+def smoke() -> None:
+    """CI import-rot guard: one real train step, then import every module
+    under ``src/repro`` and every benchmark suite.
+
+    The train step runs FIRST so the jax backend initializes with the
+    default device view — ``repro.launch.dryrun`` mutates XLA_FLAGS (the
+    512-device override) at import, which must not leak into the step.
+    """
+    import importlib
+    import pkgutil
+
+    import jax
+
+    from repro.data import make_batch
+    from repro.models.config import ArchConfig
+    from repro.optim import adamw
+    from repro.train.steps import make_state, make_train_step
+
+    cfg = ArchConfig(name="smoke", family="dense", n_layers=2, d_model=32,
+                     n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=128,
+                     head_dim=16, compute_dtype="float32",
+                     param_dtype="float32")
+    opt = adamw(lr=1e-3)
+    state = make_state(cfg, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg, opt, remat=False))
+    _, m = step(state, make_batch(cfg.vocab_size, 16, 2))
+    print(f"smoke_train_step,loss,{float(m['loss']):.4f}")
+
+    import benchmarks
+    import repro
+    failed = []
+    for pkg in (repro, benchmarks):
+        for info in pkgutil.walk_packages(pkg.__path__, pkg.__name__ + "."):
+            try:
+                importlib.import_module(info.name)
+            except Exception as e:
+                failed.append((info.name, f"{type(e).__name__}: {e}"))
+    for name, err in failed:
+        print(f"# IMPORT FAILED {name}: {err}", file=sys.stderr)
+    print(f"smoke_imports,modules_ok,{'FAIL' if failed else 'OK'}")
+    sys.exit(1 if failed else 0)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="1-step import-rot guard (CI): no full suites")
     args = ap.parse_args()
+    if args.smoke:
+        smoke()
+        return
 
     from benchmarks import (bench_square_cube, bench_throughput,
                             bench_rebalance, bench_scaling,

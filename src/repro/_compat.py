@@ -1,0 +1,48 @@
+"""jax version compatibility shims.
+
+The distribution layer is written against the modern mesh API
+(``jax.make_mesh(..., axis_types=(jax.sharding.AxisType.Auto, ...))``).
+Older jaxlibs (< 0.5) predate ``AxisType``; every mesh there is
+implicitly GSPMD-auto, which is exactly the semantics the codebase
+assumes, so the shim only has to make the *spelling* work:
+
+* ``jax.sharding.AxisType`` — minimal enum with Auto/Explicit/Manual.
+* ``jax.make_mesh`` — accept and drop an ``axis_types`` kwarg.
+
+Import this module before any ``jax.make_mesh(axis_types=...)`` call
+(``repro.dist`` and ``repro.launch.mesh`` both do).  On jax >= 0.5 the
+shim is a no-op.  Importing jax here does NOT initialize a backend, so
+the dry-run's XLA_FLAGS device-count override still wins (flags are
+read at first backend init, not at import).
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+
+import jax
+
+
+def _install() -> None:
+    if hasattr(jax.sharding, "AxisType"):
+        return
+
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+    jax.sharding.AxisType = AxisType
+
+    if "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            del axis_types          # pre-AxisType jax: every axis is Auto
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+
+_install()

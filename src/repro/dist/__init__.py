@@ -1,0 +1,21 @@
+"""Static intra-stage parallel execution layer (GSPMD).
+
+SWARM's elastic scheduling layer (``repro.core``) decides *which* peers
+hold *which* pipeline stage; this package is the other half of the
+Varuna-style split — the static parallel execution of one configuration
+once chosen:
+
+* :mod:`repro.dist.constrain` — ``with_sharding_constraint`` wrapper that
+  degrades to a no-op off-mesh, so single-device tests and the 512-device
+  dry-run share one model code path.
+* :mod:`repro.dist.sharding`  — logical-axis -> mesh-axis rules and the
+  NamedSharding builders for params / train state / batches / caches.
+* :mod:`repro.dist.pipeline`  — the GSPMD shifting-buffer pipeline train
+  step over the ``pod`` mesh axis, with optional int8 boundary
+  compression (paper §3.1, App. J).
+
+Submodules are imported explicitly (``from repro.dist import sharding``)
+rather than re-exported here: ``repro.models`` imports
+``repro.dist.constrain`` while ``repro.dist.sharding`` imports model
+specs, and an eager re-export would turn that into an import cycle.
+"""

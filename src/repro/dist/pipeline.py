@@ -1,0 +1,256 @@
+"""GSPMD shifting-buffer SWARM pipeline over the ``pod`` mesh axis.
+
+The elastic layer (``repro.core``) simulates SWARM's stochastic wiring;
+this module is the *compiled* counterpart for one static configuration:
+all pipeline stages live in one jitted step, stage-stacked parameters are
+sharded over ``pod``, and microbatch activations travel between stages
+through a shifting buffer — ``jnp.roll`` on the stage dim, which GSPMD
+lowers to a collective-permute (Xu et al., 2021; the same construction
+Praxis calls a layerwise-shardable pipeline).
+
+Schedule: with S stages and M microbatches the loop runs ``T = M + S - 1``
+ticks.  At tick ``t`` slot ``s`` holds microbatch ``t - s``; slot 0
+ingests microbatch ``t`` (embedded on the fly), slot ``S-1`` emits
+microbatch ``t - (S-1)`` into the loss.  Slots outside ``[0, M)`` compute
+garbage that is never read — the cost of the classic ``(S-1)/T`` bubble.
+
+Autodiff gives the reverse schedule for free: the transpose of ``roll``
+is the opposite rotation, so gradients pipeline backwards through the
+same buffer.  With ``compress="int8"`` every stage-boundary crossing is
+blockwise-quantized in BOTH directions (activations forward, cotangents
+backward) via :func:`repro.compression.quant8.compress_boundary` —
+exactly what SWARM puts on the wire (paper §4.3, App. J).
+
+Equivalence to ``repro.train.steps.make_train_step`` (same loss, same
+gradients, within f32 tolerance) is enforced by
+``tests/test_distribution.py`` on a 2x2x2 host-device mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import _compat  # noqa: F401  (AxisType shim for older jax)
+from repro.compression import quant8
+from repro.dist.constrain import constrain
+from repro.models import model as model_lib
+from repro.models.blocks import REGISTRY
+from repro.models.config import ArchConfig
+from repro.optim.adamw import Optimizer
+
+Tree = Any
+
+
+def stage_periodic(cfg: ArchConfig, n_stages: int) -> bool:
+    """Can this layer stack split into ``n_stages`` *identical* stages?
+
+    The shifting-buffer pipeline vmaps ONE stage program over the stage
+    dim, so every stage must run the same block-kind sequence:
+
+    * encoder-decoder models (whisper) are never periodic — the two
+      streams are structurally different;
+    * ALBERT-style shared stacks are periodic iff the parameter groups
+      split evenly (``share_groups % n_stages == 0``);
+    * otherwise the block-kind pattern must tile: ``n_layers % n_stages
+      == 0`` and each stage's slice of ``block_kinds`` identical (the
+      xlstm (5 mLSTM, 1 sLSTM) x 2 arrangement is periodic at 2 stages;
+      a 32-layer dense stack is not at 7).
+    """
+    if n_stages < 1:
+        return False
+    if cfg.family == "audio" or cfg.encoder_layers:
+        return False
+    if cfg.share_groups:
+        return cfg.share_groups % n_stages == 0
+    if cfg.n_layers % n_stages:
+        return False
+    per = cfg.n_layers // n_stages
+    return cfg.block_kinds == cfg.block_kinds[:per] * n_stages
+
+
+def _period_runs(cfg: ArchConfig, n_stages: int) -> list[tuple[str, int]]:
+    """(kind, count) runs of ONE stage's slice of the layer pattern."""
+    if cfg.share_groups:
+        return [(cfg.block_kinds[0], cfg.share_groups // n_stages)]
+    per = cfg.n_layers // n_stages
+    return model_lib.segments(cfg.block_kinds[:per])
+
+
+def _restack(per_stage: list) -> jax.Array:
+    """Stack per-stage arrays along a new leading (pod-sharded) dim.
+
+    Written as zeros + ``.at[s].set`` instead of ``jnp.stack``: the XLA
+    0.4.x SPMD partitioner miscompiles a concatenate whose concat dim is
+    sharded (here: over ``pod``) — stage s > 0 silently computes with
+    corrupted weights, ~3e-2 loss error on the 2x2x2 equivalence mesh.
+    Static-index dynamic-update-slices partition correctly (verified by
+    the mixed-kind equivalence test in tests/test_distribution.py).
+    """
+    out = jnp.zeros((len(per_stage),) + per_stage[0].shape,
+                    per_stage[0].dtype)
+    for s, a in enumerate(per_stage):
+        out = out.at[s].set(a)
+    return out
+
+
+def _stage_blocks(cfg: ArchConfig, blocks: Tree, n_stages: int) -> Tree:
+    """Regroup ``params['blocks']`` (global layer stacks) into per-stage
+    stacks: one tree per period run, leaves ``[n_stages, count, ...]``.
+
+    Pure reshape for the common homogeneous cases.  For mixed-kind
+    periodic patterns each (stage, period-run) segment is a contiguous
+    same-kind layer range, so it sits inside exactly one maximal global
+    run: a static slice of that run's stack, restacked across stages
+    (differentiable, so gradients land back on the original stacks).
+    """
+    if cfg.share_groups:
+        g = cfg.share_groups // n_stages
+        return [jax.tree.map(
+            lambda a: a.reshape(n_stages, g, *a.shape[1:]), blocks[0])]
+    g_runs = model_lib.segments(cfg.block_kinds)
+    per = cfg.n_layers // n_stages
+    if len(g_runs) == 1:
+        return [jax.tree.map(
+            lambda a: a.reshape(n_stages, per, *a.shape[1:]), blocks[0])]
+    starts = [0]
+    for _, c in g_runs:
+        starts.append(starts[-1] + c)
+    out, off = [], 0
+    for _, c in _period_runs(cfg, n_stages):
+        stages = []
+        for s in range(n_stages):
+            lo_g = s * per + off                 # global start of the range
+            ri = max(i for i in range(len(g_runs)) if starts[i] <= lo_g)
+            lo = lo_g - starts[ri]
+            stages.append(jax.tree.map(
+                lambda a, _lo=lo: a[_lo:_lo + c], blocks[ri]))
+        out.append(jax.tree.map(lambda *xs: _restack(list(xs)), *stages))
+        off += c
+    return out
+
+
+def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
+    """One stage's program: scan this stage's layer runs over (x, aux)."""
+    period = _period_runs(cfg, n_stages)
+    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
+
+    def stage_fn(blocks_s: Tree, x: jax.Array, aux: jax.Array, positions):
+        for (kind, _), seg in zip(period, blocks_s):
+            apply_fn = REGISTRY[kind][1]
+
+            def body(carry, p_l, _apply=apply_fn):
+                x, aux = carry
+                for _ in range(reps):          # reps > 1: ALBERT sharing
+                    x, a = _apply(cfg, p_l, x, positions)
+                    aux = aux + a
+                return (x, aux), None
+
+            if remat:
+                body = jax.checkpoint(
+                    body, policy=jax.checkpoint_policies.nothing_saveable)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), seg)
+        return x, aux
+
+    return stage_fn
+
+
+def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
+                             n_stages: int, n_microbatches: int, *,
+                             remat: bool | str = True,
+                             compress: Optional[str] = None):
+    """Build ``(state, batch) -> (state, {"loss", "ce"})`` — the pipelined
+    twin of ``steps.make_train_step``.
+
+    ``compress=None`` defers to ``cfg.boundary_compression``; ``"none"``
+    and ``"int8"`` are supported (the learned bottleneck/maxout codecs
+    live on the elastic path only).
+    """
+    if not stage_periodic(cfg, n_stages):
+        raise ValueError(f"{cfg.name}: layer stack is not periodic at "
+                         f"{n_stages} stages (see stage_periodic)")
+    comp = cfg.boundary_compression if compress is None else compress
+    if comp not in ("none", "int8"):
+        raise ValueError(f"unsupported boundary compression {comp!r} for "
+                         "the GSPMD pipeline (use 'none' or 'int8')")
+    do_remat = (remat != "none") if isinstance(remat, str) else bool(remat)
+    stage_fn = _make_stage_fn(cfg, n_stages, do_remat)
+    S_, M = n_stages, n_microbatches
+
+    from repro.train import steps as steps_lib   # lazy: steps imports models
+
+    def loss_fn(params: Tree, batch: Tree):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        if B % M:
+            raise ValueError(f"batch {B} not divisible by {M} microbatches")
+        mb = B // M
+        tok_mb = tokens.reshape(M, mb, S)
+        lab_mb = labels.reshape(M, mb, S)
+        if "positions" in batch:                       # mrope: [3, B, S]
+            p = batch["positions"]
+            pos_mb = p.reshape(p.shape[0], M, mb, S).swapaxes(0, 1)
+            pos_axis = 0
+        else:
+            pos_mb = model_lib.default_positions(cfg, mb, S)
+            pos_axis = None                            # shared by all slots
+        stage_blocks = [jax.tree.map(
+            lambda a: constrain(a, "pod", *([None] * (a.ndim - 1))), t)
+            for t in _stage_blocks(cfg, params["blocks"], S_)]
+        v_stage = jax.vmap(stage_fn, in_axes=(0, 0, 0, pos_axis))
+
+        def ingest(t):
+            """Embed the microbatch entering slot 0 at tick ``t``."""
+            x = model_lib.embed(cfg, params, tok_mb[jnp.clip(t, 0, M - 1)],
+                                batch_axes=("data",))
+            return constrain(x, "data", None, None)
+
+        def tick(carry, t):
+            buf, aux_buf, ces, auxs = carry
+            buf = constrain(buf, "pod", "data", None, None)
+            pos = (pos_mb if pos_axis is None
+                   else pos_mb[jnp.clip(t - jnp.arange(S_), 0, M - 1)])
+            out, aux_out = v_stage(stage_blocks, buf, aux_buf, pos)
+            # the final stage owns the head: no boundary crossing here
+            idx = jnp.clip(t - (S_ - 1), 0, M - 1)
+            logits = model_lib.head(cfg, params, out[-1],
+                                    batch_axes=("data",))
+            ces = ces.at[idx].set(steps_lib.cross_entropy(
+                logits, lab_mb[idx]))
+            auxs = auxs.at[idx].set(aux_out[-1])
+            # warm-up ticks (t < S-1) write garbage into slot 0 of ces/auxs;
+            # the true microbatch-0 write at t == S-1 overwrites it, and the
+            # scatter's transpose zeroes the dead cotangents.
+            if comp == "int8":
+                out = jax.vmap(quant8.compress_boundary)(out)
+            buf = jnp.roll(out, 1, axis=0).at[0].set(ingest(t + 1))
+            aux_buf = jnp.roll(aux_out, 1, 0).at[0].set(0.0)
+            buf = constrain(buf, "pod", "data", None, None)
+            return (buf, aux_buf, ces, auxs), None
+
+        if do_remat:
+            tick = jax.checkpoint(
+                tick, policy=jax.checkpoint_policies.nothing_saveable)
+
+        buf0 = jnp.zeros((S_, mb, S, cfg.d_model), cfg.compute_jdtype)
+        buf0 = buf0.at[0].set(ingest(jnp.zeros((), jnp.int32)))
+        carry0 = (buf0, jnp.zeros((S_,), jnp.float32),
+                  jnp.zeros((M,), jnp.float32), jnp.zeros((M,), jnp.float32))
+        (_, _, ces, auxs), _ = jax.lax.scan(
+            tick, carry0, jnp.arange(M + S_ - 1))
+        ce = ces.mean()
+        return ce + auxs.mean(), ce
+
+    def train_step(state: Tree, batch: Tree):
+        params = state["params"]
+        (loss, ce), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        updates, opt = optimizer.update(grads, state["opt"], params)
+        new_params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                  params, updates)
+        return ({"params": new_params, "opt": opt,
+                 "step": state["step"] + 1},
+                {"loss": loss, "ce": ce})
+
+    return train_step

@@ -162,6 +162,8 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
 
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):     # jax < 0.5: one dict per program
+        cost = cost[0] if cost else {}
     hlo = compiled.as_text()
     colls = hlo_analysis.collective_bytes(hlo)
     record.update({

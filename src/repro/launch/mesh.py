@@ -8,6 +8,8 @@ from __future__ import annotations
 
 import jax
 
+from repro import _compat  # noqa: F401  (AxisType shim for older jax)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (v5e); 2 pods = 512 chips multi-pod.

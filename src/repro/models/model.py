@@ -61,23 +61,27 @@ def lm_specs(cfg: ArchConfig) -> Tree:
     return specs
 
 
-def _embed(cfg: ArchConfig, params: Tree, tokens: jax.Array) -> jax.Array:
+def embed(cfg: ArchConfig, params: Tree, tokens: jax.Array,
+          batch_axes=("pod", "data")) -> jax.Array:
+    """Token embedding.  ``batch_axes``: mesh axes of the batch dim — the
+    default folds ``pod`` into data parallelism; the GSPMD pipeline passes
+    ``("data",)`` because there ``pod`` carries stages, not batch."""
     x = params["embed"][tokens].astype(cfg.compute_jdtype)
     if cfg.scale_embed:
         x = x * (cfg.d_model ** 0.5)
     if x.ndim == 3:
-        x = constrain(x, ("pod", "data"), None, None)
+        x = constrain(x, batch_axes, None, None)
     return x
 
 
-def _head(cfg: ArchConfig, params: Tree, x: jax.Array) -> jax.Array:
+def head(cfg: ArchConfig, params: Tree, x: jax.Array,
+         batch_axes=("pod", "data")) -> jax.Array:
     x = L.apply_norm(cfg, params["final_norm"], x)
     w = (params["embed"].T if cfg.tie_embeddings else params["head"])
     logits = x @ w.astype(x.dtype)
     if logits.ndim == 3:
-        logits = constrain(logits, ("pod", "data"), None, "model")
+        logits = constrain(logits, batch_axes, None, "model")
     return logits
-
 
 def default_positions(cfg: ArchConfig, batch: int, seq: int,
                       offset=0) -> jax.Array:
@@ -126,7 +130,7 @@ def lm_apply(cfg: ArchConfig, params: Tree, tokens: jax.Array,
     mode = remat if isinstance(remat, str) else ("block" if remat else "none")
     if positions is None:
         positions = default_positions(cfg, B, S)
-    x = _embed(cfg, params, tokens)
+    x = embed(cfg, params, tokens)
     aux = jnp.zeros((), jnp.float32)
 
     runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
@@ -153,7 +157,7 @@ def lm_apply(cfg: ArchConfig, params: Tree, tokens: jax.Array,
         else:
             (x, aux), _ = remat_scan(body, (x, aux), seg_params, mode)
 
-    return _head(cfg, params, x), aux
+    return head(cfg, params, x), aux
 
 
 def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
@@ -173,7 +177,7 @@ def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
     cache_len = cache_len or S
     if positions is None:
         positions = default_positions(cfg, B, S)
-    x = _embed(cfg, params, tokens)
+    x = embed(cfg, params, tokens)
 
     runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
             else segments(cfg.block_kinds))
@@ -204,7 +208,7 @@ def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
         caches.append(cs)
     if last_only:
         x = x[:, -1:]
-    return _head(cfg, params, x), caches
+    return head(cfg, params, x), caches
 
 
 def lm_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
@@ -225,7 +229,7 @@ def lm_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
             positions = jnp.broadcast_to(pos, (3, B, 1))
         else:
             positions = jnp.broadcast_to(pos, (B, 1))
-    x = _embed(cfg, params, token)
+    x = embed(cfg, params, token)
 
     runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
             else segments(cfg.block_kinds))
@@ -259,4 +263,4 @@ def lm_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
             x, cs = jax.lax.scan(body, x, (seg_params, seg_cache))
         new_caches.append(cs)
 
-    return _head(cfg, params, x), new_caches
+    return head(cfg, params, x), new_caches

@@ -17,7 +17,7 @@ from repro.models.config import ArchConfig
 from repro.models.params import ParamSpec
 from repro.models import layers as L
 from repro.models import attention as attn_lib
-from repro.dist.constrain import constrain
+from repro.models import model as model_lib
 
 Tree = Any
 
@@ -119,9 +119,9 @@ def decode_train(cfg: ArchConfig, params: Tree, tokens: jax.Array,
     if remat:
         body = jax.checkpoint(body)
     x, _ = jax.lax.scan(body, x, params["dec_blocks"])
-    x = L.apply_norm(cfg, params["final_norm"], x)
-    logits = x @ params["head"].astype(x.dtype)
-    return constrain(logits, ("pod", "data"), None, "model")
+    # shared head: final norm + vocab projection + the constrain no-op
+    # path (identity off-mesh, so single-device tests need no mesh)
+    return model_lib.head(cfg, params, x)
 
 
 def whisper_apply(cfg: ArchConfig, params: Tree, batch: Tree,
@@ -184,11 +184,9 @@ def whisper_prefill(cfg: ArchConfig, params: Tree, batch: Tree,
     if remat:
         body = jax.checkpoint(body)
     x, caches = jax.lax.scan(body, x, params["dec_blocks"])
-    x = L.apply_norm(cfg, params["final_norm"], x)
     if last_only:
-        x = x[:, -1:]
-    logits = x @ params["head"].astype(x.dtype)
-    logits = constrain(logits, ("pod", "data"), None, "model")
+        x = x[:, -1:]          # norm is per-position: commutes with the slice
+    logits = model_lib.head(cfg, params, x)
     return logits, {"self": caches["self"], "cross": caches["cross"]}
 
 
@@ -223,7 +221,5 @@ def whisper_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
 
     x, new_self = jax.lax.scan(
         body, x, (params["dec_blocks"], caches["self"], caches["cross"]))
-    x = L.apply_norm(cfg, params["final_norm"], x)
-    logits = x @ params["head"].astype(x.dtype)
-    logits = constrain(logits, ("pod", "data"), None, "model")
+    logits = model_lib.head(cfg, params, x)
     return logits, {"self": new_self, "cross": caches["cross"]}

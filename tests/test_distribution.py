@@ -92,6 +92,7 @@ _PIPELINE_EQUIV = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipeline_train_step_equals_reference():
     """The GSPMD shifting-buffer pipeline computes the SAME step as the
     plain train step (loss and updated params) on a 2x2x2 mesh."""
@@ -100,6 +101,64 @@ def test_pipeline_train_step_equals_reference():
                        cwd=os.path.join(os.path.dirname(__file__), ".."),
                        timeout=600)
     assert "PIPELINE_EQUIV_OK" in r.stdout, r.stdout + r.stderr
+
+
+_MIXED_EQUIV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.config import ArchConfig, SSMConfig
+    from repro.optim.adamw import Optimizer
+    from repro.train.steps import make_state, make_loss_fn
+    from repro.dist.pipeline import make_pipeline_train_step
+    from repro.data import make_batch
+
+    # xlstm-style mixed-kind periodic stack: the per-stage params take the
+    # slice-and-restack path, which the homogeneous tests never touch
+    cfg = ArchConfig(name="tiny-x", family="ssm", n_layers=6, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                     head_dim=16, rope="none", act="gelu", norm="layernorm",
+                     block_pattern=("mlstm", "mlstm", "slstm") * 2,
+                     ssm=SSMConfig(state_dim=8, chunk=16),
+                     compute_dtype="float32", param_dtype="float32",
+                     boundary_compression="none")
+    grad_opt = Optimizer(init=lambda p: {"z": jnp.zeros(())},
+                         update=lambda g, s, p: (g, s))
+    state = make_state(cfg, grad_opt, jax.random.PRNGKey(0))
+    batch = make_batch(cfg.vocab_size, 32, 8)
+    (ref_loss, _), ref_g = jax.value_and_grad(
+        make_loss_fn(cfg, remat=False), has_aux=True)(state["params"], batch)
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    pipe_step = make_pipeline_train_step(cfg, grad_opt, n_stages=2,
+                                         n_microbatches=4, remat=False,
+                                         compress="none")
+    with mesh:
+        out_state, m = jax.jit(pipe_step)(state, batch)
+    print("ref", float(ref_loss), "pipe", float(m["loss"]))
+    assert abs(float(ref_loss) - float(m["loss"])) < 1e-4
+    pipe_g = jax.tree.map(lambda pn, p0: pn - p0, out_state["params"],
+                          state["params"])
+    for a, b in zip(jax.tree.leaves(ref_g), jax.tree.leaves(pipe_g)):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-9
+        np.testing.assert_allclose(np.asarray(a) / scale,
+                                   np.asarray(b) / scale, atol=1e-3)
+    print("MIXED_EQUIV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_mixed_kind_equals_reference():
+    """Mixed-kind periodic stacks (xlstm-style) must pipeline exactly too:
+    guards the per-stage slice-and-restack path against the XLA SPMD
+    sharded-concatenate miscompile (see dist/pipeline.py::_restack)."""
+    r = subprocess.run([sys.executable, "-c", _MIXED_EQUIV],
+                       capture_output=True, text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       timeout=600)
+    assert "MIXED_EQUIV_OK" in r.stdout, r.stdout + r.stderr
 
 
 _INT8_PIPELINE = textwrap.dedent("""
@@ -136,6 +195,7 @@ _INT8_PIPELINE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_pipeline_int8_boundary_compression():
     r = subprocess.run([sys.executable, "-c", _INT8_PIPELINE],
                        capture_output=True, text=True,

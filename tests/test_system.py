@@ -50,6 +50,7 @@ def swarm_setup():
     return cfg, scfg
 
 
+@pytest.mark.slow
 def test_swarm_equals_synchronous_training(swarm_setup):
     """Paper App. E: SWARM's stepwise updates == conventional training."""
     cfg, scfg = swarm_setup
@@ -86,11 +87,14 @@ def test_swarm_survives_failures_and_joins(swarm_setup):
         assert any(p.alive and p.stage == s for p in runner.peers.values())
 
 
+@pytest.mark.slow
 def test_swarm_loss_decreases():
     cfg = tiny_dense_config(n_layers=2)
+    # 12 steps: at 8 the drop sits right on the 0.1 threshold (0.098);
+    # 12 gives a deterministic 2x margin at the same lr
     scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=32,
                        global_batch=16, n_trainers=4, rebalance_period=0.0,
-                       compress=True, max_steps=8)
+                       compress=True, max_steps=12)
     opt = adamw(lr=3e-3, grad_clip=0.0)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=1)
     runner.build(peers_per_stage=2)
@@ -98,6 +102,7 @@ def test_swarm_loss_decreases():
     assert m["loss"][-1] < m["loss"][0] - 0.1, m["loss"]
 
 
+@pytest.mark.slow
 def test_8bit_compression_close_to_uncompressed():
     """App. J: 8-bit boundary compression barely perturbs the step."""
     cfg = tiny_dense_config(n_layers=2)
