@@ -1,23 +1,34 @@
-"""Paper Table 7/8 + App. K: compression-aware architectures — convergence
+"""Paper Table 7/8 + App. J: compression-aware architectures — convergence
 cost of int8 / bottleneck / maxout boundary compression on a real (tiny)
-LM, and the wire-byte savings each buys."""
+LM, and the wire-byte savings each buys.
+
+All four modes now run END-TO-END through the elastic SWARM path (the
+learned codecs train their ``w_c``/``w_d`` jointly with the model), and the
+measured wire bytes of each mode's actual boundary tensor are asserted
+equal to the analytic ``flops.boundary_bytes`` — the cost model cannot
+drift from what crosses the wire.
+"""
 from __future__ import annotations
 
 import time
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
 from repro.core import SwarmRunner, SwarmConfig
 from repro.models.config import ArchConfig
+from repro.models import flops as F
 from repro.optim import adamw
+from repro.compression import bottleneck as bn, maxout as mx, codecs
 from repro.compression.quant8 import compressed_bytes
+from repro.models import params as P
 
+# 2x feature compression for both learned codecs (paper Table 7's setting)
 CFG = ArchConfig(name="bench-lm", family="dense", n_layers=4, d_model=128,
                  n_heads=4, n_kv_heads=4, d_ff=512, vocab_size=512,
                  head_dim=32, compute_dtype="float32",
-                 param_dtype="float32")
+                 param_dtype="float32", bottleneck_dim=64, maxout_k=2)
+
+MODES = ("none", "int8", "bottleneck", "maxout")
 
 PAPER_TABLE7 = {
     "none": (21.02, 1.00, 1.0),
@@ -27,10 +38,10 @@ PAPER_TABLE7 = {
 }
 
 
-def _train(compress: bool, steps: int = 20):
+def _train(mode: str, steps: int = 20):
     scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=64,
                        global_batch=16, n_trainers=4, rebalance_period=0.0,
-                       compress=compress, max_steps=steps)
+                       compress=mode, max_steps=steps)
     r = SwarmRunner(CFG, scfg, adamw(lr=3e-3, grad_clip=0.0), numeric=True,
                     seed=0)
     r.build(peers_per_stage=1)
@@ -38,52 +49,56 @@ def _train(compress: bool, steps: int = 20):
     return r.metrics["loss"]
 
 
+def measured_wire_bytes(mode: str, x: jax.Array) -> float:
+    """Bytes of the ACTUAL tensor each codec puts on the wire (2-byte
+    elements for the float modes, matching the cost model's bf16 wire)."""
+    if mode == "int8":
+        return float(compressed_bytes(x))
+    if mode == "bottleneck":
+        p = P.init(jax.random.PRNGKey(0),
+                   bn.bottleneck_specs(CFG.d_model, codecs.wire_dim(
+                       CFG, "bottleneck")))
+        return bn.compress(p, x).size * 2.0
+    if mode == "maxout":
+        return mx.compress(x, codecs.maxout_k(CFG)).size * 2.0
+    return x.size * 2.0
+
+
 def run(csv=True):
     print("# compression-aware boundaries (paper Table 7/8, App. J)")
     print("name,us_per_call,derived")
-    t0 = time.perf_counter()
-    base = _train(compress=False)
-    int8 = _train(compress=True)
-    dt = (time.perf_counter() - t0) * 1e6 / 2
 
-    def steps_to(losses, target):
-        for i, l in enumerate(losses):
+    # ---- wire honesty: measured bytes == flops.boundary_bytes, all modes
+    b, s = 4, 64
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, CFG.d_model))
+    for mode in MODES:
+        measured = measured_wire_bytes(mode, x)
+        model = F.boundary_bytes(CFG, b, s, mode)
+        assert measured == model, (mode, measured, model)
+        print(f"compression/wire_bytes_{mode},0,measured={measured:.0f} "
+              f"model={model:.0f} ratio={measured / (x.size * 2.0):.3f} "
+              f"match=True")
+
+    # ---- convergence: all four modes end-to-end on the elastic path
+    t0 = time.perf_counter()
+    losses = {mode: _train(mode) for mode in MODES}
+    dt = (time.perf_counter() - t0) * 1e6 / len(MODES)
+
+    def steps_to(ls, target):
+        for i, l in enumerate(ls):
             if l <= target:
                 return i + 1
-        return len(losses) + 1
+        return len(ls) + 1
 
+    base = losses["none"]
     target = base[-1] + 0.02
-    s_base, s_int8 = steps_to(base, target), steps_to(int8, target)
-    print(f"compression/none,{dt:.0f},final={base[-1]:.4f} steps=1.00x "
-          f"wire=1.0x paper_ppl={PAPER_TABLE7['none'][0]}")
-    print(f"compression/int8,{dt:.0f},final={int8[-1]:.4f} "
-          f"steps={s_int8/s_base:.2f}x wire=0.53x "
-          f"paper_steps={PAPER_TABLE7['int8'][1]}x")
-
-    # wire bytes per boundary tensor (b=4, s=64, d=128)
-    x = jnp.zeros((4, 64, 128))
-    fp16 = x.size * 2
-    q8 = compressed_bytes(x)
-    print(f"compression/wire_bytes,0,fp16={fp16} int8={q8} "
-          f"ratio={q8/fp16:.3f}")
-
-    # bottleneck / maxout: measured as activation-reconstruction quality +
-    # compression factor (full pretraining sweep is out of CPU budget;
-    # paper Table 7 numbers quoted for reference)
-    from repro.compression import bottleneck as bn, maxout as mx
-    from repro.models import params as P
-    key = jax.random.PRNGKey(0)
-    h = jax.random.normal(key, (32, 64, 128))
-    for name, factor in (("bottleneck", 2), ("maxout", 2)):
-        if name == "bottleneck":
-            p = P.init(key, bn.bottleneck_specs(128, 128 // factor))
-            z = bn.compress(p, h)
-        else:
-            p = P.init(key, mx.maxout_specs(128, factor))
-            z = mx.compress(h, factor)
-        print(f"compression/{name},0,wire={z.size / h.size:.2f}x"
-              f" paper_steps={PAPER_TABLE7[name][1]}x "
-              f"paper_ppl={PAPER_TABLE7[name][0]}")
+    s_base = steps_to(base, target)
+    for mode in MODES:
+        ls = losses[mode]
+        ratio = steps_to(ls, target) / s_base
+        ppl, psteps, pwire = PAPER_TABLE7[mode]
+        print(f"compression/{mode},{dt:.0f},final={ls[-1]:.4f} "
+              f"steps={ratio:.2f}x paper_steps={psteps}x paper_ppl={ppl}")
 
 
 if __name__ == "__main__":

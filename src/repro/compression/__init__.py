@@ -1,12 +1,13 @@
 from repro.compression.quant8 import (
     blockwise_quantize, blockwise_dequantize, compress_boundary,
-    quantization_error,
+    quantization_error, compressed_nbytes,
 )
 from repro.compression.bottleneck import bottleneck_specs, apply_bottleneck
 from repro.compression.maxout import maxout_specs, apply_maxout
+from repro.compression import codecs
 
 __all__ = [
     "blockwise_quantize", "blockwise_dequantize", "compress_boundary",
-    "quantization_error", "bottleneck_specs", "apply_bottleneck",
-    "maxout_specs", "apply_maxout",
+    "quantization_error", "compressed_nbytes", "bottleneck_specs",
+    "apply_bottleneck", "maxout_specs", "apply_maxout", "codecs",
 ]

@@ -1,0 +1,148 @@
+"""Boundary-codec dispatch — ONE source of truth for what crosses a SWARM
+stage boundary under each ``cfg.boundary_compression`` mode (paper App. J).
+
+Four modes:
+
+* ``none``        — raw activations (2-byte wire elements, bf16 convention);
+* ``int8``        — blockwise 8-bit roundtrip (:mod:`repro.compression.quant8`),
+                    parameter-free, applied to the wire tensor both ways;
+* ``bottleneck``  — learned linear bottleneck (App. J.1): the sending stage
+                    owns ``w_c`` ([m, c]), the receiving stage ``w_d``
+                    ([c, m]); the wire carries the ``c``-dim tensor;
+* ``maxout``      — maxout_k feature pooling (parameter-free compress) + a
+                    learned ``w_d`` ([m/k, m]) on the receiving stage.
+
+The geometry is keyed off the config: ``cfg.bottleneck_dim`` is the wire
+width ``c`` for the bottleneck (default ``d_model // 2`` — the paper's "2x
+feature compression"); ``cfg.maxout_k`` is the maxout pool width (default
+derived as ``d_model // bottleneck_dim``, else 2).  Both execution paths
+(the GSPMD pipeline in :mod:`repro.dist.pipeline` and the elastic stage
+programs in :mod:`repro.core.stage_model`) and the analytic cost model
+(:func:`repro.models.flops.boundary_bytes`) resolve shapes through here, so
+simulated wire bytes always match what the real codecs emit.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+
+from repro.compression import bottleneck as bn
+from repro.compression import maxout as mx
+from repro.models.config import ArchConfig
+from repro.models.params import ParamSpec
+
+Tree = Any
+
+MODES = ("none", "int8", "bottleneck", "maxout")
+LEARNED = ("bottleneck", "maxout")
+
+
+def resolve_mode(cfg: ArchConfig, compress: Optional[str] = None) -> str:
+    """``compress`` overrides ``cfg.boundary_compression``; validate."""
+    mode = cfg.boundary_compression if compress is None else compress
+    if mode not in MODES:
+        raise ValueError(f"unknown boundary compression {mode!r}; "
+                         f"expected one of {MODES}")
+    return mode
+
+
+def maxout_k(cfg: ArchConfig) -> int:
+    """Maxout pool width ``k``: explicit ``cfg.maxout_k``, else derived from
+    ``cfg.bottleneck_dim``, else the paper's default 2x."""
+    if cfg.maxout_k:
+        k = cfg.maxout_k
+    elif cfg.bottleneck_dim:
+        k = max(1, cfg.d_model // cfg.bottleneck_dim)
+    else:
+        k = 2
+    if cfg.d_model % k:
+        raise ValueError(f"maxout k={k} must divide d_model={cfg.d_model}")
+    return k
+
+
+def wire_dim(cfg: ArchConfig, compress: Optional[str] = None) -> int:
+    """Feature width of the tensor that actually crosses the wire."""
+    mode = resolve_mode(cfg, compress)
+    if mode == "bottleneck":
+        c = cfg.bottleneck_dim or cfg.d_model // 2
+        if not 0 < c <= cfg.d_model:
+            raise ValueError(f"bottleneck_dim={c} outside (0, d_model="
+                             f"{cfg.d_model}]")
+        return c
+    if mode == "maxout":
+        return cfg.d_model // maxout_k(cfg)
+    return cfg.d_model
+
+
+# ------------------------------------------------------------ ParamSpecs
+def sender_specs(cfg: ArchConfig, compress: Optional[str] = None) -> Tree:
+    """Codec params owned by a SENDING stage (compress side)."""
+    mode = resolve_mode(cfg, compress)
+    if mode == "bottleneck":
+        return {"w_c": ParamSpec((cfg.d_model, wire_dim(cfg, mode)),
+                                 cfg.param_jdtype,
+                                 axes=("embed", "bottleneck"))}
+    return {}                                # maxout compress is param-free
+
+
+def receiver_specs(cfg: ArchConfig, compress: Optional[str] = None) -> Tree:
+    """Codec params owned by a RECEIVING stage (decompress side)."""
+    mode = resolve_mode(cfg, compress)
+    if mode in LEARNED:
+        return {"w_d": ParamSpec((wire_dim(cfg, mode), cfg.d_model),
+                                 cfg.param_jdtype,
+                                 axes=("bottleneck", "embed"))}
+    return {}
+
+
+def pipeline_boundary_specs(cfg: ArchConfig) -> Optional[Tree]:
+    """Stage-stacked codec specs for the GSPMD pipeline: leading dim is the
+    boundary index ``b`` in ``0..pipeline_stages-2`` (``w_c[b]`` owned by
+    sending stage ``b``, ``w_d[b]`` by receiving stage ``b+1``).  ``None``
+    unless the config declares a learned codec AND a pipeline depth."""
+    mode = cfg.boundary_compression
+    if mode not in LEARNED or cfg.pipeline_stages <= 1:
+        return None
+    nb = cfg.pipeline_stages - 1
+    d, c = cfg.d_model, wire_dim(cfg, mode)
+    specs: Tree = {"w_d": ParamSpec((nb, c, d), cfg.param_jdtype,
+                                    axes=("stage", "bottleneck", "embed"))}
+    if mode == "bottleneck":
+        specs["w_c"] = ParamSpec((nb, d, c), cfg.param_jdtype,
+                                 axes=("stage", "embed", "bottleneck"))
+    return specs
+
+
+# ------------------------------------------------------------ apply
+def compress(cfg: ArchConfig, mode: str, p: Tree, x: jax.Array) -> jax.Array:
+    """[.., d_model] -> [.., wire_dim]: what the sending stage emits."""
+    if mode == "bottleneck":
+        return bn.compress(p, x)
+    if mode == "maxout":
+        return mx.compress(x, maxout_k(cfg))
+    return x
+
+
+def decompress(cfg: ArchConfig, mode: str, p: Tree, z: jax.Array
+               ) -> jax.Array:
+    """[.., wire_dim] -> [.., d_model]: what the receiving stage restores."""
+    if mode == "bottleneck":
+        return bn.decompress(p, z)
+    if mode == "maxout":
+        return mx.decompress(p, z)
+    return z
+
+
+def codec_flops_per_token(cfg: ArchConfig, mode: str, *, sender: bool,
+                          receiver: bool) -> float:
+    """Forward matmul FLOPs the codec adds to one stage, per token."""
+    if mode not in LEARNED:
+        return 0.0
+    c = wire_dim(cfg, mode)
+    f = 0.0
+    if sender and mode == "bottleneck":
+        f += 2.0 * cfg.d_model * c           # x @ w_c
+    if receiver:
+        f += 2.0 * c * cfg.d_model           # z @ w_d
+    return f

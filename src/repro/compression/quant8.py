@@ -85,8 +85,15 @@ def quantization_error(x: jax.Array, block: int = BLOCK) -> jax.Array:
     return jnp.linalg.norm(xr - x) / jnp.maximum(jnp.linalg.norm(x), 1e-12)
 
 
-def compressed_bytes(x: jax.Array, block: int = BLOCK) -> int:
-    """Wire size after 8-bit compression (codes + per-block f32 scales)."""
-    n = x.size
+def compressed_nbytes(n: int, block: int = BLOCK) -> int:
+    """Wire size of an ``n``-element tensor after 8-bit compression: one
+    int8 code per element + one f32 scale per (ceil-divided) block.  The
+    analytic cost model (``repro.models.flops.boundary_bytes``) delegates
+    here so simulated bytes always match this module's output."""
     nb = -(-n // block)
     return n + 4 * nb
+
+
+def compressed_bytes(x: jax.Array, block: int = BLOCK) -> int:
+    """Wire size after 8-bit compression (codes + per-block f32 scales)."""
+    return compressed_nbytes(x.size, block)

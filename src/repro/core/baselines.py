@@ -29,6 +29,9 @@ def _stage_times(cfg: ArchConfig, profile: DeviceProfile, seq: int,
     fpt = sum(F.per_token_layer_flops(cfg, k, ctx)
               for k in cfg.block_kinds[:per])
     t_c = profile.compute_time(3.0 * fpt * seq * microbatch)   # fwd+bwd
+    # boundary_bytes resolves the REAL per-codec wire size (int8 block
+    # scales, cfg.bottleneck_dim / maxout k) — baseline-vs-SWARM tables
+    # therefore compare identical wire-byte assumptions for every mode
     nbytes = F.boundary_bytes(cfg, microbatch, seq, compress)
     t_n = 2 * (profile.latency + nbytes / profile.up_bw)       # act + grad
     return t_c, t_n

@@ -5,6 +5,15 @@ LM head + loss (mirroring the paper's §4.3 placement).  Backward runs via
 activation checkpointing: a stage recomputes its forward from the boundary
 input it is handed, so backward can be re-routed to *any* peer of the stage
 after a failure (App. A).
+
+Under a learned boundary codec (paper App. J: ``compress="bottleneck"`` /
+``"maxout"``) each stage's program *includes* its side of the codec: a
+sending stage compresses its output (owning ``w_c`` for the bottleneck), a
+receiving stage decompresses its input (owning ``w_d``) — so the tensor a
+trainer carries between peers IS the c-dim wire tensor, and codec gradients
+arrive through the ordinary per-stage ``bwd`` like any other parameter.
+``"int8"`` stays outside the programs (the trainer round-trips the wire
+tensor), matching SWARM's quantize-on-send.
 """
 from __future__ import annotations
 
@@ -15,6 +24,7 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.compression import codecs
 from repro.models.config import ArchConfig
 from repro.models import params as P
 from repro.models import layers as L
@@ -49,10 +59,13 @@ def _stage_slice(cfg: ArchConfig, stage: int, n_stages: int):
     return cfg.block_kinds[lo:hi], False
 
 
-def build_stage_programs(cfg: ArchConfig, n_stages: int,
-                         seq_len: int) -> list[StageProgram]:
+def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
+                         compress: Optional[str] = None
+                         ) -> list[StageProgram]:
     assert cfg.n_layers % n_stages == 0
     assert cfg.encoder_layers == 0, "enc-dec archs use pod-DP (DESIGN §5)"
+    comp = codecs.resolve_mode(cfg, compress)
+    learned = comp in codecs.LEARNED and n_stages > 1
     programs = []
     for s in range(n_stages):
         kinds, shared = _stage_slice(cfg, s, n_stages)
@@ -73,6 +86,17 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int,
                 specs["head"] = P.ParamSpec(
                     (cfg.d_model, cfg.vocab_size), cfg.param_jdtype,
                     "normal", ("embed", "vocab"))
+        if learned:
+            # receiving side (w_d) for s > 0, sending side (w_c) for
+            # s < S-1; maxout's compress is param-free so its stage-0
+            # "boundary" tree is empty and omitted
+            bnd: Tree = {}
+            if s > 0:
+                bnd.update(codecs.receiver_specs(cfg, comp))
+            if s < n_stages - 1:
+                bnd.update(codecs.sender_specs(cfg, comp))
+            if bnd:
+                specs["boundary"] = bnd
 
         def run_blocks(params, x, _runs=runs, _reps=reps):
             positions = jnp.arange(x.shape[1])
@@ -97,7 +121,12 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int,
                     x = x * (cfg.d_model ** 0.5)
             else:
                 x = inp.astype(cfg.compute_jdtype)
+                if learned:          # wire tensor arrives c-dim: restore
+                    x = codecs.decompress(cfg, comp,
+                                          params.get("boundary"), x)
             x = _rb(params, x)
+            if learned and not _last:    # emit the c-dim wire tensor
+                x = codecs.compress(cfg, comp, params.get("boundary"), x)
             return x
 
         def stage_loss(params, inp, labels, _fwd=stage_fwd):
@@ -150,7 +179,10 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int,
         ctx = F._ctx_for(cfg, seq_len, causal_avg=True)
         layer_f = sum(F.per_token_layer_flops(cfg, k, ctx) for k in kinds)
         head_f = 2 * cfg.d_model * cfg.vocab_size if is_last else 0.0
-        fwd_f = layer_f + head_f
+        codec_f = codecs.codec_flops_per_token(
+            cfg, comp, sender=learned and not is_last,
+            receiver=learned and not is_first)
+        fwd_f = layer_f + head_f + codec_f
         programs.append(StageProgram(
             stage=s, n_stages=n_stages, specs=specs, fwd=fwd_j, bwd=bwd_j,
             fwd_flops_per_token=fwd_f,

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compression import codecs
 from repro.core.sim import Sim, Sleep, Spawn
 from repro.core.dht import DHT
 from repro.core.peer import Peer, DeviceProfile, PeerFailure, T4
@@ -48,7 +49,10 @@ class SwarmConfig:
     announce_interval: float = 120.0
     announce_ttl: float = 300.0
     wiring_gamma: float = 0.1            # EMA alpha (paper §4.3)
-    compress: bool = True                # 8-bit boundary compression
+    # boundary compression: False -> "none", True -> "int8" (back-compat
+    # booleans), or an explicit mode string incl. the learned codecs
+    # ("none" | "int8" | "bottleneck" | "maxout", paper App. J)
+    compress: bool | str = True
     quant_block: int = 64
     dpu: bool = False
     max_steps: Optional[int] = None
@@ -69,13 +73,18 @@ class SwarmRunner:
         self.dht = DHT(lambda: self.sim.now)
         self.n_stages = scfg.n_stages
         self.compress = scfg.compress
+        if isinstance(scfg.compress, bool):
+            self.compress_mode = "int8" if scfg.compress else "none"
+        else:
+            self.compress_mode = codecs.resolve_mode(cfg, scfg.compress)
         self.quant_block = scfg.quant_block
         self.rng = np.random.default_rng(seed)
         self.profile_fn = profile_fn or (lambda i: T4)
         self.data_fn = data_fn
 
         self.programs: list[StageProgram] = build_stage_programs(
-            cfg, scfg.n_stages, scfg.seq_len) if numeric else \
+            cfg, scfg.n_stages, scfg.seq_len,
+            compress=self.compress_mode) if numeric else \
             [None] * scfg.n_stages
         self._ref_params: Optional[list[Tree]] = None
         if numeric:
@@ -220,9 +229,11 @@ class SwarmRunner:
         return peer.profile.compute_time(fpt * mb.n_tokens)
 
     def boundary_nbytes(self, mb: Microbatch) -> float:
+        # one mode string end-to-end: the sim charges exactly the bytes the
+        # active codec puts on the wire (flops.boundary_bytes is the same
+        # formula bench_compression measures against the real tensors)
         return F.boundary_bytes(
-            self.cfg, mb.size, self.scfg.seq_len,
-            "int8" if self.compress else "none")
+            self.cfg, mb.size, self.scfg.seq_len, self.compress_mode)
 
     # ================================================== gradient sync
     def _stage_samples(self, s: int) -> int:

@@ -114,9 +114,13 @@ class Trainer:
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 acts[s] = inp
                 path[s] = peer
-                if numeric and s < S - 1:
-                    y = _roundtrip(y, swarm.quant_block) \
-                        if swarm.compress else y
+                # codec dispatch: int8 round-trips the wire tensor here (the
+                # trainer IS the wire); under a learned codec the stage
+                # program already emitted the compressed c-dim tensor, so
+                # ``y`` crosses as-is (repro.core.stage_model)
+                if numeric and s < S - 1 and \
+                        swarm.compress_mode == "int8":
+                    y = _roundtrip(y, swarm.quant_block)
                 x = y
                 s += 1
                 retries = 0
@@ -166,7 +170,11 @@ class Trainer:
                 gx = yield peer.submit("bwd", ct, thunk).wait()
                 yield Sleep(peer.profile.send_time(nbytes if s > 0 else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
-                if numeric and gx is not None and swarm.compress:
+                # backward wire: int8 quantizes the cotangent; learned
+                # codecs need nothing — the cotangent of a c-dim wire
+                # tensor is already c-dim
+                if numeric and gx is not None and \
+                        swarm.compress_mode == "int8":
                     gx = _roundtrip(gx, swarm.quant_block)
                 dy = gx
                 s -= 1

@@ -11,8 +11,9 @@ once chosen:
 * :mod:`repro.dist.sharding`  — logical-axis -> mesh-axis rules and the
   NamedSharding builders for params / train state / batches / caches.
 * :mod:`repro.dist.pipeline`  — the GSPMD shifting-buffer pipeline train
-  step over the ``pod`` mesh axis, with optional int8 boundary
-  compression (paper §3.1, App. J).
+  step over the ``pod`` mesh axis, with all four boundary-compression
+  modes — int8 and the learned bottleneck/maxout codecs, whose ``w_c`` /
+  ``w_d`` train jointly with the model (paper §3.1, App. J).
 
 Submodules are imported explicitly (``from repro.dist import sharding``)
 rather than re-exported here: ``repro.models`` imports

@@ -14,16 +14,26 @@ ingests microbatch ``t`` (embedded on the fly), slot ``S-1`` emits
 microbatch ``t - (S-1)`` into the loss.  Slots outside ``[0, M)`` compute
 garbage that is never read — the cost of the classic ``(S-1)/T`` bubble.
 
-Autodiff gives the reverse schedule for free: the transpose of ``roll``
-is the opposite rotation, so gradients pipeline backwards through the
-same buffer.  With ``compress="int8"`` every stage-boundary crossing is
-blockwise-quantized in BOTH directions (activations forward, cotangents
-backward) via :func:`repro.compression.quant8.compress_boundary` —
-exactly what SWARM puts on the wire (paper §4.3, App. J).
+Autodiff gives the reverse schedule for free: the transpose of the
+buffer shift is the opposite shift, so gradients pipeline backwards
+through the same buffer.  All four boundary-compression modes of
+``cfg.boundary_compression`` run here (paper §4.3, App. J):
 
-Equivalence to ``repro.train.steps.make_train_step`` (same loss, same
-gradients, within f32 tolerance) is enforced by
-``tests/test_distribution.py`` on a 2x2x2 host-device mesh.
+* ``int8`` — every live boundary crossing is blockwise-quantized in BOTH
+  directions (activations forward, cotangents backward) via
+  :func:`repro.compression.quant8.compress_boundary`;
+* ``bottleneck`` / ``maxout`` — the learned codecs: the buffer itself is
+  the wire, so it carries the compressed ``c``-dim tensor; sending stage
+  ``b`` compresses with ``w_c[b]``, receiving stage ``b+1`` decompresses
+  with ``w_d[b]`` (``params["boundary"]``, attached by
+  ``repro.train.steps.model_specs`` when ``cfg.pipeline_stages > 1``).
+  Both are ordinary trainable params: gradients flow into them through
+  the shifted buffer and the optimizer updates them with everything else.
+
+Equivalence to the plain step / to :func:`make_reference_loss_fn` (same
+loss, same gradients, within f32 tolerance) is enforced by
+``tests/test_distribution.py`` and ``tests/test_codecs.py`` on a 2x2x2
+host-device mesh.
 """
 from __future__ import annotations
 
@@ -33,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import _compat  # noqa: F401  (AxisType shim for older jax)
+from repro.compression import codecs
 from repro.compression import quant8
 from repro.dist.constrain import constrain
 from repro.models import model as model_lib
@@ -156,6 +167,35 @@ def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
     return stage_fn
 
 
+def _resolve_codec(cfg: ArchConfig, n_stages: int,
+                   compress: Optional[str]) -> str:
+    """Validated boundary-compression mode for an ``n_stages`` pipeline."""
+    comp = codecs.resolve_mode(cfg, compress)
+    if n_stages == 1:
+        return "none"                    # no boundaries to compress
+    if comp in codecs.LEARNED and cfg.pipeline_stages != n_stages:
+        raise ValueError(
+            f"{cfg.name}: compress={comp!r} needs one learned codec pair "
+            f"per boundary — set cfg.pipeline_stages={n_stages} (got "
+            f"{cfg.pipeline_stages}) so model_specs attaches "
+            "params['boundary']")
+    return comp
+
+
+def _boundary_params(params: Tree, comp: str, n_stages: int) -> Tree:
+    bparams = params.get("boundary")
+    if bparams is None:
+        raise ValueError(
+            f"compress={comp!r} but params carry no 'boundary' codec tree "
+            "— build the state from repro.train.steps.model_specs with "
+            "cfg.pipeline_stages set")
+    nb = jax.tree.leaves(bparams)[0].shape[0]
+    if nb != n_stages - 1:
+        raise ValueError(f"params['boundary'] holds {nb} codec pairs, "
+                         f"need {n_stages - 1} (one per boundary)")
+    return bparams
+
+
 def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
                              n_stages: int, n_microbatches: int, *,
                              remat: bool | str = True,
@@ -163,17 +203,16 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
     """Build ``(state, batch) -> (state, {"loss", "ce"})`` — the pipelined
     twin of ``steps.make_train_step``.
 
-    ``compress=None`` defers to ``cfg.boundary_compression``; ``"none"``
-    and ``"int8"`` are supported (the learned bottleneck/maxout codecs
-    live on the elastic path only).
+    ``compress=None`` defers to ``cfg.boundary_compression``; all four
+    modes run here — ``"none"``, ``"int8"``, and the learned
+    ``"bottleneck"`` / ``"maxout"`` codecs (which require
+    ``cfg.pipeline_stages == n_stages`` so the state carries
+    ``params["boundary"]``).
     """
     if not stage_periodic(cfg, n_stages):
         raise ValueError(f"{cfg.name}: layer stack is not periodic at "
                          f"{n_stages} stages (see stage_periodic)")
-    comp = cfg.boundary_compression if compress is None else compress
-    if comp not in ("none", "int8"):
-        raise ValueError(f"unsupported boundary compression {comp!r} for "
-                         "the GSPMD pipeline (use 'none' or 'int8')")
+    comp = _resolve_codec(cfg, n_stages, compress)
     do_remat = (remat != "none") if isinstance(remat, str) else bool(remat)
     stage_fn = _make_stage_fn(cfg, n_stages, do_remat)
     S_, M = n_stages, n_microbatches
@@ -199,6 +238,35 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
             lambda a: constrain(a, "pod", *([None] * (a.ndim - 1))), t)
             for t in _stage_blocks(cfg, params["blocks"], S_)]
         v_stage = jax.vmap(stage_fn, in_axes=(0, 0, 0, pos_axis))
+        bparams = (_boundary_params(params, comp, S_)
+                   if comp in codecs.LEARNED else None)
+        wdim = codecs.wire_dim(cfg, comp)
+
+        def encode(outs):
+            """LIVE stage outputs [S-1, mb, S, d] -> wire [S-1, mb, S, c].
+
+            Only ``out[:S-1]`` is encoded: the last stage's output would
+            land in slot 0 and be overwritten by ``ingest`` — compressing
+            that dead slot is pure waste (and would double-compress under
+            the learned codecs)."""
+            if comp == "int8":
+                return jax.vmap(quant8.compress_boundary)(outs)
+            if comp in codecs.LEARNED:       # boundary b uses w_c[b]
+                return jax.vmap(
+                    lambda p, x: codecs.compress(cfg, comp, p, x))(
+                        bparams, outs)
+            return outs
+
+        def decode(wire):
+            """Wire [S, mb, S, c] -> stage inputs [S, mb, S, d].  Slot 0
+            is dead (overwritten by ``ingest`` right after); slot ``s >=
+            1`` decompresses boundary ``s-1`` with ``w_d[s-1]``."""
+            if comp not in codecs.LEARNED:
+                return wire                  # none/int8: wire is d-dim
+            x = jax.vmap(lambda p, z: codecs.decompress(cfg, comp, p, z))(
+                bparams, wire[1:])
+            full = jnp.zeros(wire.shape[:-1] + (cfg.d_model,), wire.dtype)
+            return full.at[1:].set(x)
 
         def ingest(t):
             """Embed the microbatch entering slot 0 at tick ``t``."""
@@ -207,11 +275,13 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
             return constrain(x, "data", None, None)
 
         def tick(carry, t):
-            buf, aux_buf, ces, auxs = carry
-            buf = constrain(buf, "pod", "data", None, None)
+            wire, aux_buf, ces, auxs = carry
+            wire = constrain(wire, "pod", "data", None, None)
+            x = decode(wire).at[0].set(ingest(t))
+            x = constrain(x, "pod", "data", None, None)
             pos = (pos_mb if pos_axis is None
                    else pos_mb[jnp.clip(t - jnp.arange(S_), 0, M - 1)])
-            out, aux_out = v_stage(stage_blocks, buf, aux_buf, pos)
+            out, aux_out = v_stage(stage_blocks, x, aux_buf, pos)
             # the final stage owns the head: no boundary crossing here
             idx = jnp.clip(t - (S_ - 1), 0, M - 1)
             logits = model_lib.head(cfg, params, out[-1],
@@ -222,20 +292,22 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
             # warm-up ticks (t < S-1) write garbage into slot 0 of ces/auxs;
             # the true microbatch-0 write at t == S-1 overwrites it, and the
             # scatter's transpose zeroes the dead cotangents.
-            if comp == "int8":
-                out = jax.vmap(quant8.compress_boundary)(out)
-            buf = jnp.roll(out, 1, axis=0).at[0].set(ingest(t + 1))
+            #
+            # Shift out[s] -> slot s+1 as a static-index update-slice (the
+            # same construction _restack uses; a roll of the full buffer
+            # would drag the dead last-stage output along for the ride).
+            wire = jnp.zeros((S_, mb, S, wdim), out.dtype)
+            wire = wire.at[1:].set(encode(out[:S_ - 1]))
             aux_buf = jnp.roll(aux_out, 1, 0).at[0].set(0.0)
-            buf = constrain(buf, "pod", "data", None, None)
-            return (buf, aux_buf, ces, auxs), None
+            wire = constrain(wire, "pod", "data", None, None)
+            return (wire, aux_buf, ces, auxs), None
 
         if do_remat:
             tick = jax.checkpoint(
                 tick, policy=jax.checkpoint_policies.nothing_saveable)
 
-        buf0 = jnp.zeros((S_, mb, S, cfg.d_model), cfg.compute_jdtype)
-        buf0 = buf0.at[0].set(ingest(jnp.zeros((), jnp.int32)))
-        carry0 = (buf0, jnp.zeros((S_,), jnp.float32),
+        wire0 = jnp.zeros((S_, mb, S, wdim), cfg.compute_jdtype)
+        carry0 = (wire0, jnp.zeros((S_,), jnp.float32),
                   jnp.zeros((M,), jnp.float32), jnp.zeros((M,), jnp.float32))
         (_, _, ces, auxs), _ = jax.lax.scan(
             tick, carry0, jnp.arange(M + S_ - 1))
@@ -254,3 +326,66 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
                 {"loss": loss, "ce": ce})
 
     return train_step
+
+
+def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
+                           n_microbatches: int, *,
+                           compress: Optional[str] = None):
+    """Sequential single-device twin of the pipelined loss: the SAME staged
+    computation — per-microbatch stage chain with the identical boundary
+    codec applied between consecutive stages — but with no vmap, no buffer
+    shift and no bubble.  This is the equivalence oracle the codec tests
+    compare :func:`make_pipeline_train_step` against (and the math the
+    elastic path in ``repro.core`` executes peer-by-peer)."""
+    if not stage_periodic(cfg, n_stages):
+        raise ValueError(f"{cfg.name}: layer stack is not periodic at "
+                         f"{n_stages} stages (see stage_periodic)")
+    comp = _resolve_codec(cfg, n_stages, compress)
+    stage_fn = _make_stage_fn(cfg, n_stages, remat=False)
+    M = n_microbatches
+
+    from repro.train import steps as steps_lib   # lazy: steps imports models
+
+    def crossing(bparams, b: int, x: jax.Array) -> jax.Array:
+        """What boundary ``b`` (stage b -> b+1) does to the activation."""
+        if comp == "int8":
+            return quant8.compress_boundary(x)
+        if comp in codecs.LEARNED:
+            pb = jax.tree.map(lambda a: a[b], bparams)
+            return codecs.decompress(
+                cfg, comp, pb, codecs.compress(cfg, comp, pb, x))
+        return x
+
+    def loss_fn(params: Tree, batch: Tree):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, S = tokens.shape
+        if B % M:
+            raise ValueError(f"batch {B} not divisible by {M} microbatches")
+        mb = B // M
+        stage_blocks = _stage_blocks(cfg, params["blocks"], n_stages)
+        bparams = (_boundary_params(params, comp, n_stages)
+                   if comp in codecs.LEARNED else None)
+        ces, auxs = [], []
+        for m in range(M):
+            tok = tokens.reshape(M, mb, S)[m]
+            lab = labels.reshape(M, mb, S)[m]
+            if "positions" in batch:                   # mrope: [3, B, S]
+                p = batch["positions"]
+                pos = p.reshape(p.shape[0], M, mb, S)[:, m]
+            else:
+                pos = model_lib.default_positions(cfg, mb, S)
+            x = model_lib.embed(cfg, params, tok, batch_axes=("data",))
+            aux = jnp.zeros((), jnp.float32)
+            for s in range(n_stages):
+                blocks_s = [jax.tree.map(lambda a: a[s], t)
+                            for t in stage_blocks]
+                x, aux = stage_fn(blocks_s, x, aux, pos)
+                if s < n_stages - 1:
+                    x = crossing(bparams, s, x)
+            logits = model_lib.head(cfg, params, x, batch_axes=("data",))
+            ces.append(steps_lib.cross_entropy(logits, lab))
+            auxs.append(aux)
+        ce = jnp.mean(jnp.stack(ces))
+        return ce + jnp.mean(jnp.stack(auxs)), ce
+
+    return loss_fn

@@ -68,7 +68,8 @@ DEFAULT_RULES = ShardingRules(rules={
     "expert_mlp": None,
     "kv_lora": None,
     "q_lora": None,
-    "bottleneck": None,
+    "bottleneck": "model",    # codec wire dim: TP like "mlp" (w_c/w_d are
+                              # [embed, bottleneck] / [bottleneck, embed])
     "state": None,
     "conv": None,
     "pos": None,

@@ -239,6 +239,7 @@ def main():
                    if args.force or not os.path.exists(artifact_path(a, s, m))]
         print(f"{len(pending)} cells to run, {args.jobs} workers")
         procs: list = []
+        n_fail = 0
         while pending or procs:
             while pending and len(procs) < args.jobs:
                 a, s, m = pending.pop(0)
@@ -254,11 +255,14 @@ def main():
                     tag = "OK" if p.returncode == 0 else "FAIL"
                     print(f"[{tag}] {cell}")
                     if p.returncode != 0:
+                        n_fail += 1
                         sys.stderr.write(p.stderr.read().decode()[-2000:])
             for i in reversed(done):
                 procs.pop(i)
             time.sleep(0.5)
-        return
+        # propagate worker failures so CI lanes (the weekly --all sweep)
+        # actually gate on the sweep, mirroring the sequential branch below
+        sys.exit(1 if n_fail else 0)
 
     n_fail = 0
     for a, s, m in cells:

@@ -77,7 +77,12 @@ class ArchConfig:
     compute_dtype: str = "bfloat16"
     # --- SWARM integration (paper technique knobs) ---
     boundary_compression: str = "int8"   # none | int8 | bottleneck | maxout
-    bottleneck_dim: int = 0
+    bottleneck_dim: int = 0          # learned-codec wire width c (0 => d/2)
+    maxout_k: int = 0                # maxout pool width (0 => derived; see
+                                     # repro.compression.codecs.maxout_k)
+    pipeline_stages: int = 0         # declared pipeline depth: >1 attaches
+                                     # the stage-stacked learned-codec params
+                                     # to model_specs (one pair per boundary)
     # --- max positions for serving ---
     max_seq_len: int = 1 << 20
 
@@ -153,4 +158,8 @@ def reduced(cfg: ArchConfig) -> ArchConfig:
         kw["block_pattern"] = cfg.block_pattern[:n_layers]
     if cfg.share_groups:
         kw["share_groups"] = n_layers  # one layer per group in smoke tests
+    if cfg.bottleneck_dim:
+        kw["bottleneck_dim"] = 32      # preserve the 64 -> c compression
+    if cfg.pipeline_stages:
+        kw["pipeline_stages"] = 2      # match the reduced 2-layer stack
     return cfg.with_overrides(**kw)

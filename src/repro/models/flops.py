@@ -152,13 +152,24 @@ def model_flops_6nd(n_active_params: float, tokens: float) -> float:
 
 def boundary_bytes(cfg: ArchConfig, batch: int, seq: int,
                    compression: str = "none") -> float:
-    """Bytes crossing one pipeline-stage boundary, one direction."""
-    n = batch * seq * cfg.d_model
+    """Bytes crossing one pipeline-stage boundary, one direction.
+
+    Per-codec wire formulas (T = batch * seq tokens, d = d_model, 2-byte
+    bf16 wire elements; one source of truth with what the execution paths
+    actually emit — asserted by ``benchmarks/bench_compression.py``):
+
+    * ``none``        2 * T * d
+    * ``int8``        ``quant8.compressed_nbytes(T * d)``
+                      = T*d codes + 4 bytes per ceil(T*d / BLOCK) block
+    * ``bottleneck``  2 * T * c,       c = ``cfg.bottleneck_dim`` (0 => d/2)
+    * ``maxout``      2 * T * (d / k), k = ``cfg.maxout_k`` (0 => derived —
+                      see ``repro.compression.codecs.maxout_k``)
+    """
+    from repro.compression import codecs, quant8   # lazy: keep module light
+    tokens = batch * seq
     if compression == "int8":
-        return n * 1.0 + 4.0 * (n / 64)          # codes + scales
-    if compression in ("bottleneck", "maxout"):
-        return n * 2 / 2.0                       # 2x feature compression, bf16
-    return n * 2.0                               # bf16
+        return float(quant8.compressed_nbytes(tokens * cfg.d_model))
+    return 2.0 * tokens * codecs.wire_dim(cfg, compression)
 
 
 def active_params(cfg: ArchConfig) -> float:

@@ -40,7 +40,18 @@ def cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
 def model_specs(cfg: ArchConfig) -> Tree:
     if cfg.family == "audio":
         return whisper_lib.whisper_specs(cfg)
-    return model_lib.lm_specs(cfg)
+    specs = model_lib.lm_specs(cfg)
+    # configs that declare a pipeline depth + a learned boundary codec own
+    # one (w_c, w_d) pair per stage boundary as first-class trainable
+    # params — the GSPMD pipeline consumes them; the plain step carries
+    # them with zero GRADIENTS (same tree shape through both paths), but
+    # the optimizer still applies weight decay to them — don't train a
+    # codec config through the plain step and expect pristine codecs
+    from repro.compression import codecs   # lazy: codecs imports params
+    boundary = codecs.pipeline_boundary_specs(cfg)
+    if boundary is not None:
+        specs["boundary"] = boundary
+    return specs
 
 
 def make_loss_fn(cfg: ArchConfig, remat: bool | str = True):
