@@ -1,6 +1,10 @@
 """Paper Table 5 / Fig. 5 / Fig. 7: adaptive rebalancing vs no rebalancing
 vs the always-optimal assignment, replaying a preemption trace; plus the
-Fig. 7 scaling-in-stages study."""
+Fig. 7 scaling-in-stages study.
+
+``recomputed=`` in the output is the microbatch ledger's count of
+re-issued (recomputed) microbatches — the weekly sweep tracks it as the
+recompute overhead of exactly-once accounting under churn."""
 from __future__ import annotations
 
 import time
@@ -79,6 +83,7 @@ def run(csv=True):
         print(f"rebalance/{tag},0,overall={overall:.1f}% "
               f"last1h={last:.1f}%"
               f" migrations={r.metrics['migrations']}"
+              f" recomputed={r.metrics['recomputed_microbatches']}"
               f" paper_overall={p[0]}% paper_last={p[2]}%")
 
     # Fig. 7: scaling with number of stages (heavier churn so the

@@ -40,7 +40,9 @@ def main():
         print(f"{tag}: {r.throughput():.2f} samples/s, "
               f"{r.metrics['failures']} failures, "
               f"{r.metrics['joins']} joins, "
-              f"{r.metrics['migrations']} migrations")
+              f"{r.metrics['migrations']} migrations, "
+              f"{r.metrics['recomputed_microbatches']} recomputed "
+              f"microbatches (exactly-once ledger)")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ faults supplies the preemption traces of §4.4/App. I.
 """
 from repro.core.sim import Sim, Sleep, Event, Resource
 from repro.core.dht import DHT
+from repro.core.ledger import MicrobatchLedger
 from repro.core.wiring import StochasticWiring
 from repro.core.rebalance import plan_migration, optimal_assignment, \
     pipeline_throughput, Migration
@@ -14,7 +15,8 @@ from repro.core.swarm import SwarmRunner, SwarmConfig
 from repro.core.faults import synth_preemptible_trace, TraceEvent
 
 __all__ = [
-    "Sim", "Sleep", "Event", "Resource", "DHT", "StochasticWiring",
+    "Sim", "Sleep", "Event", "Resource", "DHT", "MicrobatchLedger",
+    "StochasticWiring",
     "plan_migration", "optimal_assignment", "pipeline_throughput",
     "Migration", "Peer", "DeviceProfile", "PeerFailure", "T4", "V100",
     "A100", "SwarmRunner", "SwarmConfig", "synth_preemptible_trace",

@@ -60,7 +60,6 @@ class StageState:
     params: Tree = None
     opt: Tree = None
     grad_acc: Tree = None
-    sample_count: int = 0
     loss_sum: float = 0.0
     token_count: int = 0
     version: int = 0
@@ -68,7 +67,6 @@ class StageState:
     def zero_grads(self):
         if self.grad_acc is not None:
             self.grad_acc = jax.tree.map(jnp.zeros_like, self.grad_acc)
-        self.sample_count = 0
         self.loss_sum = 0.0
         self.token_count = 0
 
@@ -92,18 +90,24 @@ class Peer:
         self.profile = profile
         self.stage = stage
         self.alive = True
+        # serving=False while the peer downloads stage state (a joining
+        # or migrating peer must never serve stale params); routing and
+        # submit both refuse non-serving peers
+        self.serving = True
         self.state = StageState()
         self._tasks: list[_Task] = []
         self._wake = sim.event()
+        self._epoch = 0               # bumped by drain(): voids queued work
+        self._generation = 0          # bumped by revive(): retires executor
         self.busy_time = 0.0          # for utilization metrics
         self.spawn_executor()
 
     # ------------------------------------------------------------ executor
     def spawn_executor(self):
-        self.sim.spawn(self._executor())
+        self.sim.spawn(self._executor(self._generation))
 
-    def _executor(self):
-        while self.alive:
+    def _executor(self, gen: int):
+        while self.alive and gen == self._generation:
             if not self._tasks:
                 self._wake = self.sim.event()
                 try:
@@ -112,10 +116,14 @@ class Peer:
                     return
                 continue
             task = self._tasks.pop(0)
+            epoch = self._epoch
             yield Sleep(task.compute_time)
-            if not self.alive:          # died mid-compute
-                task.done.fail(PeerFailure(self.id))
+            if not self.alive or gen != self._generation:
+                task.done.fail(PeerFailure(self.id))   # died mid-compute
                 return
+            if epoch != self._epoch:    # drained mid-compute (migration)
+                task.done.fail(PeerFailure(self.id))
+                continue
             self.busy_time += task.compute_time
             try:
                 result = task.payload()
@@ -129,8 +137,9 @@ class Peer:
 
     def submit(self, kind: str, compute_time: float,
                thunk: Callable[[], Any]) -> Event:
-        """Enqueue work; returns completion Event (fails on peer death)."""
-        if not self.alive:
+        """Enqueue work; returns completion Event (fails on peer death
+        and while the peer is downloading state, i.e. not serving)."""
+        if not self.alive or not self.serving:
             ev = self.sim.event()
             ev.fail(PeerFailure(self.id))
             return ev
@@ -143,18 +152,37 @@ class Peer:
     # ------------------------------------------------------------ failure
     def fail(self):
         self.alive = False
+        self.serving = False
         for t in self._tasks:
             t.done.fail(PeerFailure(self.id))
         self._tasks.clear()
         if not self._wake.fired:
             self._wake.fail(Interrupt())
 
+    def drain(self):
+        """Fail every queued and in-compute task without killing the
+        peer — trainers observe PeerFailure and re-route (App. A).  Used
+        when a migration retires the peer's current stage: queued thunks
+        were built against the old stage's params and must never execute
+        against the newly adopted state."""
+        self._epoch += 1
+        for t in self._tasks:
+            t.done.fail(PeerFailure(self.id))
+        self._tasks.clear()
+
     def revive(self, stage: int):
-        """Rejoin (a fresh preemptible instance reusing this peer object)."""
+        """Rejoin (a fresh preemptible instance reusing this peer
+        object): reset state and restart the executor.  The swarm that
+        revives a peer is responsible for the warm join — download the
+        stage state, re-announce in the DHT, and re-spawn the announcer
+        (see ``SwarmRunner._join_new_peer``)."""
         self.alive = True
+        self.serving = True
         self.stage = stage
         self.state = StageState()
         self._tasks = []
+        self._epoch += 1
+        self._generation += 1        # retire any executor still parked
         self._wake = self.sim.event()
         self.spawn_executor()
 
@@ -174,6 +202,5 @@ class Peer:
         self.state.grad_acc = (jax.tree.map(jnp.zeros_like,
                                             donor.state.params)
                                if donor.state.params is not None else None)
-        self.state.sample_count = 0
         self.state.loss_sum = 0.0
         self.state.token_count = 0

@@ -3,8 +3,12 @@
 Composition (paper Fig. 2): consecutive swarms of peers serve pipeline
 stages; trainer processes route microbatches via stochastic wiring; a DHT
 carries liveness + load; adaptive rebalancing migrates peers between
-stages; once the global batch is accumulated, every stage All-Reduces its
+stages; once the microbatch ledger (repro.core.ledger) shows the global
+batch accumulated exactly once at every stage, each stage All-Reduces its
 gradients and applies the (optionally delayed, DPU) optimizer step.
+Gradients lost to dead or migrating peers are recomputed by survivors
+under the same microbatch indices, so an optimizer step under churn
+averages the identical sample set as fault-free training (App. A).
 
 Two modes:
   numeric=True   — real JAX math per stage (convergence experiments,
@@ -24,6 +28,7 @@ import numpy as np
 from repro.compression import codecs
 from repro.core.sim import Sim, Sleep, Spawn
 from repro.core.dht import DHT
+from repro.core.ledger import MicrobatchLedger
 from repro.core.peer import Peer, DeviceProfile, PeerFailure, T4
 from repro.core.wiring import StochasticWiring
 from repro.core.trainer import Trainer, Microbatch
@@ -57,6 +62,7 @@ class SwarmConfig:
     dpu: bool = False
     max_steps: Optional[int] = None
     allreduce_bw: float = 50e6           # bytes/s effective per peer
+    trainer_max_retries: int = 50        # per-attempt routing retries
 
 
 class SwarmRunner:
@@ -64,7 +70,9 @@ class SwarmRunner:
                  optimizer: Optimizer, *, numeric: bool = True,
                  seed: int = 0,
                  profile_fn: Optional[Callable[[int], DeviceProfile]] = None,
-                 data_fn: Optional[Callable[[int], dict]] = None):
+                 data_fn: Optional[Callable[[int], dict]] = None,
+                 programs: Optional[list[StageProgram]] = None,
+                 record_accumulation: bool = False):
         self.cfg = cfg
         self.scfg = scfg
         self.optimizer = optimizer
@@ -82,10 +90,16 @@ class SwarmRunner:
         self.profile_fn = profile_fn or (lambda i: T4)
         self.data_fn = data_fn
 
-        self.programs: list[StageProgram] = build_stage_programs(
-            cfg, scfg.n_stages, scfg.seq_len,
-            compress=self.compress_mode) if numeric else \
-            [None] * scfg.n_stages
+        # programs may be injected (pre-jitted, e.g. shared across the
+        # seed matrix of the churn tests); params re-init from `seed`
+        if programs is not None:
+            assert len(programs) == scfg.n_stages
+            self.programs: list[StageProgram] = programs
+        else:
+            self.programs = build_stage_programs(
+                cfg, scfg.n_stages, scfg.seq_len,
+                compress=self.compress_mode) if numeric else \
+                [None] * scfg.n_stages
         self._ref_params: Optional[list[Tree]] = None
         if numeric:
             self._ref_params = init_stage_params(
@@ -101,8 +115,17 @@ class SwarmRunner:
         self._mb_counter = 0
         self._inflight = 0
         self._dispatch_paused = False
-        self._round_dispatched = 0           # samples handed out this round
         self.step = 0
+        # exactly-once accounting (App. A): which (stage, microbatch)
+        # pairs of the current round are held, and by whom
+        self.ledger = MicrobatchLedger(scfg.n_stages)
+        # optional audit trail, as (kind, step, stage, index, attempt,
+        # peer_id) with kind in {"acc", "rel", "step"}: every applied
+        # accumulation, every release (grads dying with a failed or
+        # migrating peer), and an All-Reduce barrier marker — the churn
+        # tests replay it to assert the exactly-once invariant
+        self.record_accumulation = record_accumulation
+        self.ledger_log: list[tuple[str, int, int, int, int, str]] = []
         self.metrics: dict[str, list] = {
             "loss": [], "step_time": [], "samples_done": [],
             "throughput_t": [], "throughput_v": [], "migrations": 0,
@@ -110,19 +133,20 @@ class SwarmRunner:
         }
         self._samples_done_total = 0
         self._flops_per_sample_total = 0.0
+        self._open_round()
 
     # ================================================== setup
     def add_peer(self, stage: int, profile: Optional[DeviceProfile] = None
                  ) -> Peer:
+        """Cold-start a peer (initial ``build``): at step 0 the reference
+        params ARE current, so announcing immediately is safe.  Mid-run
+        joins go through ``_join_new_peer``, which downloads the stage
+        state *before* announcing (warm join)."""
         peer = Peer(self.sim, profile or self.profile_fn(len(self.peers)),
                     stage)
         self.peers[peer.id] = peer
         if self.numeric:
-            peer.state.params = jax.tree.map(lambda x: x,
-                                             self._ref_params[stage])
-            peer.state.opt = jax.tree.map(lambda x: x, self._ref_opt[stage])
-            peer.state.grad_acc = jax.tree.map(jnp.zeros_like,
-                                               peer.state.params)
+            self._restore_from_checkpoint(peer, stage)
         self._announce(peer)
         for w in self.wirings:
             w.add_server(peer.id, [stage])
@@ -143,7 +167,8 @@ class SwarmRunner:
                 if p.alive:
                     w.add_server(pid, [p.stage])
             self.wirings.append(w)
-            t = Trainer(self.sim, self, w, f"trainer{i}")
+            t = Trainer(self.sim, self, w, f"trainer{i}",
+                        max_retries=self.scfg.trainer_max_retries)
             self.trainers.append(t)
             self.sim.spawn(t.run())
         self.sim.spawn(self._sync_loop())
@@ -156,8 +181,10 @@ class SwarmRunner:
                        self.scfg.announce_ttl)
 
     def _announcer(self, peer: Peer):
-        while peer.alive and not self.stopped:
-            self._announce(peer)
+        gen = peer._generation
+        while peer.alive and peer._generation == gen and not self.stopped:
+            if peer.serving:          # no announcements mid-download
+                self._announce(peer)
             yield Sleep(self.scfg.announce_interval)
 
     def announced_stages(self) -> dict[str, int]:
@@ -165,27 +192,37 @@ class SwarmRunner:
         for s in range(self.n_stages):
             for pid, rec in self.dht.get(self.dht.stage_key(s)).items():
                 peer = self.peers.get(pid)
-                if peer is not None and peer.alive and peer.stage == s:
+                if peer is not None and peer.alive and peer.serving \
+                        and peer.stage == s:
                     out[pid] = s
         return out
 
     # ================================================== data / dispatch
+    def _open_round(self):
+        """Fix the next round's sample set: exactly ``global_batch``
+        samples (App. E synchronous semantics).  Lost samples re-issue
+        under the *same* index, so the per-step sample set is identical
+        to fault-free training."""
+        K = self.scfg.global_batch // max(self.scfg.microbatch_size, 1)
+        self.ledger.open_round(
+            range(self._mb_counter, self._mb_counter + K))
+        self._mb_counter += K
+
     def next_microbatch(self) -> Optional[Microbatch]:
-        """Hand out work while the current round's global batch is short —
-        SWARM accumulates *exactly* ``global_batch`` samples per optimizer
-        step (App. E: synchronous semantics), re-issuing samples lost to
-        dead peers."""
+        """Hand out work while some stage of the current round is short —
+        the ledger re-issues exactly the indices whose gradients died
+        with failed or migrated peers (App. A)."""
         if self.stopped or self._dispatch_paused:
             return None
-        if self._round_dispatched + self.scfg.microbatch_size \
-                > self.scfg.global_batch:
+        nxt = self.ledger.next_index()
+        if nxt is None:
             return None
-        self._round_dispatched += self.scfg.microbatch_size
-        idx = self._mb_counter
-        self._mb_counter += 1
+        idx, attempt = nxt
+        if attempt > 1:
+            self.metrics["recomputed_microbatches"] += 1
         self._inflight += 1
         b, S = self.scfg.microbatch_size, self.scfg.seq_len
-        mb = Microbatch(index=idx, size=b, n_tokens=b * S)
+        mb = Microbatch(index=idx, size=b, n_tokens=b * S, attempt=attempt)
         if self.numeric:
             batch = (self.data_fn(idx) if self.data_fn else
                      self._default_data(idx))
@@ -200,14 +237,13 @@ class SwarmRunner:
 
     def microbatch_done(self, mb: Microbatch, ok: bool):
         self._inflight -= 1
+        # the ledger re-queues the index iff some stage still lacks it
+        # (failed attempt, or a holder died mid-flight)
+        self.ledger.settle(mb.index)
         if ok:
             self._samples_done_total += mb.size
             self.metrics["throughput_t"].append(self.sim.now)
             self.metrics["throughput_v"].append(self._samples_done_total)
-        else:
-            # the microbatch never landed anywhere: free its budget so a
-            # replacement sample is dispatched (App. A)
-            self._round_dispatched -= mb.size
 
     # ================================================== cost model
     def compute_time(self, peer: Peer, kind: str, stage: int,
@@ -236,64 +272,73 @@ class SwarmRunner:
             self.cfg, mb.size, self.scfg.seq_len, self.compress_mode)
 
     # ================================================== gradient sync
-    def _stage_samples(self, s: int) -> int:
-        return sum(p.state.sample_count for p in self.peers.values()
-                   if p.alive and p.stage == s)
-
     def accumulate(self, peer: Peer, gp: Optional[Tree], mb: Microbatch,
-                   loss: Optional[float]):
+                   loss: Optional[float], stage: Optional[int] = None
+                   ) -> bool:
+        """Fold a microbatch gradient into ``peer``'s accumulator —
+        exactly once per (stage, index) per round.  A re-issued attempt
+        falls through for the stages that already hold the gradient
+        (re-running backward with unchanged params reproduces it
+        bit-for-bit, so skipping is exact)."""
+        s = peer.stage if stage is None else stage
+        if not self.ledger.record(s, mb.index, peer.id):
+            return False
+        if self.record_accumulation:
+            self.ledger_log.append(
+                ("acc", self.step, s, mb.index, mb.attempt, peer.id))
         st = peer.state
         if gp is not None:
             st.grad_acc = jax.tree.map(
                 lambda a, g: a + g.astype(a.dtype), st.grad_acc, gp)
-        st.sample_count += mb.size
         st.token_count += mb.n_tokens
         if loss is not None:
             st.loss_sum += loss
+        return True
 
     def _sync_loop(self):
-        """Trigger All-Reduce + optimizer step when global batch reached."""
-        gb = self.scfg.global_batch
+        """Trigger All-Reduce + optimizer step when the ledger shows the
+        full global batch accumulated at every stage.  Lost indices are
+        re-issued by ``next_microbatch`` (via the ledger) concurrently —
+        there is no separate recompute budget to over- or under-open."""
         while not self.stopped:
-            short = min(self._stage_samples(s)
-                        for s in range(self.n_stages))
-            if short < gb:
-                # App. A: samples whose gradients died with a failed peer
-                # must be recomputed by survivors — when the dispatch
-                # budget is spent and nothing is in flight, re-open it
-                if self._inflight == 0 and self._round_dispatched >= gb:
-                    self.metrics["recomputed_microbatches"] += \
-                        (gb - short) // max(self.scfg.microbatch_size, 1)
-                    self._round_dispatched = short
+            # barrier: every stage holds every index AND nothing is in
+            # flight (an in-flight re-issue may still run stale thunks
+            # whose accumulations must land in *this* round)
+            if not self.ledger.complete() or self._inflight > 0:
                 yield Sleep(0.2)
                 continue
-            # barrier: stop dispatch, drain in-flight microbatches
             self._dispatch_paused = True
-            while self._inflight > 0:
-                yield Sleep(0.1)
-            # lost-gradient check (App. A): a stage may have lost samples
-            # with dead peers — survivors recompute (dispatch resumes below)
-            short = min(self._stage_samples(s) for s in range(self.n_stages))
-            if short < gb:
-                self.metrics["recomputed_microbatches"] += (gb - short) \
-                    // max(self.scfg.microbatch_size, 1)
-                self._round_dispatched = short
-                self._dispatch_paused = False
-                continue
             t0 = self.sim.now
             yield from self._all_reduce_and_step()
             self.metrics["step_time"].append(self.sim.now - t0)
-            self._round_dispatched = 0
+            self._open_round()
             self._dispatch_paused = False
             if (self.scfg.max_steps is not None
                     and self.step >= self.scfg.max_steps):
                 self.stopped = True
 
+    def _log_releases(self, lost: list[tuple[int, int]], peer_id: str):
+        if self.record_accumulation:
+            for s, i in lost:
+                self.ledger_log.append(("rel", self.step, s, i, 0, peer_id))
+
     def _all_reduce_and_step(self):
-        """Per-stage ring All-Reduce (time) + optimizer step (numerics)."""
+        """Per-stage ring All-Reduce (time) + optimizer step (numerics).
+
+        All numerics are computed at the barrier instant (no yields in
+        the snapshot loop): failures landing inside the All-Reduce
+        window cannot retroactively remove gradients from a step that
+        already observed the complete global batch.  Migrations and
+        state adoptions defer until the window closes (see ``_migrate``
+        / ``_download_state``)."""
+        if self.record_accumulation:
+            self.ledger_log.append(("step", self.step, -1, -1, 0, ""))
+        plan = []
         for s in range(self.n_stages):
+            # non-serving peers are mid-download: stale params, drained
+            # grads — they adopt the stepped state when the download ends
             group = [p for p in self.peers.values()
-                     if p.alive and p.stage == s]
+                     if p.alive and p.serving and p.stage == s]
             if not group:
                 continue
             k = len(group)
@@ -302,31 +347,33 @@ class SwarmRunner:
                 nbytes = 2.0 * F.total_params(self.cfg) / self.n_stages
             ar_time = (2 * (k - 1) / max(k, 1)) * nbytes \
                 / self.scfg.allreduce_bw + 0.01 * k
+            new_params = new_opt = None
+            if self.numeric:
+                # average gradients over the stage (token-weighted)
+                total_tokens = sum(p.state.token_count for p in group)
+                gsum = group[0].state.grad_acc
+                for p in group[1:]:
+                    gsum = jax.tree.map(lambda a, b: a + b, gsum,
+                                        p.state.grad_acc)
+                gmean = jax.tree.map(lambda g: g / max(total_tokens, 1),
+                                     gsum)
+                params, opt = group[0].state.params, group[0].state.opt
+                updates, new_opt = self.optimizer.update(gmean, opt, params)
+                new_params = jax.tree.map(
+                    lambda p, u: p + u.astype(p.dtype), params, updates)
+                loss_sum = sum(p.state.loss_sum for p in group)
+                if s == self.n_stages - 1 and total_tokens:
+                    self.metrics["loss"].append(loss_sum / total_tokens)
+            plan.append((group, ar_time, new_params, new_opt))
+        for group, ar_time, new_params, new_opt in plan:
             yield Sleep(ar_time)
-            if not self.numeric:
-                for p in group:
-                    p.state.zero_grads() if p.state.grad_acc is not None \
-                        else None
-                    p.state.sample_count = 0
-                continue
-            # average gradients over the stage (token-weighted sum / tokens)
-            total_tokens = sum(p.state.token_count for p in group)
-            gsum = group[0].state.grad_acc
-            for p in group[1:]:
-                gsum = jax.tree.map(lambda a, b: a + b, gsum,
-                                    p.state.grad_acc)
-            gmean = jax.tree.map(lambda g: g / max(total_tokens, 1), gsum)
-            params, opt = group[0].state.params, group[0].state.opt
-            updates, opt = self.optimizer.update(gmean, opt, params)
-            params = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
-                                  params, updates)
-            loss_sum = sum(p.state.loss_sum for p in group)
-            if s == self.n_stages - 1 and total_tokens:
-                self.metrics["loss"].append(loss_sum / total_tokens)
             for p in group:
-                p.state.params = params
-                p.state.opt = opt
-                p.state.version += 1
+                if not p.alive:      # died inside the ring: state is dead
+                    continue
+                if self.numeric:
+                    p.state.params = new_params
+                    p.state.opt = new_opt
+                    p.state.version += 1
                 p.state.zero_grads()
         self.step += 1
 
@@ -335,44 +382,104 @@ class SwarmRunner:
         T = self.scfg.rebalance_period
         while not self.stopped:
             yield Sleep(T)
-            # peers report queue sizes (Alg. 2 line 4)
+            # peers report queue sizes (Alg. 2 line 4); mid-download
+            # peers neither report nor qualify as migration donors
             for p in self.peers.values():
-                if p.alive:
+                if p.alive and p.serving:
                     self.dht.store(self.dht.load_key(p.stage), p.id,
                                    p.queue_size() + 1e-3, T * 1.5)
             pps = {s: [p.id for p in self.peers.values()
-                       if p.alive and p.stage == s]
+                       if p.alive and p.serving and p.stage == s]
                    for s in range(self.n_stages)}
             mig = rb.plan_migration(self.dht, self.n_stages, pps)
             if mig is None:
                 continue
             yield from self._migrate(self.peers[mig.peer], mig.dst_stage)
 
-    def _migrate(self, peer: Peer, dst: int):
-        """Stage switch: stop serving, download state, re-announce."""
-        donors = [p for p in self.peers.values()
-                  if p.alive and p.stage == dst and p is not peer]
-        src = peer.stage
-        peer.stage = dst                       # stops accepting src work
-        if donors and self.numeric:
+    def _restore_from_checkpoint(self, peer: Peer, stage: int):
+        """Stage died entirely: restore from the checkpointed reference."""
+        peer.state.params = jax.tree.map(
+            lambda x: x, self._ref_params[stage])
+        peer.state.opt = jax.tree.map(lambda x: x, self._ref_opt[stage])
+        peer.state.grad_acc = jax.tree.map(
+            jnp.zeros_like, peer.state.params)
+
+    def _download_state(self, peer: Peer, dst: int):
+        """Warm-state download: copy ``dst``'s replicated state from a
+        live serving neighbor (retrying if the donor dies mid-transfer),
+        falling back to the checkpoint when the stage has no survivors.
+        Returns with ``peer.state`` current for ``dst`` — or early if
+        the peer itself dies."""
+        if not self.numeric:           # timing-only state transfer
+            yield Sleep(1.0)
+            return
+        while True:
+            donors = [p for p in self.peers.values()
+                      if p.alive and p.serving and p.stage == dst
+                      and p is not peer]
+            if not donors:
+                yield Sleep(1.0)
+                if peer.alive and self._ref_params is not None:
+                    self._restore_from_checkpoint(peer, dst)
+                return
             donor = donors[0]
             yield Sleep(peer.profile.recv_time(donor.state_nbytes()))
-            peer.adopt_state_from(donor)
-        else:
-            yield Sleep(1.0)
-            if self.numeric and self._ref_params is not None and not donors:
-                # stage died entirely: restore from checkpointed reference
-                peer.state.params = jax.tree.map(
-                    lambda x: x, self._ref_params[dst])
-                peer.state.opt = jax.tree.map(lambda x: x,
-                                              self._ref_opt[dst])
-                peer.state.grad_acc = jax.tree.map(
-                    jnp.zeros_like, peer.state.params)
+            # adopt outside the All-Reduce window, or the joiner would
+            # capture pre-step params while the stage steps past it
+            while self._dispatch_paused and not self.stopped:
+                yield Sleep(0.05)
+            if not peer.alive:
+                return
+            if donor.alive and donor.serving and donor.stage == dst:
+                peer.adopt_state_from(donor)
+                return
+
+    def _complete_warm_join(self, peer: Peer, dst: int):
+        """Warm-join tail shared by migrations and joins: the state
+        download completes BEFORE the peer is announced or entered into
+        any wiring — a (re)joining peer must never serve stale params.
+        Returns False if the peer died mid-download."""
+        peer.serving = False
+        yield from self._download_state(peer, dst)
+        if not peer.alive:                     # preempted mid-download
+            return False
+        peer.serving = True
         self._announce(peer)
-        self.dht.delete(self.dht.load_key(src), peer.id)
         for w in self.wirings:
             w.move_server(peer.id, [dst])
-        self.metrics["migrations"] += 1
+        return True
+
+    def _migrate(self, peer: Peer, dst: int):
+        """Stage switch, in exactly-once order: stop serving, drain the
+        queued src-stage thunks (they must never execute against the
+        adopted dst params), release the ledger entries the peer's
+        gradients backed (survivors recompute those indices), download
+        the dst state — and only then re-announce and re-enter wirings."""
+        # never yank accumulated grads out of an in-progress All-Reduce
+        while self._dispatch_paused and not self.stopped:
+            yield Sleep(0.05)
+        if self.stopped or not peer.alive or not peer.serving:
+            return
+        # re-check after the deferral: the plan was made from an older
+        # snapshot, and leaving must not strand the source stage
+        if not any(q.alive and q.serving and q.stage == peer.stage
+                   and q is not peer for q in self.peers.values()):
+            return
+        src = peer.stage
+        peer.stage = dst                       # stops accepting src work
+        peer.serving = False
+        peer.drain()
+        self._log_releases([(src, i) for i in
+                            self.ledger.release_peer(src, peer.id)],
+                           peer.id)
+        peer.state.zero_grads()                # src grads die with the move
+        self.dht.delete(self.dht.stage_key(src), peer.id)
+        self.dht.delete(self.dht.load_key(src), peer.id)
+        for w in self.wirings:
+            w.ban_server(peer.id)
+        ok = yield from self._complete_warm_join(peer, dst)
+        if ok:
+            self.metrics["migrations"] += 1
 
     # ================================================== fault injection
     def apply_trace(self, trace: list[TraceEvent]):
@@ -394,14 +501,23 @@ class SwarmRunner:
 
     def _fail_random_peer(self):
         live = [p for p in self.peers.values() if p.alive]
+
+        def n_serving(s: int) -> int:
+            return sum(1 for q in live if q.serving and q.stage == s)
+        # never strand a stage: a serving peer may die only if a second
+        # serving peer covers its stage; a mid-download peer may die
+        # only if its target stage is still served by someone
         candidates = [p for p in live
-                      if sum(1 for q in live
-                             if q.stage == p.stage and q.alive) > 1]
+                      if (p.serving and n_serving(p.stage) > 1)
+                      or (not p.serving and n_serving(p.stage) >= 1)]
         if not candidates:
             return
         victim = candidates[self.rng.integers(len(candidates))]
         victim.fail()
         self.metrics["failures"] += 1
+        # the victim's accumulated gradients die with it: survivors
+        # recompute exactly the indices it held (App. A)
+        self._log_releases(self.ledger.release_all(victim.id), victim.id)
         for w in self.wirings:
             w.ban_server(victim.id)
         self.dht.delete(self.dht.stage_key(victim.stage), victim.id)
@@ -413,18 +529,22 @@ class SwarmRunner:
         loads = []
         for s in range(self.n_stages):
             group = [p for p in self.peers.values()
-                     if p.alive and p.stage == s]
+                     if p.alive and p.serving and p.stage == s]
             q = sum(p.queue_size() for p in group)
             loads.append((q + 1) / max(len(group), 1e-9))
         dst = int(np.argmax(loads))
-        peer = self.add_peer(dst)
+        # preemptible instances coming back reuse their peer object
+        dead = [p for p in self.peers.values() if not p.alive]
+        if dead:
+            peer = dead[0]
+            peer.revive(dst)
+        else:
+            peer = Peer(self.sim, self.profile_fn(len(self.peers)), dst)
+            self.peers[peer.id] = peer
         self.metrics["joins"] += 1
-        if self.numeric:
-            donors = [p for p in self.peers.values()
-                      if p.alive and p.stage == dst and p is not peer]
-            if donors:
-                yield Sleep(peer.profile.recv_time(donors[0].state_nbytes()))
-                peer.adopt_state_from(donors[0])
+        ok = yield from self._complete_warm_join(peer, dst)
+        if ok:
+            self.sim.spawn(self._announcer(peer))
 
     # ================================================== run
     def run(self, until: Optional[float] = None,

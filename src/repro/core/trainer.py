@@ -31,6 +31,7 @@ class Microbatch:
     labels: Any = None
     size: int = 1               # sequences
     n_tokens: int = 0
+    attempt: int = 1            # provenance: ledger dispatch attempt
 
 
 class Trainer:
@@ -59,7 +60,8 @@ class Trainer:
         if peer_id is None:
             return None
         peer = self.swarm.peers.get(peer_id)
-        if peer is None or not peer.alive or peer.stage != stage:
+        if peer is None or not peer.alive or not peer.serving \
+                or peer.stage != stage:
             self.wiring.ban_server(peer_id)
             return None
         return peer
@@ -137,7 +139,8 @@ class Trainer:
         retries = 0
         while s >= 0:
             peer = path[s]
-            if peer is None or not peer.alive or peer.stage != s:
+            if peer is None or not peer.alive or not peer.serving \
+                    or peer.stage != s:
                 peer = self._pick(s)
             if peer is None:
                 retries += 1
@@ -152,19 +155,25 @@ class Trainer:
                 if numeric:
                     prog = swarm.programs[s]
                     if s == S - 1:
-                        def thunk(_p=peer, _prog=prog, _i=acts[s]):
+                        def thunk(_p=peer, _prog=prog, _i=acts[s], _s=s):
                             loss, gx, gp = _prog.bwd(_p.state.params, _i,
                                                      mb.labels)
-                            self.swarm.accumulate(_p, gp, mb, float(loss))
+                            # the ledger admits (stage, index) at most
+                            # once per round — a re-issued attempt only
+                            # recomputes gx for the stages that lost it
+                            self.swarm.accumulate(_p, gp, mb, float(loss),
+                                                  stage=_s)
                             return gx
                     else:
-                        def thunk(_p=peer, _prog=prog, _i=acts[s], _dy=dy):
+                        def thunk(_p=peer, _prog=prog, _i=acts[s], _dy=dy,
+                                  _s=s):
                             gx, gp = _prog.bwd(_p.state.params, _i, _dy)
-                            self.swarm.accumulate(_p, gp, mb, None)
+                            self.swarm.accumulate(_p, gp, mb, None,
+                                                  stage=_s)
                             return gx
                 else:
-                    def thunk(_p=peer):
-                        self.swarm.accumulate(_p, None, mb, None)
+                    def thunk(_p=peer, _s=s):
+                        self.swarm.accumulate(_p, None, mb, None, stage=_s)
                         return None
                 ct = swarm.compute_time(peer, "bwd", s, mb)
                 gx = yield peer.submit("bwd", ct, thunk).wait()

@@ -69,6 +69,10 @@ class StagePriorityQueue:
     def servers(self) -> list[Hashable]:
         return [s for s, e in self._entries.items() if e.priority != INF]
 
+    def priority_of(self, server: Hashable) -> Optional[float]:
+        e = self._entries.get(server)
+        return e.priority if e is not None else None
+
 
 class StochasticWiring:
     """Algorithm 1. One instance per *trainer* (per-trainer EMAs)."""
@@ -121,6 +125,13 @@ class StochasticWiring:
         prev = self.ema.get(server, self.epsilon)
         self.ema[server] = self.gamma * dt + (1 - self.gamma) * prev
 
+    def is_banned(self, server: Hashable) -> bool:
+        stages = self._stages_of.get(server)
+        if not stages:
+            return False
+        return any(self.queues[s].priority_of(server) == INF
+                   for s in stages)
+
     def refresh_from_dht(self, dht, stage_of_peer) -> None:
         """Re-admit banned peers that re-announced (§3.2) and discover new
         ones. ``stage_of_peer``: server -> stage from DHT records."""
@@ -128,3 +139,10 @@ class StochasticWiring:
             cur = self._stages_of.get(server)
             if cur != [stage]:
                 self.move_server(server, [stage])
+            elif self.is_banned(server):
+                # stage unchanged but the peer is live in the DHT: the
+                # ban was transient (e.g. a routing race during a
+                # migration window) and lifts on re-announce — it must
+                # not become a permanent per-trainer blacklist
+                for s in cur:
+                    self.queues[s].update(server, self.ema[server])

@@ -73,7 +73,8 @@ def test_swarm_survives_failures_and_joins(swarm_setup):
     scfg = dataclasses.replace(scfg, rebalance_period=2.0, compress=True,
                                max_steps=4)
     opt = adamw(lr=1e-2, grad_clip=0.0)
-    runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
+    runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0,
+                         record_accumulation=True)
     runner.build(peers_per_stage=3)
     runner.apply_trace([TraceEvent(0.02, -2), TraceEvent(0.05, -1),
                         TraceEvent(0.3, +2)])
@@ -82,9 +83,14 @@ def test_swarm_survives_failures_and_joins(swarm_setup):
     assert m["failures"] == 3 and m["joins"] == 2
     # gradients lost with dead peers were recomputed by survivors (App. A)
     assert all(np.isfinite(m["loss"]))
+    # ... exactly once: replay the ledger audit trail
+    from test_churn import _assert_exactly_once
+    _assert_exactly_once(runner, 2,
+                         scfg.global_batch // scfg.microbatch_size)
     # every stage still servable
     for s in range(2):
-        assert any(p.alive and p.stage == s for p in runner.peers.values())
+        assert any(p.alive and p.serving and p.stage == s
+                   for p in runner.peers.values())
 
 
 @pytest.mark.slow

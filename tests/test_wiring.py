@@ -25,6 +25,39 @@ def test_ban_and_reannounce():
     assert "a" in chosen
 
 
+def test_refresh_unbans_reannounced_peer_same_stage():
+    """A banned peer whose stage is UNCHANGED must be re-admitted when it
+    re-announces in the DHT — pre-fix, refresh_from_dht only handled the
+    stage-changed case, so transient bans (e.g. a routing race during a
+    migration window) became permanent per-trainer blacklists."""
+    w = StochasticWiring(1)
+    w.add_server("a", [0])
+    w.add_server("b", [0])
+    w.ban_server("a")
+    assert w.is_banned("a")
+    assert all(w.choose_server(0) == "b" for _ in range(10))
+    w.refresh_from_dht(None, {"a": 0, "b": 0})   # same stage, re-announced
+    assert not w.is_banned("a")
+    chosen = {w.choose_server(0) for _ in range(30)}
+    assert "a" in chosen
+
+
+def test_refresh_leaves_unbanned_peers_alone():
+    """Re-announce of a healthy peer must not reset its priority (which
+    would flood it with requests)."""
+    w = StochasticWiring(1, gamma=1.0)
+    w.add_server("a", [0])
+    w.add_server("b", [0])
+    w.observe("a", 1.0)
+    w.observe("b", 1.0)
+    for _ in range(10):
+        w.choose_server(0)
+    before = {s: w.queues[0].priority_of(s) for s in ("a", "b")}
+    w.refresh_from_dht(None, {"a": 0, "b": 0})
+    after = {s: w.queues[0].priority_of(s) for s in ("a", "b")}
+    assert before == after
+
+
 def test_empty_stage_returns_none():
     w = StochasticWiring(2)
     w.add_server("a", [0])
