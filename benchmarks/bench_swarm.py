@@ -1,0 +1,96 @@
+"""Stage-runtime benchmark: numeric swarm throughput + compile accounting.
+
+Emits machine-readable ``artifacts/BENCH_swarm.json`` so the perf
+trajectory (throughput, step time, compile/retrace counts) is tracked
+across PRs — CI uploads it as an artifact.
+
+The headline invariant: on a 4-peer / 2-stage numeric run the shared
+compile cache of ``repro.runtime`` produces **one jit per (stage, kind)**
+— at least 2x fewer stage compiles than the per-peer re-tracing baseline
+of ``peers x stages`` (it is 4 vs 8 here, and the gap widens linearly
+with swarm size).  A second same-shape runner re-traces nothing.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from repro.core import SwarmRunner, SwarmConfig
+from repro.models.config import ArchConfig
+from repro.optim import adamw
+from repro.runtime import compile_stats, reset_compile_stats
+
+PEERS_PER_STAGE, N_STAGES, STEPS = 2, 2, 2       # 4 peers, 2 stages
+
+CFG = ArchConfig(name="bench-swarm-tiny", family="dense", n_layers=4,
+                 d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                 vocab_size=256, head_dim=16, compute_dtype="float32",
+                 param_dtype="float32")
+
+
+def _run_numeric(seed: int) -> tuple[SwarmRunner, float]:
+    scfg = SwarmConfig(n_stages=N_STAGES, microbatch_size=2, seq_len=32,
+                       global_batch=8, n_trainers=3, rebalance_period=0.0,
+                       compress=False, max_steps=STEPS)
+    r = SwarmRunner(CFG, scfg, adamw(lr=1e-2), numeric=True, seed=seed)
+    r.build(peers_per_stage=PEERS_PER_STAGE)
+    t0 = time.perf_counter()
+    r.run(until=1e6)
+    return r, time.perf_counter() - t0
+
+
+def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
+    print("# stage-runtime: shared compile cache + swarm throughput")
+    print("name,us_per_call,derived")
+    reset_compile_stats()
+    r1, wall1 = _run_numeric(seed=0)
+    first = compile_stats()
+    r2, wall2 = _run_numeric(seed=1)         # same shapes: cache hits only
+    second = compile_stats()
+
+    peers = PEERS_PER_STAGE * N_STAGES
+    naive = peers * N_STAGES                 # per-peer re-trace baseline
+    steps = r1.metrics["step_time"]
+    mean_step = sum(steps) / max(len(steps), 1)
+    report = {
+        "bench": "swarm_runtime",
+        "config": {"peers": peers, "stages": N_STAGES, "steps": STEPS,
+                   "microbatch_size": 2, "global_batch": 8,
+                   "seq_len": 32, "model": CFG.name},
+        "throughput_samples_per_s_sim": r1.throughput(),
+        "mean_step_time_s_sim": mean_step,
+        "wall_s_first_run": wall1,
+        "wall_s_second_run": wall2,          # warm cache: no re-tracing
+        "recomputed_microbatches": r1.metrics["recomputed_microbatches"],
+        "compiles": {
+            "total_first_run": first["traces"],
+            "total_after_second_run": second["traces"],
+            "peers_times_stages": naive,
+            "per_key": {" ".join(map(str, k)): v
+                        for k, v in sorted(first["per_key"].items())},
+        },
+    }
+    # write the record FIRST: a regression must still leave the artifact
+    # behind for diagnosis (CI uploads it with `if: always()`)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    assert first["traces"] * 2 <= naive, (
+        f"shared compile cache regressed: {first['traces']} stage compiles "
+        f"on a {peers}-peer/{N_STAGES}-stage run (need <= {naive // 2})")
+    assert second["traces"] == first["traces"], (
+        "second same-shape runner re-traced: "
+        f"{second['traces']} vs {first['traces']}")
+    print(f"swarm/compiles,0,first={first['traces']} naive={naive} "
+          f"second_run_new=0")
+    print(f"swarm/throughput,0,sim={r1.throughput():.2f}/s "
+          f"mean_step={mean_step:.3f}s wall1={wall1:.1f}s "
+          f"wall2={wall2:.1f}s")
+    print(f"swarm/json,0,{out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    run()

@@ -68,7 +68,8 @@ def main() -> None:
 
     from benchmarks import (bench_square_cube, bench_throughput,
                             bench_rebalance, bench_scaling,
-                            bench_compression, bench_cost, roofline)
+                            bench_compression, bench_cost, bench_swarm,
+                            roofline)
     suites = {
         "square_cube": bench_square_cube.run,     # Fig.3 / Table 1
         "throughput": bench_throughput.run,       # Table 2
@@ -76,6 +77,8 @@ def main() -> None:
         "scaling": bench_scaling.run,             # Fig.6 / Tables 3-4
         "compression": bench_compression.run,     # Table 7/8
         "cost": bench_cost.run,                   # Table 9
+        "swarm": bench_swarm.run,                 # runtime layer: compile
+                                                  # cache + BENCH_swarm.json
     }
     failed = []
     for name, fn in suites.items():

@@ -1,3 +1,6 @@
-from repro.ckpt.checkpoint import save_checkpoint, restore_checkpoint, latest_step
+from repro.ckpt.checkpoint import (save_checkpoint, restore_checkpoint,
+                                   available_steps, latest_step,
+                                   prune_checkpoints, stage_dir)
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "available_steps",
+           "latest_step", "prune_checkpoints", "stage_dir"]

@@ -57,12 +57,54 @@ def save_checkpoint(directory: str, step: int, tree: Tree) -> str:
     return final
 
 
-def latest_step(directory: str) -> Optional[int]:
+def stage_dir(root: str, stage: int) -> str:
+    """Per-pipeline-stage checkpoint directory: the elastic runner saves
+    each stage's executor snapshot independently (stages fail — and
+    resume — independently)."""
+    return os.path.join(root, f"stage_{stage:03d}")
+
+
+def _step_entries(directory: str) -> list[tuple[int, str]]:
+    """``(step, entry_name)`` pairs of the checkpoint dirs under
+    ``directory``, sorted by step.  The entry name is carried alongside
+    the parsed number so callers never rebuild it (a hand-copied
+    ``step_3`` without zero padding is still found and pruned)."""
     if not os.path.isdir(directory):
-        return None
-    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
-             if d.startswith("step_")]
-    return max(steps) if steps else None
+        return []
+    return sorted((int(d.split("_")[1]), d) for d in os.listdir(directory)
+                  if d.startswith("step_") and
+                  d.split("_")[1].isdigit())
+
+
+def latest_step(directory: str) -> Optional[int]:
+    entries = _step_entries(directory)
+    return entries[-1][0] if entries else None
+
+
+def available_steps(directory: str) -> list[int]:
+    """All checkpointed steps under ``directory``, ascending.  Multi-dir
+    consumers (one dir per pipeline stage) intersect these to find the
+    newest step every stage can actually serve — a process killed
+    between per-stage saves leaves a torn cut that must not resume."""
+    return [s for s, _ in _step_entries(directory)]
+
+
+def _step_path(directory: str, step: int) -> str:
+    for s, name in _step_entries(directory):
+        if s == step:
+            return os.path.join(directory, name)
+    raise FileNotFoundError(f"no step_{step} checkpoint under {directory}")
+
+
+def prune_checkpoints(directory: str, keep: int = 1) -> None:
+    """Delete all but the newest ``keep`` step directories.  Restores
+    only ever read the latest step, so per-step savers (the elastic
+    runner checkpoints every ``ckpt_period`` steps) call this to bound
+    disk growth.  Saves are atomic (rename), so keep=1 is safe."""
+    if keep < 1:
+        return
+    for _, name in _step_entries(directory)[:-keep]:
+        shutil.rmtree(os.path.join(directory, name), ignore_errors=True)
 
 
 def restore_checkpoint(directory: str, like: Tree,
@@ -71,7 +113,7 @@ def restore_checkpoint(directory: str, like: Tree,
     step = step if step is not None else latest_step(directory)
     if step is None:
         raise FileNotFoundError(f"no checkpoints under {directory}")
-    path = os.path.join(directory, f"step_{step:08d}")
+    path = _step_path(directory, step)
     with open(os.path.join(path, _MANIFEST)) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))

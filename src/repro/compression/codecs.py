@@ -17,7 +17,7 @@ width ``c`` for the bottleneck (default ``d_model // 2`` — the paper's "2x
 feature compression"); ``cfg.maxout_k`` is the maxout pool width (default
 derived as ``d_model // bottleneck_dim``, else 2).  Both execution paths
 (the GSPMD pipeline in :mod:`repro.dist.pipeline` and the elastic stage
-programs in :mod:`repro.core.stage_model`) and the analytic cost model
+programs in :mod:`repro.runtime.stage_model`) and the analytic cost model
 (:func:`repro.models.flops.boundary_bytes`) resolve shapes through here, so
 simulated wire bytes always match what the real codecs emit.
 """

@@ -10,7 +10,8 @@ from repro.core.ledger import MicrobatchLedger
 from repro.core.wiring import StochasticWiring
 from repro.core.rebalance import plan_migration, optimal_assignment, \
     pipeline_throughput, Migration
-from repro.core.peer import Peer, DeviceProfile, PeerFailure, T4, V100, A100
+from repro.core.peer import Peer, DeviceProfile, PeerFailure, StageState, \
+    T4, V100, A100
 from repro.core.swarm import SwarmRunner, SwarmConfig
 from repro.core.faults import synth_preemptible_trace, TraceEvent
 
@@ -18,7 +19,7 @@ __all__ = [
     "Sim", "Sleep", "Event", "Resource", "DHT", "MicrobatchLedger",
     "StochasticWiring",
     "plan_migration", "optimal_assignment", "pipeline_throughput",
-    "Migration", "Peer", "DeviceProfile", "PeerFailure", "T4", "V100",
-    "A100", "SwarmRunner", "SwarmConfig", "synth_preemptible_trace",
-    "TraceEvent",
+    "Migration", "Peer", "DeviceProfile", "PeerFailure", "StageState",
+    "T4", "V100", "A100", "SwarmRunner", "SwarmConfig",
+    "synth_preemptible_trace", "TraceEvent",
 ]

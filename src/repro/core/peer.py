@@ -18,6 +18,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.sim import Sim, Sleep, Event, Interrupt
+# StageState is owned by the stage-runtime layer (repro.runtime): every
+# mutation that touches device memory goes through a StageExecutor.  The
+# re-export keeps the historical import path alive.
+from repro.runtime.base import StageState  # noqa: F401  (re-export)
 
 Tree = Any
 
@@ -55,23 +59,6 @@ A100 = DeviceProfile("A100", 312e12 * 0.25, 550 * MBPS, 550 * MBPS, 0.003)
 
 
 @dataclasses.dataclass
-class StageState:
-    """Replicated training state for one pipeline stage (numeric mode)."""
-    params: Tree = None
-    opt: Tree = None
-    grad_acc: Tree = None
-    loss_sum: float = 0.0
-    token_count: int = 0
-    version: int = 0
-
-    def zero_grads(self):
-        if self.grad_acc is not None:
-            self.grad_acc = jax.tree.map(jnp.zeros_like, self.grad_acc)
-        self.loss_sum = 0.0
-        self.token_count = 0
-
-
-@dataclasses.dataclass
 class _Task:
     kind: str                 # "fwd" | "bwd"
     payload: Any
@@ -83,12 +70,17 @@ class Peer:
     _ids = 0
 
     def __init__(self, sim: Sim, profile: DeviceProfile, stage: int,
-                 *, name: Optional[str] = None):
+                 *, name: Optional[str] = None, executor=None):
         Peer._ids += 1
         self.id = name or f"peer{Peer._ids}"
         self.sim = sim
         self.profile = profile
         self.stage = stage
+        # how this peer runs its stage (repro.runtime.StageExecutor):
+        # a NumericExecutor shared by the stage's peers, a MeshExecutor
+        # backing this peer with a device mesh, or None in timing-only
+        # simulations.  The SwarmRunner assigns and swaps it.
+        self.executor = executor
         self.alive = True
         # serving=False while the peer downloads stage state (a joining
         # or migrating peer must never serve stale params); routing and
@@ -195,7 +187,21 @@ class Peer:
         return 3 * pbytes          # params + adam m/v, roughly
 
     def adopt_state_from(self, donor: "Peer"):
-        """Download the stage checkpoint from a live neighbor (Fig. 2)."""
+        """Download the stage checkpoint from a live neighbor (Fig. 2).
+
+        The transfer goes through the executors' snapshot/restore pair —
+        a host-side (numpy) tree is the wire format — so the donor and
+        the adopter may run *different* backends (a mesh-backed peer can
+        seed a single-device joiner and vice versa).  Peers SHARING an
+        executor (all numeric peers of a stage do) skip the host
+        round-trip: identical backend and placement make aliasing the
+        immutable device arrays exact and zero-copy."""
+        if (self.executor is not None and donor.executor is not None
+                and self.executor is not donor.executor
+                and donor.state.params is not None):
+            self.executor.restore(self.state,
+                                  donor.executor.snapshot(donor.state))
+            return
         self.state.params = jax.tree.map(lambda x: x, donor.state.params)
         self.state.opt = jax.tree.map(lambda x: x, donor.state.opt)
         self.state.version = donor.state.version

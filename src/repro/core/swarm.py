@@ -34,11 +34,11 @@ from repro.core.wiring import StochasticWiring
 from repro.core.trainer import Trainer, Microbatch
 from repro.core import rebalance as rb
 from repro.core.faults import TraceEvent
-from repro.core.stage_model import StageProgram, build_stage_programs, \
-    init_stage_params
 from repro.models.config import ArchConfig
 from repro.models import flops as F
 from repro.optim.adamw import Optimizer
+from repro.runtime import StageExecutor, StageProgram, \
+    build_numeric_executors, init_stage_params
 
 Tree = Any
 
@@ -63,6 +63,15 @@ class SwarmConfig:
     max_steps: Optional[int] = None
     allreduce_bw: float = 50e6           # bytes/s effective per peer
     trainer_max_retries: int = 50        # per-attempt routing retries
+    # elastic checkpointing (ROADMAP): persist a pipeline-consistent cut
+    # of every stage's state each ``ckpt_period`` completed steps via
+    # the executors' snapshot() — a stage that loses ALL its peers
+    # resumes from the latest completed step instead of the step-0
+    # reference params, and a runner constructed over a non-empty
+    # ``ckpt_dir`` RESUMES that run (step counter + data cursor adopt
+    # the latest cut)
+    ckpt_dir: Optional[str] = None
+    ckpt_period: int = 1
 
 
 class SwarmRunner:
@@ -90,16 +99,24 @@ class SwarmRunner:
         self.profile_fn = profile_fn or (lambda i: T4)
         self.data_fn = data_fn
 
-        # programs may be injected (pre-jitted, e.g. shared across the
-        # seed matrix of the churn tests); params re-init from `seed`
-        if programs is not None:
-            assert len(programs) == scfg.n_stages
-            self.programs: list[StageProgram] = programs
+        # stage execution goes through the runtime layer: one executor
+        # per stage, shared by all that stage's peers (the process-wide
+        # compile cache means the seed matrix of the churn tests and
+        # repeated benchmark runs never re-trace either).  ``programs``
+        # may still be injected (pre-jitted) for back-compat.
+        if numeric:
+            if programs is not None:
+                assert len(programs) == scfg.n_stages
+            self.executors: list[Optional[StageExecutor]] = \
+                build_numeric_executors(
+                    cfg, scfg.n_stages, scfg.seq_len,
+                    compress=self.compress_mode,
+                    quant_block=scfg.quant_block, programs=programs)
+            self.programs: list[StageProgram] = \
+                [e.prog for e in self.executors]
         else:
-            self.programs = build_stage_programs(
-                cfg, scfg.n_stages, scfg.seq_len,
-                compress=self.compress_mode) if numeric else \
-                [None] * scfg.n_stages
+            self.executors = [None] * scfg.n_stages
+            self.programs = [None] * scfg.n_stages
         self._ref_params: Optional[list[Tree]] = None
         if numeric:
             self._ref_params = init_stage_params(
@@ -130,23 +147,47 @@ class SwarmRunner:
             "loss": [], "step_time": [], "samples_done": [],
             "throughput_t": [], "throughput_v": [], "migrations": 0,
             "failures": 0, "joins": 0, "recomputed_microbatches": 0,
+            "ckpt_restores": [],     # (stage, restored-from step)
+            "rollbacks": [],         # (step rolled back from, to)
         }
         self._samples_done_total = 0
         self._flops_per_sample_total = 0.0
+        self._default_ds = None      # built once, on first use
+        # cold-start resume: a non-empty ckpt_dir means this runner
+        # CONTINUES that run — adopt the latest consistent cut's step
+        # and data cursor, so peers restore step-k params AND training
+        # replays the same sample indices fault-free training would use
+        # from step k (otherwise later saves would also be pruned in
+        # favor of the stale higher-numbered ones)
+        self._resume_step = self._common_ckpt_step() if numeric else 0
+        if self._resume_step:
+            K = scfg.global_batch // max(scfg.microbatch_size, 1)
+            self.step = self._resume_step
+            self._mb_counter = self._resume_step * K
         self._open_round()
 
     # ================================================== setup
-    def add_peer(self, stage: int, profile: Optional[DeviceProfile] = None
-                 ) -> Peer:
+    def add_peer(self, stage: int, profile: Optional[DeviceProfile] = None,
+                 executor: Optional[StageExecutor] = None) -> Peer:
         """Cold-start a peer (initial ``build``): at step 0 the reference
         params ARE current, so announcing immediately is safe.  Mid-run
         joins go through ``_join_new_peer``, which downloads the stage
-        state *before* announcing (warm join)."""
+        state *before* announcing (warm join).
+
+        ``executor`` backs the peer with a custom runtime (e.g. a
+        :class:`repro.runtime.MeshExecutor` over a device mesh); by
+        default the peer shares the stage's numeric executor."""
+        if executor is not None:
+            assert executor.stage == stage, (executor.stage, stage)
         peer = Peer(self.sim, profile or self.profile_fn(len(self.peers)),
-                    stage)
+                    stage, executor=executor or self.executors[stage])
         self.peers[peer.id] = peer
         if self.numeric:
-            self._restore_from_checkpoint(peer, stage)
+            # _resume_step == 0 pins the step-0 reference: stale entries
+            # in a torn/leftover ckpt_dir with no common step must not
+            # leak differing per-stage "latest" params into a fresh run
+            self._restore_from_checkpoint(peer, stage,
+                                          step=self._resume_step)
         self._announce(peer)
         for w in self.wirings:
             w.add_server(peer.id, [stage])
@@ -230,10 +271,12 @@ class SwarmRunner:
         return mb
 
     def _default_data(self, idx: int) -> dict:
-        from repro.data.synthetic import SyntheticLM
-        ds = SyntheticLM(self.cfg.vocab_size, self.scfg.seq_len,
-                         self.scfg.microbatch_size, seed=17)
-        return ds.batch(idx)
+        if self._default_ds is None:    # one dataset per runner, reused
+            from repro.data.synthetic import SyntheticLM
+            self._default_ds = SyntheticLM(
+                self.cfg.vocab_size, self.scfg.seq_len,
+                self.scfg.microbatch_size, seed=17)
+        return self._default_ds.batch(idx)
 
     def microbatch_done(self, mb: Microbatch, ok: bool):
         self._inflight -= 1
@@ -248,10 +291,16 @@ class SwarmRunner:
     # ================================================== cost model
     def compute_time(self, peer: Peer, kind: str, stage: int,
                      mb: Microbatch) -> float:
-        prog = self.programs[stage]
-        if prog is not None:
-            fpt = (prog.fwd_flops_per_token if kind == "fwd"
-                   else prog.bwd_flops_per_token)
+        ex = (peer.executor if peer.executor is not None
+              and peer.executor.stage == stage else self.executors[stage])
+        if ex is not None:
+            fpt = (ex.fwd_flops_per_token if kind == "fwd"
+                   else ex.bwd_flops_per_token)
+            # a mesh-backed peer splits the microbatch over its data
+            # axis (data-parallel within the peer); dp_shards reports
+            # the ACTUAL split — 1 when divisibility forces replication
+            speedup = max(1, ex.dp_shards(mb.size))
+            return peer.profile.compute_time(fpt * mb.n_tokens) / speedup
         else:
             ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
             per = self.cfg.n_layers // self.n_stages
@@ -286,13 +335,13 @@ class SwarmRunner:
         if self.record_accumulation:
             self.ledger_log.append(
                 ("acc", self.step, s, mb.index, mb.attempt, peer.id))
-        st = peer.state
-        if gp is not None:
-            st.grad_acc = jax.tree.map(
-                lambda a, g: a + g.astype(a.dtype), st.grad_acc, gp)
-        st.token_count += mb.n_tokens
-        if loss is not None:
-            st.loss_sum += loss
+        if peer.executor is not None:
+            # executor-owned fold (donated accumulator buffer)
+            peer.executor.accumulate(peer.state, gp, loss, mb.n_tokens)
+        else:                               # timing-only simulation
+            peer.state.token_count += mb.n_tokens
+            if loss is not None:
+                peer.state.loss_sum += loss
         return True
 
     def _sync_loop(self):
@@ -349,15 +398,18 @@ class SwarmRunner:
                 / self.scfg.allreduce_bw + 0.01 * k
             new_params = new_opt = None
             if self.numeric:
-                # average gradients over the stage (token-weighted)
+                # average gradients over the stage (token-weighted);
+                # export_grads yields scheduler-local trees, so the sum
+                # mixes numeric and mesh-backed peers freely
                 total_tokens = sum(p.state.token_count for p in group)
-                gsum = group[0].state.grad_acc
+                gsum = group[0].executor.export_grads(group[0].state)
                 for p in group[1:]:
                     gsum = jax.tree.map(lambda a, b: a + b, gsum,
-                                        p.state.grad_acc)
+                                        p.executor.export_grads(p.state))
                 gmean = jax.tree.map(lambda g: g / max(total_tokens, 1),
                                      gsum)
-                params, opt = group[0].state.params, group[0].state.opt
+                params, opt = group[0].executor.export_state(
+                    group[0].state)
                 updates, new_opt = self.optimizer.update(gmean, opt, params)
                 new_params = jax.tree.map(
                     lambda p, u: p + u.astype(p.dtype), params, updates)
@@ -371,11 +423,13 @@ class SwarmRunner:
                 if not p.alive:      # died inside the ring: state is dead
                     continue
                 if self.numeric:
-                    p.state.params = new_params
-                    p.state.opt = new_opt
-                    p.state.version += 1
-                p.state.zero_grads()
+                    # install + re-place on the peer's backend, bump the
+                    # version, zero the accumulator
+                    p.executor.adopt_step(p.state, new_params, new_opt)
+                else:
+                    p.state.zero_grads()
         self.step += 1
+        self._maybe_checkpoint()
 
     # ================================================== rebalancing
     def _rebalance_loop(self):
@@ -396,13 +450,129 @@ class SwarmRunner:
                 continue
             yield from self._migrate(self.peers[mig.peer], mig.dst_stage)
 
-    def _restore_from_checkpoint(self, peer: Peer, stage: int):
-        """Stage died entirely: restore from the checkpointed reference."""
-        peer.state.params = jax.tree.map(
-            lambda x: x, self._ref_params[stage])
-        peer.state.opt = jax.tree.map(lambda x: x, self._ref_opt[stage])
-        peer.state.grad_acc = jax.tree.map(
-            jnp.zeros_like, peer.state.params)
+    def _maybe_checkpoint(self):
+        """Persist every stage's state (executor ``snapshot()`` →
+        ``repro.ckpt``) after a completed optimizer step, so a stage that
+        later loses ALL its peers resumes from here instead of step 0.
+
+        A checkpoint is a *pipeline-consistent cut*: either every stage
+        is saved at this step or none is (a stranded stage skips the
+        whole save), so every stage directory always holds the same step
+        numbers — which is what lets ``_rollback_to`` restore one
+        uniform parameter version and ``prune_checkpoints`` keep only
+        the latest cut."""
+        if (not self.numeric or not self.scfg.ckpt_dir
+                or self.step % max(self.scfg.ckpt_period, 1)):
+            return
+        holders = []
+        for s in range(self.n_stages):
+            holder = next((p for p in self.peers.values()
+                           if p.alive and p.serving and p.stage == s
+                           and p.state.params is not None), None)
+            if holder is None:
+                return                 # no consistent cut exists right now
+            holders.append(holder)
+        from repro.ckpt import prune_checkpoints, save_checkpoint, \
+            stage_dir
+        for s, holder in enumerate(holders):
+            d = stage_dir(self.scfg.ckpt_dir, s)
+            save_checkpoint(d, self.step,
+                            holder.executor.snapshot(holder.state))
+            # keep 2 cuts: if a process dies between per-stage saves the
+            # torn newest cut is excluded by _common_ckpt_step's
+            # intersection and resume falls back to the previous one
+            prune_checkpoints(d, keep=2)
+
+    def _common_ckpt_step(self) -> int:
+        """Newest checkpointed step EVERY stage can serve (0 if none).
+        A torn cut — a process killed between per-stage saves leaves
+        stage dirs at different steps — is excluded by the intersection,
+        never resumed at mixed versions."""
+        if not self.scfg.ckpt_dir:
+            return 0
+        from repro.ckpt import available_steps, stage_dir
+        common = None
+        for s in range(self.n_stages):
+            steps = set(available_steps(
+                stage_dir(self.scfg.ckpt_dir, s)))
+            common = steps if common is None else common & steps
+        return max(common) if common else 0
+
+    def _rollback_to(self, step_k: int):
+        """A stage must resume from checkpoint step ``step_k`` < the
+        pipeline's current step: rewind EVERY stage to it (Varuna-style
+        global rollback), so the pipeline trains one consistent version.
+        Rewinds the step counter, the data cursor, and the loss
+        trajectory — the replayed steps consume the same sample indices
+        fault-free training used after ``step_k``, so the final
+        trajectory still matches the reference."""
+        self._dispatch_paused = True
+        # drain in-flight microbatches: their accumulations belong to
+        # the aborted round (attempts against the stranded stage fail
+        # once trainer retries exhaust)
+        while self._inflight > 0 and not self.stopped:
+            yield Sleep(0.1)
+        if self.stopped:
+            return
+        for s in range(self.n_stages):
+            group = [p for p in self.peers.values()
+                     if p.alive and p.serving and p.stage == s
+                     and p.executor is not None]
+            if not group:
+                continue
+            # one disk read per stage, fanned out to all its peers:
+            # explicitly the target step (not "latest"), so every stage
+            # rewinds to the SAME consistent cut (0 = step-0 reference)
+            snap = self._ckpt_snapshot(s, step=step_k)
+            for p in group:
+                p.executor.restore(p.state, snap)
+        self.metrics["rollbacks"].append((self.step, step_k))
+        K = self.scfg.global_batch // max(self.scfg.microbatch_size, 1)
+        self.step = step_k
+        self._mb_counter = step_k * K
+        # the loss list is relative to the step this RUNNER started at
+        # (a cold-resumed runner begins with an empty list at step
+        # _resume_step), so truncate by offset, not absolute step
+        del self.metrics["loss"][max(step_k - self._resume_step, 0):]
+        self._open_round()
+        self._dispatch_paused = False
+
+    def _restore_from_checkpoint(self, peer: Peer, stage: int,
+                                 step: Optional[int] = None):
+        """Stage died entirely (or a cold start): restore the persisted
+        checkpoint (``step``; None = the latest; 0 = explicitly the
+        step-0 reference params, bypassing the directory) through the
+        peer's executor, falling back to the reference when nothing is
+        saved."""
+        if self._ref_params is None:         # timing-only: no state
+            return
+        peer.executor.restore(peer.state,
+                              self._ckpt_snapshot(stage, step=step))
+
+    def _ckpt_snapshot(self, stage: int, step: Optional[int] = None):
+        """Host snapshot tree for ``stage`` (see
+        ``_restore_from_checkpoint`` for the ``step`` semantics)."""
+        snap = {"params": self._ref_params[stage],
+                "opt": self._ref_opt[stage], "version": 0}
+        if self.scfg.ckpt_dir and step != 0:
+            from repro.ckpt import (available_steps, restore_checkpoint,
+                                    stage_dir)
+            d = stage_dir(self.scfg.ckpt_dir, stage)
+            try:
+                snap, got = restore_checkpoint(d, like=snap, step=step)
+                self.metrics["ckpt_restores"].append((stage, got))
+            except FileNotFoundError:
+                # only an EMPTY stage dir may fall back to the step-0
+                # reference; a present-but-missing explicitly requested
+                # step means the directory is inconsistent with its
+                # siblings — restoring anything else would silently mix
+                # parameter versions across stages
+                if step is not None and available_steps(d):
+                    raise RuntimeError(
+                        f"checkpoint dir {d} has steps "
+                        f"{available_steps(d)} but not the requested "
+                        f"step {step} — stage dirs are inconsistent")
+        return snap
 
     def _download_state(self, peer: Peer, dst: int):
         """Warm-state download: copy ``dst``'s replicated state from a
@@ -413,14 +583,40 @@ class SwarmRunner:
         if not self.numeric:           # timing-only state transfer
             yield Sleep(1.0)
             return
+
+        def live_donors():
+            return [p for p in self.peers.values()
+                    if p.alive and p.serving and p.stage == dst
+                    and p is not peer]
+
         while True:
-            donors = [p for p in self.peers.values()
-                      if p.alive and p.serving and p.stage == dst
-                      and p is not peer]
+            donors = live_donors()
             if not donors:
                 yield Sleep(1.0)
-                if peer.alive and self._ref_params is not None:
-                    self._restore_from_checkpoint(peer, dst)
+                # same discipline as the donor path below: never adopt
+                # (or get snapshotted serving stale state) inside an
+                # All-Reduce window — the stage would re-checkpoint the
+                # pre-step params under the post-step number
+                while self._dispatch_paused and not self.stopped:
+                    yield Sleep(0.05)
+                if not peer.alive or self.stopped:
+                    return
+                if live_donors():
+                    continue           # a peer recovered during the wait
+                if self._ref_params is None:
+                    return
+                # truly stranded: resume from the latest persisted
+                # checkpoint.  If that checkpoint is older than the
+                # pipeline's current step (ckpt_period > 1, or no
+                # ckpt_dir at all), first rewind the WHOLE pipeline to
+                # it (Varuna-style global rollback) — a lone stage must
+                # never serve params from an older step than its
+                # neighbors.
+                k = self._common_ckpt_step()
+                if k < self.step:
+                    yield from self._rollback_to(k)
+                if peer.alive:
+                    self._restore_from_checkpoint(peer, dst, step=k)
                 return
             donor = donors[0]
             yield Sleep(peer.profile.recv_time(donor.state_nbytes()))
@@ -467,6 +663,8 @@ class SwarmRunner:
             return
         src = peer.stage
         peer.stage = dst                       # stops accepting src work
+        if peer.executor is not None:          # same backend, dst stage
+            peer.executor = peer.executor.for_stage(dst)
         peer.serving = False
         peer.drain()
         self._log_releases([(src, i) for i in
@@ -512,7 +710,13 @@ class SwarmRunner:
                       or (not p.serving and n_serving(p.stage) >= 1)]
         if not candidates:
             return
-        victim = candidates[self.rng.integers(len(candidates))]
+        self._fail_peer(candidates[self.rng.integers(len(candidates))])
+
+    def _fail_peer(self, victim: Peer):
+        """Preempt ``victim`` NOW (no stage-coverage guard — callers that
+        must not strand a stage check first, e.g. ``_fail_random_peer``;
+        stranding a stage is legal and exercises the checkpoint
+        fallback)."""
         victim.fail()
         self.metrics["failures"] += 1
         # the victim's accumulated gradients die with it: survivors
@@ -538,8 +742,14 @@ class SwarmRunner:
         if dead:
             peer = dead[0]
             peer.revive(dst)
+            # a revived peer keeps its backend (a mesh slice coming back
+            # IS that mesh slice), re-targeted at the join stage
+            peer.executor = (peer.executor.for_stage(dst)
+                             if peer.executor is not None
+                             else self.executors[dst])
         else:
-            peer = Peer(self.sim, self.profile_fn(len(self.peers)), dst)
+            peer = Peer(self.sim, self.profile_fn(len(self.peers)), dst,
+                        executor=self.executors[dst])
             self.peers[peer.id] = peer
         self.metrics["joins"] += 1
         ok = yield from self._complete_warm_join(peer, dst)

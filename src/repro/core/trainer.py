@@ -6,6 +6,11 @@ stochastic wiring.  On a peer failure anywhere along the path the trainer
 bans the peer and re-routes — backward can go to a *different* peer than
 forward because stages recompute activations from the boundary input
 (activation checkpointing, App. A).
+
+The trainer is backend- and codec-agnostic: stage execution and wire
+handling (including the int8 round-trip that used to live here) go
+through the peer's :class:`repro.runtime.StageExecutor`, so a path may
+mix single-device and mesh-backed peers freely.
 """
 from __future__ import annotations
 
@@ -19,7 +24,6 @@ import numpy as np
 from repro.core.sim import Sim, Sleep
 from repro.core.peer import Peer, PeerFailure
 from repro.core.wiring import StochasticWiring
-from repro.compression.quant8 import _roundtrip
 
 Tree = Any
 
@@ -96,16 +100,20 @@ class Trainer:
             t0 = self.sim.now
             try:
                 yield Sleep(peer.profile.recv_time(nbytes))
-                prog = swarm.programs[s] if numeric else None
                 inp = x
 
                 if numeric:
+                    # the executor runs the stage AND produces the wire
+                    # tensor that crosses to the next peer (codec round
+                    # trips, mesh host-gathers — all backend-owned)
                     if s == S - 1:
-                        thunk = (lambda _p=peer, _prog=prog, _i=inp:
-                                 _prog.fwd(_p.state.params, _i, mb.labels))
+                        thunk = (lambda _p=peer, _i=inp:
+                                 _p.executor.run_fwd(_p.state, _i,
+                                                     mb.labels))
                     else:
-                        thunk = (lambda _p=peer, _prog=prog, _i=inp:
-                                 _prog.fwd(_p.state.params, _i))
+                        thunk = (lambda _p=peer, _i=inp:
+                                 _p.executor.wire_fwd(
+                                     _p.executor.run_fwd(_p.state, _i)))
                 else:
                     thunk = lambda: None
                 ct = swarm.compute_time(peer, "fwd", s, mb)
@@ -116,13 +124,6 @@ class Trainer:
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 acts[s] = inp
                 path[s] = peer
-                # codec dispatch: int8 round-trips the wire tensor here (the
-                # trainer IS the wire); under a learned codec the stage
-                # program already emitted the compressed c-dim tensor, so
-                # ``y`` crosses as-is (repro.core.stage_model)
-                if numeric and s < S - 1 and \
-                        swarm.compress_mode == "int8":
-                    y = _roundtrip(y, swarm.quant_block)
                 x = y
                 s += 1
                 retries = 0
@@ -153,24 +154,25 @@ class Trainer:
             try:
                 yield Sleep(peer.profile.recv_time(nbytes))
                 if numeric:
-                    prog = swarm.programs[s]
                     if s == S - 1:
-                        def thunk(_p=peer, _prog=prog, _i=acts[s], _s=s):
-                            loss, gx, gp = _prog.bwd(_p.state.params, _i,
-                                                     mb.labels)
+                        def thunk(_p=peer, _i=acts[s], _s=s):
+                            loss, gx, gp = _p.executor.run_bwd(
+                                _p.state, _i, labels=mb.labels)
                             # the ledger admits (stage, index) at most
                             # once per round — a re-issued attempt only
                             # recomputes gx for the stages that lost it
                             self.swarm.accumulate(_p, gp, mb, float(loss),
                                                   stage=_s)
-                            return gx
+                            # the cotangent crosses back as a wire tensor
+                            # (int8 round-trip etc. — executor-owned)
+                            return _p.executor.wire_bwd(gx)
                     else:
-                        def thunk(_p=peer, _prog=prog, _i=acts[s], _dy=dy,
-                                  _s=s):
-                            gx, gp = _prog.bwd(_p.state.params, _i, _dy)
+                        def thunk(_p=peer, _i=acts[s], _dy=dy, _s=s):
+                            _, gx, gp = _p.executor.run_bwd(_p.state, _i,
+                                                            dy=_dy)
                             self.swarm.accumulate(_p, gp, mb, None,
                                                   stage=_s)
-                            return gx
+                            return _p.executor.wire_bwd(gx)
                 else:
                     def thunk(_p=peer, _s=s):
                         self.swarm.accumulate(_p, None, mb, None, stage=_s)
@@ -179,12 +181,6 @@ class Trainer:
                 gx = yield peer.submit("bwd", ct, thunk).wait()
                 yield Sleep(peer.profile.send_time(nbytes if s > 0 else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
-                # backward wire: int8 quantizes the cotangent; learned
-                # codecs need nothing — the cotangent of a c-dim wire
-                # tensor is already c-dim
-                if numeric and gx is not None and \
-                        swarm.compress_mode == "int8":
-                    gx = _roundtrip(gx, swarm.quant_block)
                 dy = gx
                 s -= 1
                 retries = 0

@@ -53,6 +53,16 @@ from repro.optim.adamw import Optimizer
 
 Tree = Any
 
+# The jax version this repo's XLA workarounds are valid below.  Two
+# shims are tied to the requirements.txt pin ``jax<0.5``:
+#   * :func:`_restack` — the XLA 0.4.x SPMD partitioner miscompiles a
+#     concatenate whose concat dim is sharded (see its docstring);
+#   * ``repro._compat.AxisType`` — jax < 0.5 lacks
+#     ``jax.sharding.AxisType`` / ``make_mesh(axis_types=...)``.
+# tests/test_pins.py fails the moment the pin (or the installed jax)
+# crosses this ceiling, flagging both for re-evaluation/removal.
+JAX_PIN_CEILING = (0, 5)
+
 
 def stage_periodic(cfg: ArchConfig, n_stages: int) -> bool:
     """Can this layer stack split into ``n_stages`` *identical* stages?

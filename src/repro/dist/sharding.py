@@ -96,6 +96,15 @@ def param_shardings(cfg, mesh, rules: Optional[ShardingRules] = None) -> Tree:
     return _spec_shardings(_model_specs(cfg), mesh, rules or DEFAULT_RULES)
 
 
+def stage_param_shardings(specs: Tree, mesh,
+                          rules: Optional[ShardingRules] = None) -> Tree:
+    """NamedSharding tree for an arbitrary ParamSpec tree — e.g. one
+    pipeline stage's ``StageProgram.specs``, which is how
+    :class:`repro.runtime.mesh.MeshExecutor` places a stage's parameters
+    on its peer-local mesh by their logical axes."""
+    return _spec_shardings(specs, mesh, rules or DEFAULT_RULES)
+
+
 def state_shardings(cfg, mesh, *, pipeline: bool = False,
                     rules: Optional[ShardingRules] = None) -> Tree:
     """Shardings for the ``{"params", "opt", "step"}`` adamw train state.

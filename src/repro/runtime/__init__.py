@@ -1,0 +1,29 @@
+"""Stage-runtime layer: one executor protocol, many peer backends.
+
+Layering (see README "Architecture"):
+
+    repro.core  (elastic scheduler: wiring / ledger / rebalance)
+        │   routes microbatches + lifecycle events to peers
+        ▼
+    repro.runtime.StageExecutor   (this package: the protocol)
+        ├── NumericExecutor  — single-device stage math, process-wide
+        │                      compile cache (one jit per stage, shared
+        │                      by every peer of that stage)
+        └── MeshExecutor     — the same stage step sharded over a device
+                               mesh via repro.dist sharding rules
+                               (data-parallel within the peer)
+"""
+from repro.runtime.base import StageExecutor, StageState, host_snapshot
+from repro.runtime.stage_model import (StageProgram, build_stage_programs,
+                                       init_stage_params)
+from repro.runtime.numeric import (NumericExecutor, build_numeric_executors,
+                                   compile_stats, get_stage_programs,
+                                   reset_compile_stats)
+from repro.runtime.mesh import MeshExecutor
+
+__all__ = [
+    "StageExecutor", "StageState", "host_snapshot",
+    "StageProgram", "build_stage_programs", "init_stage_params",
+    "NumericExecutor", "MeshExecutor", "build_numeric_executors",
+    "get_stage_programs", "compile_stats", "reset_compile_stats",
+]

@@ -1,0 +1,209 @@
+"""The stage-runtime layer: what a SWARM "peer" runs.
+
+The elastic scheduler (``repro.core``) decides *where* a microbatch goes;
+a :class:`StageExecutor` decides *how* the chosen peer executes its stage.
+Unifying the two previously-disjoint stage implementations — the eager
+per-peer ``StageProgram`` math and the compiled GSPMD path of
+``repro.dist`` — behind this protocol is what lets a heterogeneous swarm
+(paper §3, and Diskin et al.'s pooled-hardware setting) mix peers that
+are a lone T4 with peers that are an 8-device mesh slice, inside one
+pipeline:
+
+* :class:`~repro.runtime.numeric.NumericExecutor` — single-device stage
+  math behind a process-wide compile cache (one jit per stage shared by
+  every peer of that stage, instead of per-peer re-tracing);
+* :class:`~repro.runtime.mesh.MeshExecutor` — the stage step sharded
+  over a device mesh via the ``repro.dist`` rules (data-parallel within
+  the peer).
+
+Executors are *stateless* with respect to training progress: all mutable
+state lives in the :class:`StageState` the scheduler hands in, so N
+peers of one stage share one executor, and a peer migrating between
+stages just swaps executors.  ``snapshot``/``restore`` speak host-side
+(numpy) trees — the common wire format for peer-to-peer state downloads
+(numeric ↔ mesh in either direction) and for ``repro.ckpt``, which is
+how a stage that lost all its peers resumes from the latest completed
+step instead of step 0 (Varuna-style elastic restart).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class StageState:
+    """Replicated training state for one pipeline stage.
+
+    Owned by the executor protocol: schedulers treat it as an opaque
+    handle and go through executor methods (``accumulate``, ``snapshot``,
+    ``restore``, ``adopt_step``) for every mutation that touches device
+    memory.
+    """
+    params: Tree = None
+    opt: Tree = None
+    grad_acc: Tree = None
+    loss_sum: float = 0.0
+    token_count: int = 0
+    version: int = 0
+
+    def zero_grads(self):
+        if self.grad_acc is not None:
+            self.grad_acc = jax.tree.map(jnp.zeros_like, self.grad_acc)
+        self.loss_sum = 0.0
+        self.token_count = 0
+
+    def reset_progress(self):
+        """Fresh accumulator (zeros shaped/placed like ``params``) and
+        cleared loss/token counters — the tail of every state install
+        (restore, adopt_step): a download or step never imports grads."""
+        self.grad_acc = jax.tree.map(jnp.zeros_like, self.params)
+        self.loss_sum = 0.0
+        self.token_count = 0
+
+
+@runtime_checkable
+class StageExecutor(Protocol):
+    """How a peer runs one pipeline stage (init / fwd / bwd / accumulate /
+    snapshot / restore / wire-codec handling).
+
+    ``run_fwd``/``run_bwd`` consume and produce *wire* tensors: whatever
+    representation crosses between peers (the learned codecs' c-dim
+    tensor, or the d-dim activation for ``none``/``int8``).  The int8
+    round-trip that used to be special-cased in the trainer lives in
+    ``wire_fwd``/``wire_bwd`` — the trainer is codec-agnostic.
+    """
+
+    stage: int
+    n_stages: int
+    compress_mode: str
+    quant_block: int               # int8 wire codec block size
+    device_count: int              # relative capacity of this backend
+    fwd_flops_per_token: float
+    bwd_flops_per_token: float
+
+    # ---------------------------------------------------------- lifecycle
+    def init_state(self, key: jax.Array) -> StageState: ...
+
+    def for_stage(self, stage: int) -> "StageExecutor":
+        """The sibling executor serving ``stage`` on the same backend
+        (used when a peer migrates between stages)."""
+        ...
+
+    def dp_shards(self, batch: int) -> int:
+        """How many ways this backend actually splits a ``batch``-sized
+        microbatch (the cost model's compute speedup).  1 whenever the
+        placement would replicate instead of shard."""
+        ...
+
+    # ---------------------------------------------------------- execution
+    def run_fwd(self, state: StageState, inp: Tree,
+                labels: Optional[jax.Array] = None) -> Tree:
+        """Stage forward from the boundary input.  Last stage returns the
+        token-sum loss; others return the outbound wire tensor."""
+        ...
+
+    def run_bwd(self, state: StageState, inp: Tree,
+                dy: Optional[Tree] = None,
+                labels: Optional[jax.Array] = None
+                ) -> tuple[Optional[float], Optional[Tree], Tree]:
+        """Stage backward (recomputes forward from ``inp``, App. A).
+        Returns ``(loss, gx, gp)``; ``loss`` only on the last stage,
+        ``gx`` None on the first."""
+        ...
+
+    # --------------------------------------------------------- wire codec
+    def wire_fwd(self, y: Tree) -> Tree:
+        """Transform the forward output into what crosses the wire."""
+        ...
+
+    def wire_bwd(self, gx: Tree) -> Tree:
+        """Transform the boundary cotangent into what crosses back."""
+        ...
+
+    # -------------------------------------------------------- accumulation
+    def accumulate(self, state: StageState, gp: Optional[Tree],
+                   loss: Optional[float], n_tokens: int) -> None:
+        """Fold one microbatch gradient into the state's accumulator."""
+        ...
+
+    def export_grads(self, state: StageState) -> Tree:
+        """The accumulator in a form addable across this stage's peers
+        on the scheduler's device (identity for single-device backends,
+        host-gathered for mesh backends)."""
+        ...
+
+    def export_state(self, state: StageState) -> tuple[Tree, Tree]:
+        """``(params, opt)`` in scheduler-local form, for the optimizer
+        step at the All-Reduce barrier."""
+        ...
+
+    def adopt_step(self, state: StageState, new_params: Tree,
+                   new_opt: Tree) -> None:
+        """Install post-optimizer-step state (placing it onto this
+        backend's devices) and zero the accumulator."""
+        ...
+
+    # ---------------------------------------------------- state transfer
+    def snapshot(self, state: StageState) -> Tree:
+        """Host-side (numpy) ``{"params", "opt", "version"}`` tree — the
+        wire format for peer-to-peer downloads and ``repro.ckpt``."""
+        ...
+
+    def restore(self, state: StageState, snap: Tree) -> None:
+        """Install a snapshot (device placement is the executor's job)."""
+        ...
+
+
+def host_snapshot(state: StageState) -> Tree:
+    """Default ``snapshot``: pull params/opt to host numpy."""
+    return {"params": jax.device_get(state.params),
+            "opt": jax.device_get(state.opt),
+            "version": state.version}
+
+
+# donated-accumulator fold shared by every backend: one jit object, jax
+# caches the compiled fold per (tree structure, shapes, shardings).
+# Donating arg 0 makes the add in-place — the old grad_acc buffer is
+# dead the moment it returns (StageState owns it exclusively).
+_accumulate = jax.jit(
+    lambda acc, g: jax.tree.map(lambda a, b: a + b.astype(a.dtype), acc, g),
+    donate_argnums=(0,))
+
+
+def fold_into(state: StageState, gp: Optional[Tree],
+              loss: Optional[float], n_tokens: int) -> None:
+    """Default ``accumulate``: fold one microbatch gradient + bookkeeping
+    into ``state`` (identical for single-device and mesh backends — the
+    donated jit respects whatever placement the trees carry)."""
+    if gp is not None:
+        state.grad_acc = _accumulate(state.grad_acc, gp)
+    state.token_count += n_tokens
+    if loss is not None:
+        state.loss_sum += loss
+
+
+def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
+    """Shared ``wire_fwd`` codec step: int8 quantize-on-send on live
+    boundaries.  Learned codecs already emitted the c-dim wire tensor
+    inside the stage program; ``none`` crosses raw; the last stage
+    emits a loss, not a boundary."""
+    if ex.compress_mode == "int8" and ex.stage < ex.n_stages - 1:
+        from repro.compression.quant8 import _roundtrip
+        return _roundtrip(y, ex.quant_block)
+    return y
+
+
+def wire_bwd_codec(ex: StageExecutor, gx: Optional[Tree]
+                   ) -> Optional[Tree]:
+    """Shared ``wire_bwd`` codec step: int8 quantizes the boundary
+    cotangent (None on the first stage — nothing crosses back)."""
+    if gx is not None and ex.compress_mode == "int8":
+        from repro.compression.quant8 import _roundtrip
+        return _roundtrip(gx, ex.quant_block)
+    return gx

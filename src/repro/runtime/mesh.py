@@ -1,0 +1,221 @@
+"""MeshExecutor — a SWARM peer backed by a device mesh.
+
+The paper's swarms are heterogeneous (§3, and the pooled-hardware
+setting of Diskin et al.): one "peer" may be a lone preemptible T4,
+another an 8-device node.  This executor makes the latter a first-class
+pipeline citizen: the peer's stage step runs *sharded* over its mesh via
+the ``repro.dist`` sharding rules — parameters placed by their logical
+axes (:class:`repro.dist.sharding.ShardingRules`), the microbatch split
+over the mesh's ``data`` axis — while the elastic scheduler above
+remains oblivious: routing, the microbatch ledger, warm joins and
+migrations all speak the same :class:`~repro.runtime.base.StageExecutor`
+protocol as single-device peers.
+
+The wire is the host: ``wire_fwd``/``wire_bwd`` gather the boundary
+tensor off the mesh (after the int8 round-trip, when active), exactly
+modelling SWARM's network crossing — so a mesh-backed peer can hand
+activations to a single-device peer and vice versa, and state downloads
+(``snapshot``/``restore``) recommit the replicated stage state onto
+whichever backend the receiving peer runs.
+
+Jitted stage functions are cached process-wide per ``(program, mesh)``
+with the same retrace counters as the numeric backend (tagged
+``"mesh"``), so N mesh peers of a stage on equal meshes compile once.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compression import codecs
+from repro.dist.constrain import resolve_spec
+from repro.dist.sharding import ShardingRules, DEFAULT_RULES, \
+    stage_param_shardings
+from repro.models.config import ArchConfig
+from repro.runtime.base import StageState, fold_into, host_snapshot, \
+    wire_bwd_codec, wire_fwd_codec
+from repro.runtime.stage_model import _traced, init_stage_params
+from repro.runtime import numeric as numeric_rt
+
+Tree = Any
+
+# (program-cache key, stage, mesh fingerprint) -> (fwd_j, bwd_j)
+_MESH_JITS: dict[tuple, tuple] = {}
+_LOCK = threading.Lock()
+
+
+def _mesh_fingerprint(mesh: jax.sharding.Mesh) -> tuple:
+    return (tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(int(d.id) for d in mesh.devices.flat))
+
+
+class MeshExecutor:
+    """Run one pipeline stage data-parallel over a device mesh."""
+
+    def __init__(self, cfg: ArchConfig, n_stages: int, seq_len: int,
+                 stage: int, mesh: jax.sharding.Mesh,
+                 compress: Optional[str] = None, quant_block: int = 64,
+                 rules: Optional[ShardingRules] = None,
+                 batch_axis: str = "data"):
+        self.cfg = cfg
+        self.stage = stage
+        self.n_stages = n_stages
+        self.seq_len = seq_len
+        self.mesh = mesh
+        self.rules = rules or DEFAULT_RULES
+        self.batch_axis = batch_axis
+        self.compress_mode = codecs.resolve_mode(cfg, compress)
+        self.quant_block = quant_block
+        self.device_count = int(np.prod(
+            [mesh.shape[a] for a in mesh.axis_names]))
+        # shared program: same math object the numeric backend runs, so
+        # numeric and mesh peers of one stage are bitwise siblings
+        progs = numeric_rt.get_stage_programs(
+            cfg, n_stages, seq_len, self.compress_mode)
+        self.prog = progs[stage]
+        self.fwd_flops_per_token = self.prog.fwd_flops_per_token
+        self.bwd_flops_per_token = self.prog.bwd_flops_per_token
+        self.param_shardings = stage_param_shardings(
+            self.prog.specs, mesh, self.rules)
+        self._repl = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        self._params_treedef = jax.tree.structure(self.param_shardings)
+        self._fwd_j, self._bwd_j = self._get_jits()
+
+    # ------------------------------------------------------------ helpers
+    def _get_jits(self):
+        key = ((self.cfg, self.n_stages, self.seq_len, self.compress_mode),
+               self.stage, _mesh_fingerprint(self.mesh))
+        with _LOCK:
+            hit = _MESH_JITS.get(key)
+        if hit is not None:
+            return hit
+        tag = (self.cfg.name, self.n_stages, self.seq_len,
+               self.compress_mode)
+
+        def hook(stage, kind, shapes):     # same wrapper as the numeric
+            # backend (stage_model._traced); "mesh" tags the backend
+            numeric_rt.record_trace(tag + (stage, "mesh", kind, shapes))
+
+        jits = (_traced(self.prog.fwd_fn, hook, self.stage, "fwd"),
+                _traced(self.prog.bwd_fn, hook, self.stage, "bwd"))
+        with _LOCK:
+            jits = _MESH_JITS.setdefault(key, jits)
+        return jits
+
+    def _batch_sharding(self, x) -> jax.sharding.NamedSharding:
+        x = np.asarray(x) if not hasattr(x, "shape") else x
+        axes = [self.batch_axis] + [None] * (x.ndim - 1)
+        return jax.sharding.NamedSharding(
+            self.mesh, resolve_spec(axes, x.shape, self.mesh))
+
+    def _place_batch(self, x):
+        if x is None:
+            return None
+        return jax.device_put(jnp.asarray(x), self._batch_sharding(x))
+
+    def _place_params(self, params: Tree) -> Tree:
+        return jax.tree.map(
+            lambda x, sh: jax.device_put(jnp.asarray(x), sh),
+            params, self.param_shardings)
+
+    def _place_opt(self, opt: Tree) -> Tree:
+        """Optimizer state placement: any subtree shaped exactly like the
+        params tree (adam's m/v moments, DPU's banked grads) gets the
+        params' shardings leaf-for-leaf; everything else (count flags,
+        scalars) replicates."""
+        if opt is None:
+            return None
+
+        def place(sub):
+            if jax.tree.structure(sub) == self._params_treedef:
+                return self._place_params(sub)
+            if isinstance(sub, dict):
+                return {k: place(v) for k, v in sub.items()}
+            return jax.device_put(jnp.asarray(sub), self._repl)
+
+        return place(opt)
+
+    # ---------------------------------------------------------- lifecycle
+    def init_state(self, key: jax.Array) -> StageState:
+        state = StageState(params=self._place_params(
+            init_stage_params([self.prog], key)[0]))
+        state.reset_progress()
+        return state
+
+    def for_stage(self, stage: int) -> "MeshExecutor":
+        if stage == self.stage:
+            return self
+        return MeshExecutor(self.cfg, self.n_stages, self.seq_len, stage,
+                            self.mesh, self.compress_mode,
+                            self.quant_block, self.rules, self.batch_axis)
+
+    def dp_shards(self, batch: int) -> int:
+        """Actual data-parallel split of a ``batch``-sized microbatch —
+        mirrors ``resolve_spec``'s divisibility fallback: a batch that
+        does not divide the data axis replicates (no speedup)."""
+        n = int(self.mesh.shape.get(self.batch_axis, 1))
+        return n if n > 1 and batch % n == 0 else 1
+
+    # ---------------------------------------------------------- execution
+    def run_fwd(self, state: StageState, inp: Tree,
+                labels: Optional[jax.Array] = None) -> Tree:
+        inp = self._place_batch(inp)
+        if self.stage == self.n_stages - 1:
+            return self._fwd_j(state.params, inp, self._place_batch(labels))
+        return self._fwd_j(state.params, inp)
+
+    def run_bwd(self, state: StageState, inp: Tree,
+                dy: Optional[Tree] = None,
+                labels: Optional[jax.Array] = None):
+        inp = self._place_batch(inp)
+        if self.stage == self.n_stages - 1:
+            loss, gx, gp = self._bwd_j(state.params, inp,
+                                       self._place_batch(labels))
+            return loss, gx, gp
+        gx, gp = self._bwd_j(state.params, inp, self._place_batch(dy))
+        return None, gx, gp
+
+    # --------------------------------------------------------- wire codec
+    def wire_fwd(self, y: Tree) -> Tree:
+        # the wire IS the host: gather off the mesh so any backend (a
+        # single-device peer, another mesh) can ingest the tensor
+        return jax.device_get(wire_fwd_codec(self, y))
+
+    def wire_bwd(self, gx: Tree) -> Tree:
+        gx = wire_bwd_codec(self, gx)
+        return None if gx is None else jax.device_get(gx)
+
+    # -------------------------------------------------------- accumulation
+    def accumulate(self, state: StageState, gp: Optional[Tree],
+                   loss: Optional[float], n_tokens: int) -> None:
+        fold_into(state, gp, loss, n_tokens)
+
+    def export_grads(self, state: StageState) -> Tree:
+        # host-gathered: addable with any other backend's accumulator
+        return jax.device_get(state.grad_acc)
+
+    def export_state(self, state: StageState):
+        return jax.device_get(state.params), jax.device_get(state.opt)
+
+    def adopt_step(self, state: StageState, new_params: Tree,
+                   new_opt: Tree) -> None:
+        state.params = self._place_params(new_params)
+        state.opt = self._place_opt(new_opt)
+        state.version += 1
+        state.reset_progress()
+
+    # ---------------------------------------------------- state transfer
+    def snapshot(self, state: StageState) -> Tree:
+        return host_snapshot(state)
+
+    def restore(self, state: StageState, snap: Tree) -> None:
+        state.params = self._place_params(snap["params"])
+        state.opt = self._place_opt(snap.get("opt"))
+        state.version = int(snap.get("version", 0))
+        state.reset_progress()

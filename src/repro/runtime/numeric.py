@@ -1,0 +1,195 @@
+"""NumericExecutor — single-device stage math behind a shared jit cache.
+
+Absorbs the ``StageProgram`` machinery (``repro.runtime.stage_model``,
+formerly ``repro.core.stage_model`` — a shim keeps the old import path)
+behind a *process-wide* compile cache keyed on ``(arch config, stage
+count, sequence length, codec mode)``: every peer of a stage — across
+runners, across the churn tests' seed matrix, across benchmark repeats —
+shares one jitted ``fwd``/``bwd`` per stage instead of re-tracing its
+own.  A retrace counter (a trace-time side effect inside the jitted
+body) records every actual XLA trace per ``(stage, kind, argument
+shapes)``; ``compile_stats()`` is what the fairness/retrace tests and
+``benchmarks/bench_swarm.py`` read.
+
+Gradient accumulation donates the accumulator buffer (``grad_acc`` is
+exclusively owned by its :class:`StageState`), so the fold is in-place
+at the XLA level — no second gradient-sized live buffer per microbatch.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import codecs
+from repro.models.config import ArchConfig
+from repro.runtime.base import StageState, fold_into, host_snapshot, \
+    wire_bwd_codec, wire_fwd_codec
+from repro.runtime.stage_model import (StageProgram, build_stage_programs,
+                                       init_stage_params)
+
+Tree = Any
+
+# ---------------------------------------------------------------- caches
+# (cfg, n_stages, seq_len, comp) -> list[StageProgram]; ArchConfig is a
+# frozen dataclass, hence hashable — identical configs share programs.
+_PROGRAMS: dict[tuple, list[StageProgram]] = {}
+# (stage, kind, shapes) per program-cache key -> number of XLA traces
+_TRACES: dict[tuple, int] = {}
+_LOCK = threading.Lock()
+
+
+def record_trace(key: tuple) -> None:
+    """Count one XLA trace under ``key`` — the single counter store for
+    every backend (numeric programs and mesh jits both report here)."""
+    with _LOCK:
+        _TRACES[key] = _TRACES.get(key, 0) + 1
+
+
+def reset_compile_stats() -> None:
+    """Clear retrace counters AND every jit cache — numeric programs and
+    mesh jits alike — so tests/benchmarks that assert compile counts
+    start from a genuinely cold cache."""
+    from repro.runtime import mesh as mesh_rt   # lazy: mesh imports us
+    with _LOCK:
+        _TRACES.clear()
+        _PROGRAMS.clear()
+    with mesh_rt._LOCK:
+        mesh_rt._MESH_JITS.clear()
+
+
+def compile_stats() -> dict:
+    """``{"programs_cached", "traces", "per_key"}`` — ``traces`` is the
+    total number of XLA traces since the last reset; ``per_key`` maps
+    ``(cfg_name, n_stages, seq, comp, stage, kind, shapes)`` -> count."""
+    with _LOCK:
+        return {"programs_cached": len(_PROGRAMS),
+                "traces": sum(_TRACES.values()),
+                "per_key": dict(_TRACES)}
+
+
+def get_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
+                       compress: Optional[str] = None
+                       ) -> list[StageProgram]:
+    """The shared, counted stage programs for this configuration."""
+    comp = codecs.resolve_mode(cfg, compress)
+    key = (cfg, n_stages, seq_len, comp)
+    with _LOCK:
+        progs = _PROGRAMS.get(key)
+    if progs is not None:
+        return progs
+    tag = (cfg.name, n_stages, seq_len, comp)
+
+    def hook(stage: int, kind: str, shapes: tuple):
+        record_trace(tag + (stage, kind, shapes))
+
+    progs = build_stage_programs(cfg, n_stages, seq_len, compress=comp,
+                                 trace_hook=hook)
+    with _LOCK:
+        # first build wins if two threads raced; both lists are equivalent
+        progs = _PROGRAMS.setdefault(key, progs)
+    return progs
+
+
+class NumericExecutor:
+    """Single-device stage execution (today's eager-ish SWARM peer)."""
+
+    device_count = 1
+
+    def __init__(self, cfg: ArchConfig, prog: StageProgram,
+                 compress_mode: str, quant_block: int = 64,
+                 family: Optional[list["NumericExecutor"]] = None):
+        self.cfg = cfg
+        self.prog = prog
+        self.stage = prog.stage
+        self.n_stages = prog.n_stages
+        self.compress_mode = compress_mode
+        self.quant_block = quant_block
+        self.fwd_flops_per_token = prog.fwd_flops_per_token
+        self.bwd_flops_per_token = prog.bwd_flops_per_token
+        # all executors of one pipeline, so migrations can swap stages
+        self._family = family if family is not None else [self]
+
+    # ---------------------------------------------------------- lifecycle
+    def init_state(self, key: jax.Array) -> StageState:
+        state = StageState(params=init_stage_params([self.prog], key)[0])
+        state.reset_progress()
+        return state
+
+    def for_stage(self, stage: int) -> "NumericExecutor":
+        return self._family[stage]
+
+    def dp_shards(self, batch: int) -> int:
+        del batch
+        return 1
+
+    # ---------------------------------------------------------- execution
+    def run_fwd(self, state: StageState, inp: Tree,
+                labels: Optional[jax.Array] = None) -> Tree:
+        if self.stage == self.n_stages - 1:
+            return self.prog.fwd(state.params, inp, labels)
+        return self.prog.fwd(state.params, inp)
+
+    def run_bwd(self, state: StageState, inp: Tree,
+                dy: Optional[Tree] = None,
+                labels: Optional[jax.Array] = None):
+        if self.stage == self.n_stages - 1:
+            loss, gx, gp = self.prog.bwd(state.params, inp, labels)
+            return loss, gx, gp
+        gx, gp = self.prog.bwd(state.params, inp, dy)
+        return None, gx, gp
+
+    # --------------------------------------------------------- wire codec
+    def wire_fwd(self, y: Tree) -> Tree:
+        return wire_fwd_codec(self, y)
+
+    def wire_bwd(self, gx: Tree) -> Tree:
+        return wire_bwd_codec(self, gx)
+
+    # -------------------------------------------------------- accumulation
+    def accumulate(self, state: StageState, gp: Optional[Tree],
+                   loss: Optional[float], n_tokens: int) -> None:
+        fold_into(state, gp, loss, n_tokens)
+
+    def export_grads(self, state: StageState) -> Tree:
+        return state.grad_acc                   # already scheduler-local
+
+    def export_state(self, state: StageState):
+        return state.params, state.opt
+
+    def adopt_step(self, state: StageState, new_params: Tree,
+                   new_opt: Tree) -> None:
+        state.params = new_params
+        state.opt = new_opt
+        state.version += 1
+        state.reset_progress()
+
+    # ---------------------------------------------------- state transfer
+    def snapshot(self, state: StageState) -> Tree:
+        return host_snapshot(state)
+
+    def restore(self, state: StageState, snap: Tree) -> None:
+        state.params = jax.tree.map(jnp.asarray, snap["params"])
+        state.opt = (jax.tree.map(jnp.asarray, snap["opt"])
+                     if snap.get("opt") is not None else None)
+        state.version = int(snap.get("version", 0))
+        state.reset_progress()
+
+
+def build_numeric_executors(cfg: ArchConfig, n_stages: int, seq_len: int,
+                            compress: Optional[str] = None,
+                            quant_block: int = 64,
+                            programs: Optional[list[StageProgram]] = None
+                            ) -> list[NumericExecutor]:
+    """One executor per stage, all sharing the cached programs (or an
+    injected pre-built list, e.g. the churn tests' shared seed matrix)."""
+    comp = codecs.resolve_mode(cfg, compress)
+    progs = programs if programs is not None else \
+        get_stage_programs(cfg, n_stages, seq_len, comp)
+    family: list[NumericExecutor] = []
+    for p in progs:
+        family.append(NumericExecutor(cfg, p, comp, quant_block,
+                                      family=family))
+    return family

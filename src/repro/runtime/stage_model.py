@@ -1,0 +1,212 @@
+"""Partition an ArchConfig into SWARM pipeline stages (stage programs).
+
+Stage 0 additionally owns the embedding, the last stage the final norm +
+LM head + loss (mirroring the paper's §4.3 placement).  Backward runs via
+activation checkpointing: a stage recomputes its forward from the boundary
+input it is handed, so backward can be re-routed to *any* peer of the stage
+after a failure (App. A).
+
+Under a learned boundary codec (paper App. J: ``compress="bottleneck"`` /
+``"maxout"``) each stage's program *includes* its side of the codec: a
+sending stage compresses its output (owning ``w_c`` for the bottleneck), a
+receiving stage decompresses its input (owning ``w_d``) — so the tensor a
+trainer carries between peers IS the c-dim wire tensor, and codec gradients
+arrive through the ordinary per-stage ``bwd`` like any other parameter.
+``"int8"`` stays outside the programs (the trainer round-trips the wire
+tensor), matching SWARM's quantize-on-send.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression import codecs
+from repro.models.config import ArchConfig
+from repro.models import params as P
+from repro.models import layers as L
+from repro.models import model as model_lib
+from repro.models.blocks import REGISTRY
+from repro.models import flops as F
+from repro.train.steps import cross_entropy
+
+Tree = Any
+
+
+@dataclasses.dataclass
+class StageProgram:
+    stage: int
+    n_stages: int
+    specs: Tree
+    fwd: Callable                 # jitted
+    bwd: Callable                 # jitted
+    fwd_flops_per_token: float
+    bwd_flops_per_token: float    # includes checkpoint recompute
+    fwd_fn: Optional[Callable] = None   # unjitted (mesh backends re-jit
+    bwd_fn: Optional[Callable] = None   # with their own shardings)
+
+
+def _traced(fn: Callable, hook: Optional[Callable], stage: int, kind: str
+            ) -> Callable:
+    """Jit ``fn``; if ``hook`` is given, call it once per XLA trace (the
+    body side effect runs at trace time only) with the argument shapes —
+    the runtime layer's retrace counter hangs off this."""
+    if hook is None:
+        return jax.jit(fn)
+
+    def counted(*args):
+        hook(stage, kind, tuple(tuple(a.shape) for a in args
+                                if hasattr(a, "shape")))
+        return fn(*args)
+    return jax.jit(counted)
+
+
+def _stage_slice(cfg: ArchConfig, stage: int, n_stages: int):
+    per = cfg.n_layers // n_stages
+    lo, hi = stage * per, (stage + 1) * per
+    if cfg.share_groups:
+        # one shared parameter group per stage (paper §4.3: 3 stages x 16
+        # shared layers); reuse count = layers per stage
+        assert cfg.share_groups == n_stages, (
+            "share_groups must equal n_stages for the paper's model")
+        return cfg.block_kinds[lo:hi], True
+    return cfg.block_kinds[lo:hi], False
+
+
+def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
+                         compress: Optional[str] = None,
+                         trace_hook: Optional[Callable] = None
+                         ) -> list[StageProgram]:
+    assert cfg.n_layers % n_stages == 0
+    assert cfg.encoder_layers == 0, "enc-dec archs use pod-DP (DESIGN §5)"
+    comp = codecs.resolve_mode(cfg, compress)
+    learned = comp in codecs.LEARNED and n_stages > 1
+    programs = []
+    for s in range(n_stages):
+        kinds, shared = _stage_slice(cfg, s, n_stages)
+        runs = model_lib.segments(kinds)
+        if shared:
+            runs = [(kinds[0], 1)]          # single shared group
+        reps = len(kinds) if shared else 1
+
+        specs: Tree = {"blocks": [
+            model_lib.stack_specs(REGISTRY[k][0](cfg), n) for k, n in runs]}
+        if s == 0:
+            specs["embed"] = P.ParamSpec(
+                (cfg.vocab_size, cfg.d_model), cfg.param_jdtype, "embed",
+                ("vocab", "embed"))
+        if s == n_stages - 1:
+            specs["final_norm"] = L.norm_specs(cfg)
+            if not cfg.tie_embeddings or s != 0:
+                specs["head"] = P.ParamSpec(
+                    (cfg.d_model, cfg.vocab_size), cfg.param_jdtype,
+                    "normal", ("embed", "vocab"))
+        if learned:
+            # receiving side (w_d) for s > 0, sending side (w_c) for
+            # s < S-1; maxout's compress is param-free so its stage-0
+            # "boundary" tree is empty and omitted
+            bnd: Tree = {}
+            if s > 0:
+                bnd.update(codecs.receiver_specs(cfg, comp))
+            if s < n_stages - 1:
+                bnd.update(codecs.sender_specs(cfg, comp))
+            if bnd:
+                specs["boundary"] = bnd
+
+        def run_blocks(params, x, _runs=runs, _reps=reps):
+            positions = jnp.arange(x.shape[1])
+            for (kind, _), seg in zip(_runs, params["blocks"]):
+                apply_fn = REGISTRY[kind][1]
+
+                def body(x, p_l, _a=apply_fn, _r=_reps):
+                    for _ in range(_r):
+                        x, _aux = _a(cfg, p_l, x, positions)
+                    return x, None
+                x, _ = jax.lax.scan(body, x, seg)
+            return x
+
+        is_first, is_last = s == 0, s == n_stages - 1
+
+        def stage_fwd(params, inp, _rb=run_blocks, _first=is_first,
+                      _last=is_last):
+            if _first:
+                tokens = inp
+                x = params["embed"][tokens].astype(cfg.compute_jdtype)
+                if cfg.scale_embed:
+                    x = x * (cfg.d_model ** 0.5)
+            else:
+                x = inp.astype(cfg.compute_jdtype)
+                if learned:          # wire tensor arrives c-dim: restore
+                    x = codecs.decompress(cfg, comp,
+                                          params.get("boundary"), x)
+            x = _rb(params, x)
+            if learned and not _last:    # emit the c-dim wire tensor
+                x = codecs.compress(cfg, comp, params.get("boundary"), x)
+            return x
+
+        def stage_loss(params, inp, labels, _fwd=stage_fwd):
+            x = _fwd(params, inp)
+            x = L.apply_norm(cfg, params["final_norm"], x)
+            w = (params["embed"].T if cfg.tie_embeddings and "head" not in
+                 params else params["head"])
+            logits = x @ w.astype(x.dtype)
+            # token-sum CE so microbatch gradients add exactly (App. E)
+            logits = logits.astype(jnp.float32)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, labels[..., None],
+                                       axis=-1)[..., 0]
+            return jnp.sum(lse - gold)
+
+        if is_last:
+            def fwd(params, inp, labels, _sl=stage_loss):
+                return _sl(params, inp, labels)
+
+            def bwd(params, inp, labels, _sl=stage_loss):
+                if is_first_and_last := (n_stages == 1):
+                    (loss), g = jax.value_and_grad(_sl)(params, inp, labels)
+                    return loss, None, g
+                (loss), (gp, gx) = jax.value_and_grad(_sl, argnums=(0, 1))(
+                    params, inp, labels)
+                return loss, gx, gp
+        elif is_first:
+            def fwd(params, inp, _sf=stage_fwd):
+                return _sf(params, inp)
+
+            def bwd(params, inp, dy, _sf=stage_fwd):
+                y, pullback = jax.vjp(lambda p: _sf(p, inp), params)
+                (gp,) = pullback(dy.astype(y.dtype))
+                return None, gp
+        else:
+            def fwd(params, inp, _sf=stage_fwd):
+                return _sf(params, inp)
+
+            def bwd(params, inp, dy, _sf=stage_fwd):
+                y, pullback = jax.vjp(_sf, params, inp)
+                gp, gx = pullback(dy.astype(y.dtype))
+                return gx, gp
+        fwd_j = _traced(fwd, trace_hook, s, "fwd")
+        bwd_j = _traced(bwd, trace_hook, s, "bwd")
+
+        ctx = F._ctx_for(cfg, seq_len, causal_avg=True)
+        layer_f = sum(F.per_token_layer_flops(cfg, k, ctx) for k in kinds)
+        head_f = 2 * cfg.d_model * cfg.vocab_size if is_last else 0.0
+        codec_f = codecs.codec_flops_per_token(
+            cfg, comp, sender=learned and not is_last,
+            receiver=learned and not is_first)
+        fwd_f = layer_f + head_f + codec_f
+        programs.append(StageProgram(
+            stage=s, n_stages=n_stages, specs=specs, fwd=fwd_j, bwd=bwd_j,
+            fwd_flops_per_token=fwd_f,
+            bwd_flops_per_token=3.0 * fwd_f,   # recompute + 2x backward
+            fwd_fn=fwd, bwd_fn=bwd,
+        ))
+    return programs
+
+
+def init_stage_params(programs: list[StageProgram], key: jax.Array
+                      ) -> list[Tree]:
+    keys = jax.random.split(key, len(programs))
+    return [P.init(k, p.specs) for k, p in zip(keys, programs)]

@@ -59,3 +59,42 @@ def tiny_dense_config(**kw):
                 param_dtype="float32")
     base.update(kw)
     return ArchConfig(**base)
+
+
+def reference_losses(cfg, programs, opt, seed, steps, seq, mb, gb,
+                     data_seed=17):
+    """Fault-free sequential 2-stage reference trajectory (same data
+    order, same params init) — the oracle every churn-/runtime-
+    equivalence test compares a SwarmRunner against.  One copy: the
+    accumulation and token-weighted averaging conventions here must
+    stay in lockstep with ``SwarmRunner._all_reduce_and_step``."""
+    import jax
+    import jax.numpy as jnp
+    from repro.data.synthetic import SyntheticLM
+    from repro.runtime import init_stage_params
+
+    assert len(programs) == 2
+    params = init_stage_params(programs, jax.random.PRNGKey(seed))
+    opt_states = [opt.init(p) for p in params]
+    ds = SyntheticLM(cfg.vocab_size, seq, mb, seed=data_seed)
+    idx, losses = 0, []
+    for _ in range(steps):
+        grads = [jax.tree.map(jnp.zeros_like, p) for p in params]
+        loss_sum, tok = 0.0, 0
+        for _ in range(gb // mb):
+            b = ds.batch(idx)
+            idx += 1
+            x = programs[0].fwd(params[0], b["tokens"])
+            loss, gx, gp1 = programs[1].bwd(params[1], x, b["labels"])
+            _, gp0 = programs[0].bwd(params[0], b["tokens"], gx)
+            grads[0] = jax.tree.map(jnp.add, grads[0], gp0)
+            grads[1] = jax.tree.map(jnp.add, grads[1], gp1)
+            loss_sum += float(loss)
+            tok += mb * seq
+        losses.append(loss_sum / tok)
+        for s in range(2):
+            gm = jax.tree.map(lambda g: g / tok, grads[s])
+            upd, opt_states[s] = opt.update(gm, opt_states[s], params[s])
+            params[s] = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
+                                     params[s], upd)
+    return losses

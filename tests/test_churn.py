@@ -15,12 +15,11 @@ import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from conftest import tiny_dense_config
+from conftest import reference_losses, tiny_dense_config
 from repro.core import SwarmRunner, SwarmConfig, TraceEvent, MicrobatchLedger
 from repro.core.faults import synth_preemptible_trace
 from repro.core.sim import Sleep
-from repro.core.stage_model import build_stage_programs, init_stage_params
-from repro.data.synthetic import SyntheticLM
+from repro.core.stage_model import build_stage_programs
 from repro.optim import adamw
 
 SEQ, MB, GB, STEPS = 32, 2, 8, 3
@@ -85,31 +84,8 @@ def churn_setup():
 
 
 def _reference_losses(cfg, programs, opt, seed):
-    """Fault-free sequential twin (same data order, same params init)."""
-    params = init_stage_params(programs, jax.random.PRNGKey(seed))
-    opt_states = [opt.init(p) for p in params]
-    ds = SyntheticLM(cfg.vocab_size, SEQ, MB, seed=17)
-    idx, losses = 0, []
-    for _ in range(STEPS):
-        grads = [jax.tree.map(jnp.zeros_like, p) for p in params]
-        loss_sum, tok = 0.0, 0
-        for _ in range(GB // MB):
-            b = ds.batch(idx)
-            idx += 1
-            x = programs[0].fwd(params[0], b["tokens"])
-            loss, gx, gp1 = programs[1].bwd(params[1], x, b["labels"])
-            _, gp0 = programs[0].bwd(params[0], b["tokens"], gx)
-            grads[0] = jax.tree.map(jnp.add, grads[0], gp0)
-            grads[1] = jax.tree.map(jnp.add, grads[1], gp1)
-            loss_sum += float(loss)
-            tok += MB * SEQ
-        losses.append(loss_sum / tok)
-        for s in range(2):
-            gm = jax.tree.map(lambda g: g / tok, grads[s])
-            upd, opt_states[s] = opt.update(gm, opt_states[s], params[s])
-            params[s] = jax.tree.map(lambda p, u: p + u.astype(p.dtype),
-                                     params[s], upd)
-    return losses
+    """Fault-free sequential twin (shared oracle in conftest)."""
+    return reference_losses(cfg, programs, opt, seed, STEPS, SEQ, MB, GB)
 
 
 def _force_migration(runner, at):

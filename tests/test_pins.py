@@ -1,0 +1,60 @@
+"""Dependency-pin guards.
+
+The repo carries two shims that are only valid on the jax 0.4.x line
+pinned in requirements.txt (``jax>=0.4.35,<0.5``):
+
+* ``repro.dist.pipeline._restack`` — works around the XLA 0.4.x SPMD
+  partitioner miscompiling a concatenate whose concat dim is sharded;
+* ``repro._compat.AxisType`` — backports ``jax.sharding.AxisType`` /
+  ``make_mesh(axis_types=...)``.
+
+These tests FAIL the moment the pin (or the installed jax) crosses 0.5,
+so whoever moves the pin is forced to re-evaluate both: re-test whether
+plain ``jnp.stack`` partitions correctly (see
+``test_distribution.py::test_pipeline_mixed_kind_equals_reference``) and
+drop the shims if so.
+"""
+import os
+import re
+
+import jax
+
+from repro.dist.pipeline import JAX_PIN_CEILING
+
+_MSG = ("jax pin crossed {ceiling}: re-evaluate (1) the "
+        "dist/pipeline.py::_restack XLA-SPMD concatenate workaround "
+        "(plain jnp.stack may be safe now — run the mixed-kind pipeline "
+        "equivalence test) and (2) the repro._compat AxisType/make_mesh "
+        "shim (native in jax >= 0.5); drop them and this guard if they "
+        "are no longer needed.")
+
+
+def _requirements_jax_spec() -> str:
+    path = os.path.join(os.path.dirname(__file__), "..", "requirements.txt")
+    with open(path) as f:
+        for line in f:
+            line = line.split("#")[0].strip()
+            if re.match(r"^jax([<>=!~\[]|$)", line):
+                return line
+    raise AssertionError("no jax pin found in requirements.txt")
+
+
+def test_requirements_pin_below_ceiling():
+    """The requirement must not admit any jax version at/past the
+    ceiling — specifier-aware, so `jax==0.4.38` or `jax~=0.4.35` (both
+    legal below-ceiling pins) pass while `jax>=0.4` fails."""
+    from packaging.specifiers import SpecifierSet  # pytest dependency
+    line = _requirements_jax_spec().replace(" ", "")
+    spec = SpecifierSet(re.sub(r"^jax(\[[^\]]*\])?", "", line))
+    ceiling = ".".join(map(str, JAX_PIN_CEILING))
+    probes = [f"{ceiling}.0", "0.9.99", "1.0.0"]
+    admitted = [v for v in probes if v in spec]
+    assert not admitted, _MSG.format(ceiling=ceiling) + \
+        f" (requirements.txt {line!r} admits {admitted})"
+
+
+def test_installed_jax_below_ceiling():
+    installed = tuple(int(x) for x in jax.__version__.split(".")[:2])
+    assert installed < JAX_PIN_CEILING, \
+        _MSG.format(ceiling=JAX_PIN_CEILING) + \
+        f" (installed jax {jax.__version__})"
