@@ -1,14 +1,22 @@
 """Stage-runtime benchmark: numeric swarm throughput + compile accounting.
 
 Emits machine-readable ``artifacts/BENCH_swarm.json`` so the perf
-trajectory (throughput, step time, compile/retrace counts) is tracked
-across PRs — CI uploads it as an artifact.
+trajectory (throughput, step time, compile/retrace counts, host wire
+bytes) is tracked across PRs — CI uploads it as an artifact.
 
-The headline invariant: on a 4-peer / 2-stage numeric run the shared
-compile cache of ``repro.runtime`` produces **one jit per (stage, kind)**
-— at least 2x fewer stage compiles than the per-peer re-tracing baseline
-of ``peers x stages`` (it is 4 vs 8 here, and the gap widens linearly
-with swarm size).  A second same-shape runner re-traces nothing.
+Two headline invariants:
+
+* **shared compile cache** — on a 4-peer / 2-stage numeric run the
+  runtime produces **one jit per (stage, kind)**: at least 2x fewer
+  stage compiles than the per-peer re-tracing baseline of ``peers x
+  stages`` (4 vs 8 here; the gap widens linearly with swarm size), and a
+  second same-shape runner re-traces nothing;
+* **span fusion** — the same workload served by span peers
+  (``PipelineExecutor``, stages [0, 2) fused per peer, learned
+  bottleneck codec on) reaches the SAME loss trajectory while moving
+  strictly fewer boundary bytes through the host (zero, for whole-pipe
+  spans), compiling exactly once per (span, kind, codec), with zero
+  re-traces on a second runner.
 """
 from __future__ import annotations
 
@@ -19,7 +27,8 @@ import time
 from repro.core import SwarmRunner, SwarmConfig
 from repro.models.config import ArchConfig
 from repro.optim import adamw
-from repro.runtime import compile_stats, reset_compile_stats
+from repro.runtime import PipelineExecutor, compile_stats, \
+    reset_compile_stats
 
 PEERS_PER_STAGE, N_STAGES, STEPS = 2, 2, 2       # 4 peers, 2 stages
 
@@ -27,17 +36,52 @@ CFG = ArchConfig(name="bench-swarm-tiny", family="dense", n_layers=4,
                  d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
                  vocab_size=256, head_dim=16, compute_dtype="float32",
                  param_dtype="float32")
+# span comparison runs with the learned codec on (the acceptance bar:
+# fewer host bytes at equal loss, codec active)
+CFG_CODEC = CFG.with_overrides(name="bench-swarm-tiny-codec",
+                               boundary_compression="bottleneck",
+                               bottleneck_dim=16)
+
+
+def _scfg(compress) -> SwarmConfig:
+    return SwarmConfig(n_stages=N_STAGES, microbatch_size=2, seq_len=32,
+                       global_batch=8, n_trainers=3, rebalance_period=0.0,
+                       compress=compress, max_steps=STEPS)
 
 
 def _run_numeric(seed: int) -> tuple[SwarmRunner, float]:
-    scfg = SwarmConfig(n_stages=N_STAGES, microbatch_size=2, seq_len=32,
-                       global_batch=8, n_trainers=3, rebalance_period=0.0,
-                       compress=False, max_steps=STEPS)
-    r = SwarmRunner(CFG, scfg, adamw(lr=1e-2), numeric=True, seed=seed)
+    r = SwarmRunner(CFG, _scfg(False), adamw(lr=1e-2), numeric=True,
+                    seed=seed)
     r.build(peers_per_stage=PEERS_PER_STAGE)
     t0 = time.perf_counter()
     r.run(until=1e6)
     return r, time.perf_counter() - t0
+
+
+def _run_codec(seed: int, span: bool) -> tuple[SwarmRunner, float]:
+    """Same workload, codec on: all-single-stage peers vs all peers
+    serving stages [0, 2) fused (span=True)."""
+    r = SwarmRunner(CFG_CODEC, _scfg("bottleneck"), adamw(lr=1e-2),
+                    numeric=True, seed=seed)
+    if span:
+        for _ in range(PEERS_PER_STAGE):
+            r.add_peer(range(0, N_STAGES), executor=PipelineExecutor(
+                CFG_CODEC, N_STAGES, 32, (0, N_STAGES),
+                compress="bottleneck"))
+        r.build(peers_per_stage=0)
+    else:
+        r.build(peers_per_stage=PEERS_PER_STAGE)
+    t0 = time.perf_counter()
+    r.run(until=1e6)
+    return r, time.perf_counter() - t0
+
+
+def _span_trace_keys(stats: dict) -> dict:
+    """per_key entries belonging to fused span programs (their stage slot
+    is a (lo, hi) tuple rather than an int)."""
+    return {k: v for k, v in stats["per_key"].items()
+            if any(isinstance(e, tuple) and len(e) == 2
+                   and all(isinstance(x, int) for x in e) for e in k[4:5])}
 
 
 def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
@@ -48,6 +92,16 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     first = compile_stats()
     r2, wall2 = _run_numeric(seed=1)         # same shapes: cache hits only
     second = compile_stats()
+
+    # ---- span vs single, codec on, same seed => same trajectory
+    reset_compile_stats()
+    rs_single, wall_single = _run_codec(seed=0, span=False)
+    single_stats = compile_stats()
+    rs_span, wall_span = _run_codec(seed=0, span=True)
+    span_stats = compile_stats()
+    span_keys = _span_trace_keys(span_stats)
+    rs_span2, _ = _run_codec(seed=1, span=True)   # warm span cache
+    span_stats2 = compile_stats()
 
     peers = PEERS_PER_STAGE * N_STAGES
     naive = peers * N_STAGES                 # per-peer re-trace baseline
@@ -70,6 +124,21 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
             "per_key": {" ".join(map(str, k)): v
                         for k, v in sorted(first["per_key"].items())},
         },
+        # span-vs-single (codec on, identical seed/sample order):
+        "span": {
+            "model": CFG_CODEC.name,
+            "span": [0, N_STAGES],
+            "single_loss": rs_single.metrics["loss"],
+            "span_loss": rs_span.metrics["loss"],
+            "single_wire_bytes": rs_single.metrics["wire_bytes"],
+            "span_wire_bytes": rs_span.metrics["wire_bytes"],
+            "single_throughput_sim": rs_single.throughput(),
+            "span_throughput_sim": rs_span.throughput(),
+            "span_compiles": {" ".join(map(str, k)): v
+                              for k, v in sorted(span_keys.items())},
+            "span_compiles_after_second_runner":
+                sum(_span_trace_keys(span_stats2).values()),
+        },
     }
     # write the record FIRST: a regression must still leave the artifact
     # behind for diagnosis (CI uploads it with `if: always()`)
@@ -83,11 +152,31 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     assert second["traces"] == first["traces"], (
         "second same-shape runner re-traced: "
         f"{second['traces']} vs {first['traces']}")
+
+    # ---- span invariants (the ISSUE 5 acceptance bar)
+    sp = report["span"]
+    assert len(sp["span_loss"]) == STEPS and len(sp["single_loss"]) == STEPS
+    for a, b in zip(sp["span_loss"], sp["single_loss"]):
+        assert abs(a - b) < 2e-4, (
+            f"span trajectory diverged from single-stage: {a} vs {b}")
+    assert sp["span_wire_bytes"] < sp["single_wire_bytes"], (
+        "span run did not reduce host boundary bytes: "
+        f"{sp['span_wire_bytes']} vs {sp['single_wire_bytes']}")
+    assert span_keys and all(v == 1 for v in span_keys.values()), (
+        f"span program compiled more than once per (span, kind, shapes): "
+        f"{span_keys}")
+    assert sum(_span_trace_keys(span_stats2).values()) == \
+        sum(span_keys.values()), "second span runner re-traced"
+
     print(f"swarm/compiles,0,first={first['traces']} naive={naive} "
           f"second_run_new=0")
     print(f"swarm/throughput,0,sim={r1.throughput():.2f}/s "
           f"mean_step={mean_step:.3f}s wall1={wall1:.1f}s "
           f"wall2={wall2:.1f}s")
+    print(f"swarm/span,0,wire_bytes {sp['span_wire_bytes']:.0f} vs "
+          f"{sp['single_wire_bytes']:.0f} single; span compiles "
+          f"{sum(span_keys.values())} (1 per (span,kind)); loss equal "
+          f"at 2e-4")
     print(f"swarm/json,0,{out_path}")
     return report
 

@@ -8,12 +8,13 @@ from repro.models.config import ArchConfig, reduced
 from repro.configs import (
     yi_6b, h2o_danube_3_4b, qwen15_4b, gemma_2b, qwen2_vl_2b, xlstm_125m,
     whisper_large_v3, hymba_1_5b, llama4_scout_17b_a16e, deepseek_v2_236b,
-    swarm1b, swarm1b_bottleneck, swarm1b_maxout,
+    swarm1b, swarm1b_bottleneck, swarm1b_maxout, swarm1b_span,
 )
 
 _MODULES = [yi_6b, h2o_danube_3_4b, qwen15_4b, gemma_2b, qwen2_vl_2b,
             xlstm_125m, whisper_large_v3, hymba_1_5b, llama4_scout_17b_a16e,
-            deepseek_v2_236b, swarm1b, swarm1b_bottleneck, swarm1b_maxout]
+            deepseek_v2_236b, swarm1b, swarm1b_bottleneck, swarm1b_maxout,
+            swarm1b_span]
 
 REGISTRY: dict[str, ArchConfig] = {m.CONFIG.name: m.CONFIG for m in _MODULES}
 

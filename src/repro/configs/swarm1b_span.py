@@ -1,0 +1,21 @@
+"""swarm-1b for span-peer serving: the learned bottleneck codec plus a
+pipeline depth sized so well-provisioned peers fuse *several consecutive
+stages* in one jit (``repro.runtime.PipelineExecutor``) — the paper's
+square-cube rebalancing made literal.  Every fused boundary keeps its
+compress/decompress pair on-device, so the c-dim wire tensor only exists
+at span edges: a peer serving 2 of the 3 stages moves HALF the boundary
+bytes of three single-stage peers at identical numerics (the span
+churn-equivalence tests pin this at 2e-4).
+
+Used by ``benchmarks/bench_swarm.py``'s span-vs-single comparison and by
+``SwarmConfig(spans=True)`` runs, where Alg. 2 proposes span splits and
+merges on membership change.
+"""
+from repro.configs.swarm1b import CONFIG as _BASE
+
+CONFIG = _BASE.with_overrides(
+    name="swarm-1b-span",
+    boundary_compression="bottleneck",
+    bottleneck_dim=1024,
+    pipeline_stages=3,
+)

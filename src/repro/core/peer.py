@@ -30,6 +30,18 @@ class PeerFailure(Exception):
     pass
 
 
+def _alias_state(dst: StageState, src: StageState) -> None:
+    """Zero-copy single-stage state adoption (identical backend +
+    placement: aliasing the immutable device arrays is exact)."""
+    dst.params = jax.tree.map(lambda x: x, src.params)
+    dst.opt = jax.tree.map(lambda x: x, src.opt)
+    dst.version = src.version
+    dst.grad_acc = (jax.tree.map(jnp.zeros_like, src.params)
+                    if src.params is not None else None)
+    dst.loss_sum = 0.0
+    dst.token_count = 0
+
+
 @dataclasses.dataclass(frozen=True)
 class DeviceProfile:
     """Effective (not peak) throughput + NIC model, per paper §4 hardware."""
@@ -69,30 +81,58 @@ class _Task:
 class Peer:
     _ids = 0
 
-    def __init__(self, sim: Sim, profile: DeviceProfile, stage: int,
-                 *, name: Optional[str] = None, executor=None):
+    def __init__(self, sim: Sim, profile: DeviceProfile,
+                 stage: "int | range", *, name: Optional[str] = None,
+                 executor=None):
         Peer._ids += 1
         self.id = name or f"peer{Peer._ids}"
         self.sim = sim
         self.profile = profile
-        self.stage = stage
-        # how this peer runs its stage (repro.runtime.StageExecutor):
+        # how this peer runs its stages (repro.runtime.StageExecutor):
         # a NumericExecutor shared by the stage's peers, a MeshExecutor
-        # backing this peer with a device mesh, or None in timing-only
-        # simulations.  The SwarmRunner assigns and swaps it.
+        # backing this peer with a device mesh, a PipelineExecutor
+        # fusing a contiguous span, or None in timing-only simulations.
+        # The SwarmRunner assigns and swaps it.
         self.executor = executor
+        self.set_span(stage)
         self.alive = True
         # serving=False while the peer downloads stage state (a joining
         # or migrating peer must never serve stale params); routing and
         # submit both refuse non-serving peers
         self.serving = True
-        self.state = StageState()
+        self.state = self._fresh_state()
         self._tasks: list[_Task] = []
         self._wake = sim.event()
         self._epoch = 0               # bumped by drain(): voids queued work
         self._generation = 0          # bumped by revive(): retires executor
         self.busy_time = 0.0          # for utilization metrics
         self.spawn_executor()
+
+    # ------------------------------------------------------------ span
+    def set_span(self, stage: "int | range"):
+        """Adopt a stage assignment: a single stage or a contiguous span
+        ``range(lo, hi)``.  ``self.stage`` stays the ENTRY stage (span
+        start) — the only stage a trainer may route this peer at — while
+        ``self.stages`` is the full covered range (the peer's DHT slots,
+        All-Reduce groups, and ledger rows)."""
+        span = stage if isinstance(stage, range) else range(stage, stage + 1)
+        if self.executor is not None and hasattr(self.executor, "stages"):
+            assert (self.executor.stages.start == span.start
+                    and self.executor.stages.stop == span.stop), \
+                (self.executor.stages, span)
+        self.span = span
+        self.stage = span.start
+
+    @property
+    def stages(self) -> range:
+        return self.span
+
+    def _fresh_state(self) -> StageState:
+        # timing-only span peers (no executor) still keep per-stage
+        # bookkeeping so the All-Reduce barrier reads per-stage counters
+        if self.executor is None and len(self.span) > 1:
+            return StageState(per_stage={s: StageState() for s in self.span})
+        return StageState()
 
     # ------------------------------------------------------------ executor
     def spawn_executor(self):
@@ -162,7 +202,7 @@ class Peer:
             t.done.fail(PeerFailure(self.id))
         self._tasks.clear()
 
-    def revive(self, stage: int):
+    def revive(self, stage: "int | range"):
         """Rejoin (a fresh preemptible instance reusing this peer
         object): reset state and restart the executor.  The swarm that
         revives a peer is responsible for the warm join — download the
@@ -170,8 +210,8 @@ class Peer:
         (see ``SwarmRunner._join_new_peer``)."""
         self.alive = True
         self.serving = True
-        self.stage = stage
-        self.state = StageState()
+        self.set_span(stage)
+        self.state = self._fresh_state()
         self._tasks = []
         self._epoch += 1
         self._generation += 1        # retire any executor still parked
@@ -179,11 +219,14 @@ class Peer:
         self.spawn_executor()
 
     # ------------------------------------------------------------ state
-    def state_nbytes(self) -> float:
-        if self.state.params is None:
-            return 0.0
-        leaves = jax.tree.leaves(self.state.params)
-        pbytes = sum(x.size * x.dtype.itemsize for x in leaves)
+    def state_nbytes(self, stage: Optional[int] = None) -> float:
+        """Transferable state bytes: one covered stage with ``stage=``,
+        the whole (possibly span) state otherwise."""
+        views = ([self.state.stage_view(stage)] if stage is not None
+                 else self.state.views())
+        pbytes = sum(x.size * x.dtype.itemsize
+                     for v in views if v.params is not None
+                     for x in jax.tree.leaves(v.params))
         return 3 * pbytes          # params + adam m/v, roughly
 
     def adopt_state_from(self, donor: "Peer"):
@@ -198,15 +241,15 @@ class Peer:
         immutable device arrays exact and zero-copy."""
         if (self.executor is not None and donor.executor is not None
                 and self.executor is not donor.executor
-                and donor.state.params is not None):
+                and (donor.state.params is not None
+                     or donor.state.per_stage is not None)):
             self.executor.restore(self.state,
                                   donor.executor.snapshot(donor.state))
             return
-        self.state.params = jax.tree.map(lambda x: x, donor.state.params)
-        self.state.opt = jax.tree.map(lambda x: x, donor.state.opt)
-        self.state.version = donor.state.version
-        self.state.grad_acc = (jax.tree.map(jnp.zeros_like,
-                                            donor.state.params)
-                               if donor.state.params is not None else None)
-        self.state.loss_sum = 0.0
-        self.state.token_count = 0
+        if donor.state.per_stage is not None:   # shared span backend
+            self.state.per_stage = {}
+            for s, sub in donor.state.per_stage.items():
+                mine = self.state.per_stage[s] = StageState()
+                _alias_state(mine, sub)
+            return
+        _alias_state(self.state, donor.state)

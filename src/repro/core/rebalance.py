@@ -7,15 +7,25 @@ target stage's parameters + optimizer state from its new neighbors.
 Complexity O(M·S) per round (App. D); only the single migrating peer stops
 serving during the download.
 
+Assignments are *spans*: a peer may serve a contiguous ``[lo, hi)`` range
+of stages fused in one jit (the square-cube lever, §3.1 — strong peers
+hold more of the model, and every fused boundary saves its host wire
+bytes).  :func:`optimal_assignment` with ``spans=True`` therefore
+partitions the pipeline into per-peer spans (never worse than the best
+single-stage placement — the width-1 assignment is always a candidate),
+:func:`pipeline_throughput` prices span assignments with an explicit
+per-host-boundary cost, and :func:`plan_span_change` proposes the
+split/merge moves the runner executes via ``SwarmRunner._resize_span``.
+
 ``plan_migration`` is the pure decision function (unit-tested directly and
 reused by the TPU launcher's stage->pod rebalancing, DESIGN.md §3); the
-coroutine that executes it lives in :mod:`repro.core.swarm`.
+coroutines that execute the plans live in :mod:`repro.core.swarm`.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Hashable, Optional
+from typing import Hashable, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,6 +33,17 @@ class Migration:
     peer: Hashable
     src_stage: int
     dst_stage: int
+
+
+@dataclasses.dataclass(frozen=True)
+class SpanChange:
+    """Resize ``peer``'s span in place (Varuna-style re-partitioning):
+    ``new_span`` ⊂ ``old_span`` is a split/shrink (concentrate on the
+    bottleneck stage), ``new_span`` ⊃ ``old_span`` a merge/grow (absorb
+    an adjacent well-covered stage, saving its host boundary)."""
+    peer: Hashable
+    old_span: tuple[int, int]
+    new_span: tuple[int, int]
 
 
 def stage_loads(dht, n_stages: int) -> list[float]:
@@ -64,34 +85,281 @@ def plan_migration(dht, n_stages: int,
     return Migration(peer_min, s_min, s_max)
 
 
-def optimal_assignment(n_peers: int, n_stages: int,
-                       stage_costs: Optional[list[float]] = None
-                       ) -> list[int]:
-    """Throughput-optimal peer counts per stage (the 'always optimal'
-    baseline of Table 5): proportional to per-stage compute cost, each
-    stage >= 1."""
+def spans_route(n_stages: int,
+                spans: Sequence[tuple[int, int]]) -> bool:
+    """Can a trainer tile ``[0, n_stages)`` out of these spans?
+
+    Per-stage *coverage* is necessary but not sufficient: a hop enters a
+    span only at its START, so the layout must admit a chain of spans
+    ``0 -> ... -> n_stages``.  (``{(0,2), (1,2)}`` covers both stages of
+    a 2-stage pipe and routes; ``{(0,2), (1,3)}`` covers all of a
+    3-stage pipe but strands boundary 2 — no span starts there.)
+    Every span-layout mutation must preserve this, or routing stalls
+    forever."""
+    starts: dict[int, set[int]] = {}
+    for lo, hi in spans:
+        starts.setdefault(lo, set()).add(hi)
+    seen: set[int] = set()
+    frontier = {0}
+    while frontier:
+        s = frontier.pop()
+        if s == n_stages:
+            return True
+        if s in seen:
+            continue
+        seen.add(s)
+        frontier |= starts.get(s, set())
+    return n_stages == 0
+
+
+def _span_cost(span: tuple[int, int], costs: list[float],
+               boundary_cost: float, n_stages: int) -> float:
+    """Per-microbatch service cost of one peer running ``span`` fused:
+    the covered stages' compute plus ``boundary_cost`` per *host* edge —
+    fused intra-span boundaries are free, which is exactly the saved
+    wire bytes the span backend realizes."""
+    lo, hi = span
+    edges = (1 if lo > 0 else 0) + (1 if hi < n_stages else 0)
+    return sum(costs[lo:hi]) + boundary_cost * edges
+
+
+def span_stage_rates(spans: Sequence[tuple[int, int]],
+                     speeds: Sequence[float], n_stages: int,
+                     stage_costs: Optional[list[float]] = None,
+                     boundary_cost: float = 0.0) -> list[float]:
+    """Aggregate service rate per stage under a span assignment: a peer
+    of speed ``v`` serving span σ contributes ``v / cost(σ)`` to every
+    stage of σ (it pushes each microbatch through the whole span)."""
     costs = stage_costs or [1.0] * n_stages
+    rate = [0.0] * n_stages
+    for span, v in zip(spans, speeds):
+        if span is None:
+            continue
+        c = _span_cost(tuple(span), costs, boundary_cost, n_stages)
+        for s in range(span[0], span[1]):
+            rate[s] += v / max(c, 1e-12)
+    return rate
+
+
+def _contiguous_partition(n_chunks: int, costs: list[float]
+                          ) -> list[tuple[int, int]]:
+    """Split stages into ``n_chunks`` contiguous spans with near-equal
+    cost (greedy cumulative walk; every chunk non-empty)."""
+    S = len(costs)
+    n_chunks = max(1, min(n_chunks, S))
     total = sum(costs)
-    alloc = [max(1, round(n_peers * c / total)) for c in costs]
-    # fix rounding to sum exactly n_peers, never dropping below 1
-    while sum(alloc) > n_peers:
-        i = max(range(n_stages), key=lambda j: alloc[j])
-        if alloc[i] > 1:
-            alloc[i] -= 1
-        else:
-            break
-    while sum(alloc) < n_peers:
-        i = min(range(n_stages),
-                key=lambda j: alloc[j] / max(costs[j], 1e-9))
-        alloc[i] += 1
-    return alloc
+    spans, lo, acc = [], 0, 0.0
+    for s in range(S):
+        acc += costs[s]
+        chunks_left = n_chunks - len(spans)          # incl. the open one
+        stages_left = S - (s + 1)
+        # close when the cost target is met — or when every remaining
+        # chunk needs exactly one of the remaining stages — but never so
+        # early that a later chunk would come up empty
+        must = stages_left == chunks_left - 1
+        want = acc >= total / n_chunks
+        if chunks_left > 1 and (want or must) \
+                and stages_left >= chunks_left - 1:
+            spans.append((lo, s + 1))
+            lo, acc = s + 1, 0.0
+    spans.append((lo, S))
+    return spans
 
 
-def pipeline_throughput(alloc: list[int], peer_speed: float = 1.0,
-                        stage_costs: Optional[list[float]] = None) -> float:
+def _greedy_single_assignment(speeds: list[float], n_stages: int,
+                              costs: list[float], boundary_cost: float
+                              ) -> Optional[list[tuple[int, int]]]:
+    """Best-effort width-1 placement (the span-free baseline): fastest
+    peers first, each onto the currently weakest stage.  None when
+    ``n_peers < n_stages`` — no single-stage placement can cover."""
+    if len(speeds) < n_stages:
+        return None
+    order = sorted(range(len(speeds)), key=lambda i: -speeds[i])
+    spans: list[Optional[tuple[int, int]]] = [None] * len(speeds)
+    rate = [0.0] * n_stages
+    for i in order:
+        # normalized by cost: the weakest link is min rate[s], and an
+        # uncovered stage (rate 0) always wins — coverage first
+        s = min(range(n_stages), key=lambda j: (rate[j], -costs[j]))
+        spans[i] = (s, s + 1)
+        rate[s] += speeds[i] / max(
+            _span_cost((s, s + 1), costs, boundary_cost, n_stages), 1e-12)
+    return spans
+
+
+def optimal_assignment(n_peers: int, n_stages: int,
+                       stage_costs: Optional[list[float]] = None, *,
+                       speeds: Optional[Sequence[float]] = None,
+                       spans: bool = False, boundary_cost: float = 0.0,
+                       max_span: Optional[int] = None):
+    """Throughput-optimal placement (the 'always optimal' baseline of
+    Table 5).
+
+    ``spans=False`` (default): peer *counts* per stage, proportional to
+    per-stage compute cost, each stage >= 1 — the historical contract.
+
+    ``spans=True``: one contiguous ``(lo, hi)`` span per peer.  Strong
+    peers may hold several stages fused (square-cube, §3.1), pricing
+    each host boundary at ``boundary_cost``; the width-1 greedy
+    placement is always among the candidates, so the result's
+    :func:`pipeline_throughput` is never below the span-free
+    assignment's.  Guarantees full stage coverage for any ``n_peers >=
+    1`` (a single peer serves the whole pipeline as one span).
+    ``max_span=1`` forces the width-1 baseline itself."""
+    costs = list(stage_costs or [1.0] * n_stages)
+    if not spans:
+        total = sum(costs)
+        alloc = [max(1, round(n_peers * c / total)) for c in costs]
+        # fix rounding to sum exactly n_peers, never dropping below 1
+        while sum(alloc) > n_peers:
+            i = max(range(n_stages), key=lambda j: alloc[j])
+            if alloc[i] > 1:
+                alloc[i] -= 1
+            else:
+                break
+        while sum(alloc) < n_peers:
+            i = min(range(n_stages),
+                    key=lambda j: alloc[j] / max(costs[j], 1e-9))
+            alloc[i] += 1
+        return alloc
+
+    v = list(speeds) if speeds is not None else [1.0] * n_peers
+    assert len(v) == n_peers
+
+    def thr(assign):
+        return pipeline_throughput(assign, v, stage_costs=costs,
+                                   boundary_cost=boundary_cost)
+
+    single = _greedy_single_assignment(v, n_stages, costs, boundary_cost)
+    if max_span == 1:
+        if single is None:
+            raise ValueError(f"max_span=1 cannot cover {n_stages} stages "
+                             f"with {n_peers} peers")
+        return single
+
+    candidates = [] if single is None else [single]
+    # contiguous partitions into k chunks, fastest peers on the
+    # costliest chunks, surplus peers reinforcing the weakest chunk
+    for k in range(1, min(n_peers, n_stages) + 1):
+        chunks = _contiguous_partition(k, costs)
+        if max_span is not None and any(
+                hi - lo > max_span for lo, hi in chunks):
+            continue
+        by_cost = sorted(range(k), key=lambda c: -_span_cost(
+            chunks[c], costs, boundary_cost, n_stages))
+        order = sorted(range(n_peers), key=lambda i: -v[i])
+        assign: list[Optional[tuple[int, int]]] = [None] * n_peers
+        for rank, c in enumerate(by_cost):
+            assign[order[rank]] = chunks[c]
+        for i in order[k:]:                  # surplus: reinforce weakest
+            rate = span_stage_rates(
+                [a for a in assign if a is not None],
+                [v[j] for j, a in enumerate(assign) if a is not None],
+                n_stages, costs, boundary_cost)
+            weakest = min(range(n_stages), key=lambda s: rate[s])
+            assign[i] = next(c for c in chunks
+                             if c[0] <= weakest < c[1])
+        candidates.append(assign)
+    if not candidates:
+        raise ValueError(
+            f"max_span={max_span} cannot cover {n_stages} stages with "
+            f"{n_peers} peers (need n_peers * max_span >= n_stages)")
+    return max(candidates, key=thr)
+
+
+def pipeline_throughput(alloc, peer_speed=1.0,
+                        stage_costs: Optional[list[float]] = None,
+                        boundary_cost: float = 0.0) -> float:
     """Steady-state pipeline throughput = min over stages of aggregate
-    stage speed (the weakest-link law, §3.2)."""
+    stage speed (the weakest-link law, §3.2).
+
+    Two forms: per-stage peer *counts* (``[2, 1, 2]``, historical), or a
+    per-peer *span assignment* (``[(0, 2), (2, 3), ...]``) with
+    ``peer_speed`` a scalar or per-peer sequence — where each host
+    boundary a peer's span touches costs ``boundary_cost`` on top of the
+    covered stages' compute, so fused boundaries visibly buy
+    throughput."""
+    if alloc and not isinstance(alloc[0], (int, float)):
+        spans = [tuple(a) for a in alloc]
+        n_stages = len(stage_costs) if stage_costs else \
+            max(hi for _, hi in spans)
+        speeds = (list(peer_speed) if isinstance(peer_speed, (list, tuple))
+                  else [float(peer_speed)] * len(spans))
+        rate = span_stage_rates(spans, speeds, n_stages, stage_costs,
+                                boundary_cost)
+        return min(rate) if rate else 0.0
     costs = stage_costs or [1.0] * len(alloc)
     if any(a <= 0 for a in alloc):
         return 0.0
-    return min(a * peer_speed / c for a, c in zip(alloc, costs))
+    n_stages = len(alloc)
+    return min(
+        a * peer_speed / max(_span_cost((s, s + 1), costs, boundary_cost,
+                                        n_stages), 1e-12)
+        for s, (a, c) in enumerate(zip(alloc, costs)))
+
+
+def plan_span_change(dht, n_stages: int,
+                     spans: dict[Hashable, tuple[int, int]],
+                     imbalance: float = 1.25
+                     ) -> Optional[SpanChange]:
+    """Span-aware Alg.-2 step, from the DHT load snapshot.
+
+    * SPLIT/shrink: the max-load stage is genuinely hotter than the
+      min-load stage (beyond the ``imbalance`` ratio — raw queue sums
+      jitter, so exact comparison would misread noise as imbalance) and
+      sits inside a multi-stage span — concentrate the most backlogged
+      such peer on the bottleneck stage alone, provided every stage it
+      drops keeps another cover (the runner hands the dropped stages'
+      state to those peers).
+    * MERGE/grow: loads are within the tolerance band — let the
+      least-loaded peer absorb an adjacent stage that is covered by >= 2
+      peers, deleting one host boundary crossing for its traffic at no
+      coverage risk.  (A hot pipe with nothing to split proposes
+      nothing: growing it would only slow the bottleneck.)
+
+    Never proposes a change that would strand a stage — or break span
+    *routability* (:func:`spans_route`): coverage alone is too weak,
+    a layout like ``{(0,2), (1,2), (1,3)}`` covers every stage of a
+    3-stage pipe yet no span starts at boundary 2, so every microbatch
+    would stall."""
+    loads = stage_loads(dht, n_stages)
+    s_max = max(range(n_stages), key=lambda s: loads[s])
+    s_min = min(range(n_stages), key=lambda s: loads[s])
+
+    def covers(stage: int, but: Hashable) -> int:
+        return sum(1 for pid, (lo, hi) in spans.items()
+                   if pid != but and lo <= stage < hi)
+
+    def routes_after(pid: Hashable, new: tuple[int, int]) -> bool:
+        layout = [sp for q, sp in spans.items() if q != pid] + [new]
+        return spans_route(n_stages, layout)
+
+    def queue_of(pid: Hashable, stage: int) -> float:
+        rec = dht.get(dht.load_key(stage)).get(pid)
+        return rec.value if rec is not None else 0.0
+
+    hot = loads[s_max] > imbalance * loads[s_min] + 0.05
+    if hot:
+        donors = sorted(
+            (pid for pid, (lo, hi) in spans.items()
+             if hi - lo > 1 and lo <= s_max < hi),
+            key=lambda pid: (-queue_of(pid, s_max), str(pid)))
+        for pid in donors:
+            lo, hi = spans[pid]
+            new = (s_max, s_max + 1)
+            if all(covers(s, but=pid) >= 1
+                   for s in range(lo, hi) if s != s_max) \
+                    and routes_after(pid, new):
+                return SpanChange(pid, (lo, hi), new)
+        return None
+
+    # balanced: grow toward fewer host boundaries
+    growers = sorted(spans, key=lambda pid: (queue_of(pid, spans[pid][0]),
+                                             str(pid)))
+    for pid in growers:
+        lo, hi = spans[pid]
+        for t, new in ((hi, (lo, hi + 1)), (lo - 1, (lo - 1, hi))):
+            if 0 <= t < n_stages and covers(t, but=pid) >= 2 \
+                    and routes_after(pid, new):
+                return SpanChange(pid, (lo, hi), new)
+    return None

@@ -10,6 +10,15 @@ Gradients lost to dead or migrating peers are recomputed by survivors
 under the same microbatch indices, so an optimizer step under churn
 averages the identical sample set as fault-free training (App. A).
 
+A peer's assignment is a contiguous *span* of stages (usually width 1).
+Span peers (:class:`repro.runtime.PipelineExecutor`) occupy one DHT slot,
+one All-Reduce group, and one ledger row per covered stage, but serve the
+whole span in a single jitted step — only span-edge activations cross the
+host (the square-cube lever, §3.1).  ``split_span``/``_resize_span``
+re-partition spans on membership change, Varuna-style: a shrinking span
+peer hands per-stage snapshots to single-stage peers, a merge pulls them
+back.
+
 Two modes:
   numeric=True   — real JAX math per stage (convergence experiments,
                    equivalence tests; Fig. 4 / App. E analogues).
@@ -43,6 +52,10 @@ from repro.runtime import StageExecutor, StageProgram, \
 Tree = Any
 
 
+def _as_span(stage: "int | range") -> range:
+    return stage if isinstance(stage, range) else range(stage, stage + 1)
+
+
 @dataclasses.dataclass
 class SwarmConfig:
     n_stages: int = 3
@@ -72,6 +85,11 @@ class SwarmConfig:
     # the latest cut)
     ckpt_dir: Optional[str] = None
     ckpt_period: int = 1
+    # span rebalancing: let the Alg.-2 loop also propose span splits /
+    # merges (repro.core.rebalance.plan_span_change) — a span peer
+    # bottlenecked on one stage shrinks onto it, an underloaded peer
+    # absorbs an adjacent well-covered stage (saving its host boundary)
+    spans: bool = False
 
 
 class SwarmRunner:
@@ -103,7 +121,9 @@ class SwarmRunner:
         # per stage, shared by all that stage's peers (the process-wide
         # compile cache means the seed matrix of the churn tests and
         # repeated benchmark runs never re-trace either).  ``programs``
-        # may still be injected (pre-jitted) for back-compat.
+        # may still be injected (pre-jitted) for back-compat.  Span
+        # executors are built on demand (``_span_executor``) and share
+        # the process-wide span-program cache.
         if numeric:
             if programs is not None:
                 assert len(programs) == scfg.n_stages
@@ -126,6 +146,8 @@ class SwarmRunner:
         self.peers: dict[str, Peer] = {}
         self.wirings: list[StochasticWiring] = []
         self.trainers: list[Trainer] = []
+        # (lo, hi) -> shared default PipelineExecutor for that span
+        self._span_execs: dict[tuple[int, int], StageExecutor] = {}
 
         # training progress
         self.stopped = False
@@ -134,7 +156,8 @@ class SwarmRunner:
         self._dispatch_paused = False
         self.step = 0
         # exactly-once accounting (App. A): which (stage, microbatch)
-        # pairs of the current round are held, and by whom
+        # pairs of the current round are held, and by whom.  A span peer
+        # holds one row per covered stage.
         self.ledger = MicrobatchLedger(scfg.n_stages)
         # optional audit trail, as (kind, step, stage, index, attempt,
         # peer_id) with kind in {"acc", "rel", "step"}: every applied
@@ -147,6 +170,10 @@ class SwarmRunner:
             "loss": [], "step_time": [], "samples_done": [],
             "throughput_t": [], "throughput_v": [], "migrations": 0,
             "failures": 0, "joins": 0, "recomputed_microbatches": 0,
+            "span_changes": 0,       # split/merge/resize events applied
+            "wire_bytes": 0.0,       # activation/cotangent bytes that
+                                     # actually crossed the host (span-
+                                     # fused boundaries charge nothing)
             "ckpt_restores": [],     # (stage, restored-from step)
             "rollbacks": [],         # (step rolled back from, to)
         }
@@ -167,30 +194,81 @@ class SwarmRunner:
         self._open_round()
 
     # ================================================== setup
-    def add_peer(self, stage: int, profile: Optional[DeviceProfile] = None,
+    def _span_executor(self, span: range) -> Optional[StageExecutor]:
+        """The default executor for a span assignment (None in timing
+        mode): the stage family for width 1, a runner-cached
+        PipelineExecutor otherwise — so ALL default-backed peers of one
+        span share one executor object (which is what keeps
+        ``adopt_state_from``'s zero-copy alias path hot and avoids
+        re-building executor families on every split/merge)."""
+        if self.executors[span.start] is None:
+            return None
+        if len(span) == 1:
+            return self.executors[span.start]
+        key = (span.start, span.stop)
+        ex = self._span_execs.get(key)
+        if ex is None:
+            ex = self._span_execs[key] = \
+                self.executors[span.start].for_span(span)
+        return ex
+
+    def _rebacked_executor(self, peer: Peer,
+                           span: range) -> Optional[StageExecutor]:
+        """``peer``'s backend re-targeted at ``span``: custom backends
+        (mesh slices) keep themselves via ``for_span``; default-backed
+        peers go back through the runner's shared executors."""
+        if peer.executor is None:
+            return None
+        from repro.runtime import MeshExecutor
+        if isinstance(peer.executor, MeshExecutor):
+            return peer.executor.for_span(span)
+        return self._span_executor(span)
+
+    def _routes_without(self, peer: Peer,
+                        new_span: Optional[range]) -> bool:
+        """Would the serving layout still tile [0, n_stages) if ``peer``
+        served ``new_span`` (None = left entirely)?  Coverage alone is
+        not enough — a hop enters a span only at its start (see
+        ``rebalance.spans_route``)."""
+        layout = [(q.stages.start, q.stages.stop)
+                  for q in self.peers.values()
+                  if q.alive and q.serving and q is not peer]
+        if new_span is not None:
+            layout.append((new_span.start, new_span.stop))
+        return rb.spans_route(self.n_stages, layout)
+
+    def add_peer(self, stage: "int | range",
+                 profile: Optional[DeviceProfile] = None,
                  executor: Optional[StageExecutor] = None) -> Peer:
         """Cold-start a peer (initial ``build``): at step 0 the reference
         params ARE current, so announcing immediately is safe.  Mid-run
         joins go through ``_join_new_peer``, which downloads the stage
         state *before* announcing (warm join).
 
-        ``executor`` backs the peer with a custom runtime (e.g. a
-        :class:`repro.runtime.MeshExecutor` over a device mesh); by
-        default the peer shares the stage's numeric executor."""
+        ``stage`` may be a single stage or a contiguous ``range(lo, hi)``
+        span; ``executor`` backs the peer with a custom runtime (e.g. a
+        :class:`repro.runtime.MeshExecutor` over a device mesh, or a
+        :class:`repro.runtime.PipelineExecutor` for a span); by default
+        the peer shares the span's cached executor."""
+        span = _as_span(stage)
         if executor is not None:
-            assert executor.stage == stage, (executor.stage, stage)
+            assert (executor.stages.start, executor.stages.stop) == \
+                (span.start, span.stop), (executor.stages, span)
+        else:
+            executor = self._span_executor(span)
         peer = Peer(self.sim, profile or self.profile_fn(len(self.peers)),
-                    stage, executor=executor or self.executors[stage])
+                    span, executor=executor)
         self.peers[peer.id] = peer
         if self.numeric:
             # _resume_step == 0 pins the step-0 reference: stale entries
             # in a torn/leftover ckpt_dir with no common step must not
             # leak differing per-stage "latest" params into a fresh run
-            self._restore_from_checkpoint(peer, stage,
-                                          step=self._resume_step)
+            for s in peer.stages:
+                self._restore_from_checkpoint(peer, s,
+                                              step=self._resume_step)
         self._announce(peer)
         for w in self.wirings:
-            w.add_server(peer.id, [stage])
+            w.add_server(peer.id, [peer.stages.start])
         self.sim.spawn(self._announcer(peer))
         return peer
 
@@ -206,7 +284,7 @@ class SwarmRunner:
                                  seed=1000 + i)
             for pid, p in self.peers.items():
                 if p.alive:
-                    w.add_server(pid, [p.stage])
+                    w.add_server(pid, [p.stages.start])
             self.wirings.append(w)
             t = Trainer(self.sim, self, w, f"trainer{i}",
                         max_retries=self.scfg.trainer_max_retries)
@@ -218,8 +296,17 @@ class SwarmRunner:
 
     # ================================================== DHT liveness
     def _announce(self, peer: Peer):
-        self.dht.store(self.dht.stage_key(peer.stage), peer.id, peer.stage,
-                       self.scfg.announce_ttl)
+        # a span peer occupies EVERY covered stage slot: liveness and
+        # coverage are per stage, even though routing only enters the
+        # span at its start
+        for s in peer.stages:
+            self.dht.store(self.dht.stage_key(s), peer.id, s,
+                           self.scfg.announce_ttl)
+
+    def _dht_forget(self, peer: Peer, span: Optional[range] = None):
+        for s in (span if span is not None else peer.stages):
+            self.dht.delete(self.dht.stage_key(s), peer.id)
+            self.dht.delete(self.dht.load_key(s), peer.id)
 
     def _announcer(self, peer: Peer):
         gen = peer._generation
@@ -229,14 +316,24 @@ class SwarmRunner:
             yield Sleep(self.scfg.announce_interval)
 
     def announced_stages(self) -> dict[str, int]:
+        """Live serving peers by their ROUTING slot (span start) — what
+        the wirings refresh from.  Coverage queries go per stage via
+        ``_covering``."""
         out = {}
         for s in range(self.n_stages):
             for pid, rec in self.dht.get(self.dht.stage_key(s)).items():
                 peer = self.peers.get(pid)
                 if peer is not None and peer.alive and peer.serving \
-                        and peer.stage == s:
-                    out[pid] = s
+                        and s in peer.stages:
+                    out[pid] = peer.stages.start
         return out
+
+    def _covering(self, stage: int, but: Optional[Peer] = None
+                  ) -> list[Peer]:
+        """Live serving peers whose span covers ``stage``."""
+        return [p for p in self.peers.values()
+                if p.alive and p.serving and stage in p.stages
+                and p is not but]
 
     # ================================================== data / dispatch
     def _open_round(self):
@@ -292,8 +389,10 @@ class SwarmRunner:
     def compute_time(self, peer: Peer, kind: str, stage: int,
                      mb: Microbatch) -> float:
         ex = (peer.executor if peer.executor is not None
-              and peer.executor.stage == stage else self.executors[stage])
+              and stage in peer.executor.stages else self.executors[stage])
         if ex is not None:
+            # span executors report whole-span totals: one hop runs the
+            # entire fused span
             fpt = (ex.fwd_flops_per_token if kind == "fwd"
                    else ex.bwd_flops_per_token)
             # a mesh-backed peer splits the microbatch over its data
@@ -301,16 +400,21 @@ class SwarmRunner:
             # the ACTUAL split — 1 when divisibility forces replication
             speedup = max(1, ex.dp_shards(mb.size))
             return peer.profile.compute_time(fpt * mb.n_tokens) / speedup
-        else:
-            ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
-            per = self.cfg.n_layers // self.n_stages
-            kinds = self.cfg.block_kinds[stage * per:(stage + 1) * per]
-            fpt = sum(F.per_token_layer_flops(self.cfg, k, ctx)
-                      for k in kinds)
-            if stage == self.n_stages - 1:
+        # timing-only: analytic per-stage flops summed over the hop's
+        # covered stages
+        stages = peer.stages if stage in peer.stages \
+            else range(stage, stage + 1)
+        ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
+        per = self.cfg.n_layers // self.n_stages
+        fpt = 0.0
+        for s in stages:
+            kinds = self.cfg.block_kinds[s * per:(s + 1) * per]
+            fpt += sum(F.per_token_layer_flops(self.cfg, k, ctx)
+                       for k in kinds)
+            if s == self.n_stages - 1:
                 fpt += 2 * self.cfg.d_model * self.cfg.vocab_size
-            if kind == "bwd":
-                fpt *= 3.0
+        if kind == "bwd":
+            fpt *= 3.0
         return peer.profile.compute_time(fpt * mb.n_tokens)
 
     def boundary_nbytes(self, mb: Microbatch) -> float:
@@ -320,29 +424,47 @@ class SwarmRunner:
         return F.boundary_bytes(
             self.cfg, mb.size, self.scfg.seq_len, self.compress_mode)
 
+    def count_wire_bytes(self, nbytes: float):
+        """One boundary tensor actually crossed the host (trainers call
+        this per hop edge — span-fused boundaries never do)."""
+        self.metrics["wire_bytes"] += nbytes
+
     # ================================================== gradient sync
     def accumulate(self, peer: Peer, gp: Optional[Tree], mb: Microbatch,
                    loss: Optional[float], stage: Optional[int] = None
                    ) -> bool:
         """Fold a microbatch gradient into ``peer``'s accumulator —
-        exactly once per (stage, index) per round.  A re-issued attempt
-        falls through for the stages that already hold the gradient
-        (re-running backward with unchanged params reproduces it
-        bit-for-bit, so skipping is exact)."""
-        s = peer.stage if stage is None else stage
-        if not self.ledger.record(s, mb.index, peer.id):
-            return False
-        if self.record_accumulation:
-            self.ledger_log.append(
-                ("acc", self.step, s, mb.index, mb.attempt, peer.id))
-        if peer.executor is not None:
-            # executor-owned fold (donated accumulator buffer)
-            peer.executor.accumulate(peer.state, gp, loss, mb.n_tokens)
-        else:                               # timing-only simulation
-            peer.state.token_count += mb.n_tokens
-            if loss is not None:
-                peer.state.loss_sum += loss
-        return True
+        exactly once per (stage, index) per round, for EVERY stage the
+        peer's span covers.  A re-issued attempt falls through for the
+        stages that already hold the gradient (re-running backward with
+        unchanged params reproduces it bit-for-bit, so skipping is
+        exact) — so a span peer may fold a strict subset of its covered
+        stages.  ``gp`` is the stage's tree for single-stage peers, a
+        ``{global stage id: tree}`` dict for span peers."""
+        stages = [stage] if stage is not None else list(peer.stages)
+        span_keyed = isinstance(gp, dict) and gp and \
+            all(isinstance(k, int) for k in gp)
+        last = self.n_stages - 1
+        any_folded = False
+        for s in stages:
+            if not self.ledger.record(s, mb.index, peer.id):
+                continue
+            if self.record_accumulation:
+                self.ledger_log.append(
+                    ("acc", self.step, s, mb.index, mb.attempt, peer.id))
+            loss_s = loss if s == last else None
+            if peer.executor is not None:
+                # executor-owned fold (donated accumulator buffer)
+                g_s = gp[s] if span_keyed else gp
+                peer.executor.accumulate(peer.state, g_s, loss_s,
+                                         mb.n_tokens, stage=s)
+            else:                               # timing-only simulation
+                view = peer.state.stage_view(s)
+                view.token_count += mb.n_tokens
+                if loss_s is not None:
+                    view.loss_sum += loss_s
+            any_folded = True
+        return any_folded
 
     def _sync_loop(self):
         """Trigger All-Reduce + optimizer step when the ledger shows the
@@ -379,19 +501,19 @@ class SwarmRunner:
         window cannot retroactively remove gradients from a step that
         already observed the complete global batch.  Migrations and
         state adoptions defer until the window closes (see ``_migrate``
-        / ``_download_state``)."""
+        / ``_download_state``).  A span peer is a member of every
+        covered stage's group, with per-stage grads/tokens/install."""
         if self.record_accumulation:
             self.ledger_log.append(("step", self.step, -1, -1, 0, ""))
         plan = []
         for s in range(self.n_stages):
             # non-serving peers are mid-download: stale params, drained
             # grads — they adopt the stepped state when the download ends
-            group = [p for p in self.peers.values()
-                     if p.alive and p.serving and p.stage == s]
+            group = self._covering(s)
             if not group:
                 continue
             k = len(group)
-            nbytes = group[0].state_nbytes() / 3.0   # grads only
+            nbytes = group[0].state_nbytes(stage=s) / 3.0   # grads only
             if nbytes == 0.0:                        # throughput mode
                 nbytes = 2.0 * F.total_params(self.cfg) / self.n_stages
             ar_time = (2 * (k - 1) / max(k, 1)) * nbytes \
@@ -400,34 +522,39 @@ class SwarmRunner:
             if self.numeric:
                 # average gradients over the stage (token-weighted);
                 # export_grads yields scheduler-local trees, so the sum
-                # mixes numeric and mesh-backed peers freely
-                total_tokens = sum(p.state.token_count for p in group)
-                gsum = group[0].executor.export_grads(group[0].state)
+                # mixes numeric, mesh-backed, and span peers freely
+                total_tokens = sum(p.state.stage_view(s).token_count
+                                   for p in group)
+                gsum = group[0].executor.export_grads(group[0].state,
+                                                      stage=s)
                 for p in group[1:]:
-                    gsum = jax.tree.map(lambda a, b: a + b, gsum,
-                                        p.executor.export_grads(p.state))
+                    gsum = jax.tree.map(
+                        lambda a, b: a + b, gsum,
+                        p.executor.export_grads(p.state, stage=s))
                 gmean = jax.tree.map(lambda g: g / max(total_tokens, 1),
                                      gsum)
                 params, opt = group[0].executor.export_state(
-                    group[0].state)
+                    group[0].state, stage=s)
                 updates, new_opt = self.optimizer.update(gmean, opt, params)
                 new_params = jax.tree.map(
                     lambda p, u: p + u.astype(p.dtype), params, updates)
-                loss_sum = sum(p.state.loss_sum for p in group)
+                loss_sum = sum(p.state.stage_view(s).loss_sum
+                               for p in group)
                 if s == self.n_stages - 1 and total_tokens:
                     self.metrics["loss"].append(loss_sum / total_tokens)
-            plan.append((group, ar_time, new_params, new_opt))
-        for group, ar_time, new_params, new_opt in plan:
+            plan.append((s, group, ar_time, new_params, new_opt))
+        for s, group, ar_time, new_params, new_opt in plan:
             yield Sleep(ar_time)
             for p in group:
                 if not p.alive:      # died inside the ring: state is dead
                     continue
                 if self.numeric:
                     # install + re-place on the peer's backend, bump the
-                    # version, zero the accumulator
-                    p.executor.adopt_step(p.state, new_params, new_opt)
+                    # version, zero the accumulator — per covered stage
+                    p.executor.adopt_step(p.state, new_params, new_opt,
+                                          stage=s)
                 else:
-                    p.state.zero_grads()
+                    p.state.stage_view(s).zero_grads()
         self.step += 1
         self._maybe_checkpoint()
 
@@ -436,19 +563,35 @@ class SwarmRunner:
         T = self.scfg.rebalance_period
         while not self.stopped:
             yield Sleep(T)
-            # peers report queue sizes (Alg. 2 line 4); mid-download
-            # peers neither report nor qualify as migration donors
+            # peers report queue sizes (Alg. 2 line 4) under EVERY stage
+            # they cover; mid-download peers neither report nor qualify
+            # as migration donors
             for p in self.peers.values():
                 if p.alive and p.serving:
-                    self.dht.store(self.dht.load_key(p.stage), p.id,
-                                   p.queue_size() + 1e-3, T * 1.5)
+                    for s in p.stages:
+                        self.dht.store(self.dht.load_key(s), p.id,
+                                       p.queue_size() + 1e-3, T * 1.5)
+            # single-stage moves consider only single-stage donors (a
+            # span peer leaving would strand several stages at once);
+            # span resizes go through plan_span_change
             pps = {s: [p.id for p in self.peers.values()
-                       if p.alive and p.serving and p.stage == s]
+                       if p.alive and p.serving and p.stages ==
+                       range(s, s + 1)]
                    for s in range(self.n_stages)}
             mig = rb.plan_migration(self.dht, self.n_stages, pps)
-            if mig is None:
+            if mig is not None:
+                yield from self._migrate(self.peers[mig.peer],
+                                         mig.dst_stage)
                 continue
-            yield from self._migrate(self.peers[mig.peer], mig.dst_stage)
+            if not self.scfg.spans:
+                continue
+            spans = {p.id: (p.stages.start, p.stages.stop)
+                     for p in self.peers.values()
+                     if p.alive and p.serving}
+            ch = rb.plan_span_change(self.dht, self.n_stages, spans)
+            if ch is not None:
+                yield from self._resize_span(self.peers[ch.peer],
+                                             range(*ch.new_span))
 
     def _maybe_checkpoint(self):
         """Persist every stage's state (executor ``snapshot()`` →
@@ -460,15 +603,16 @@ class SwarmRunner:
         whole save), so every stage directory always holds the same step
         numbers — which is what lets ``_rollback_to`` restore one
         uniform parameter version and ``prune_checkpoints`` keep only
-        the latest cut."""
+        the latest cut.  Span peers serve as holders for each covered
+        stage — the cut is single-stage snapshots regardless of spans."""
         if (not self.numeric or not self.scfg.ckpt_dir
                 or self.step % max(self.scfg.ckpt_period, 1)):
             return
         holders = []
         for s in range(self.n_stages):
-            holder = next((p for p in self.peers.values()
-                           if p.alive and p.serving and p.stage == s
-                           and p.state.params is not None), None)
+            holder = next(
+                (p for p in self._covering(s)
+                 if p.state.stage_view(s).params is not None), None)
             if holder is None:
                 return                 # no consistent cut exists right now
             holders.append(holder)
@@ -477,7 +621,7 @@ class SwarmRunner:
         for s, holder in enumerate(holders):
             d = stage_dir(self.scfg.ckpt_dir, s)
             save_checkpoint(d, self.step,
-                            holder.executor.snapshot(holder.state))
+                            holder.executor.snapshot(holder.state, stage=s))
             # keep 2 cuts: if a process dies between per-stage saves the
             # torn newest cut is excluded by _common_ckpt_step's
             # intersection and resume falls back to the previous one
@@ -515,9 +659,8 @@ class SwarmRunner:
         if self.stopped:
             return
         for s in range(self.n_stages):
-            group = [p for p in self.peers.values()
-                     if p.alive and p.serving and p.stage == s
-                     and p.executor is not None]
+            group = [p for p in self._covering(s)
+                     if p.executor is not None]
             if not group:
                 continue
             # one disk read per stage, fanned out to all its peers:
@@ -525,7 +668,7 @@ class SwarmRunner:
             # rewinds to the SAME consistent cut (0 = step-0 reference)
             snap = self._ckpt_snapshot(s, step=step_k)
             for p in group:
-                p.executor.restore(p.state, snap)
+                p.executor.restore(p.state, snap, stage=s)
         self.metrics["rollbacks"].append((self.step, step_k))
         K = self.scfg.global_batch // max(self.scfg.microbatch_size, 1)
         self.step = step_k
@@ -547,7 +690,8 @@ class SwarmRunner:
         if self._ref_params is None:         # timing-only: no state
             return
         peer.executor.restore(peer.state,
-                              self._ckpt_snapshot(stage, step=step))
+                              self._ckpt_snapshot(stage, step=step),
+                              stage=stage)
 
     def _ckpt_snapshot(self, stage: int, step: Optional[int] = None):
         """Host snapshot tree for ``stage`` (see
@@ -574,23 +718,20 @@ class SwarmRunner:
                         f"step {step} — stage dirs are inconsistent")
         return snap
 
-    def _download_state(self, peer: Peer, dst: int):
-        """Warm-state download: copy ``dst``'s replicated state from a
-        live serving neighbor (retrying if the donor dies mid-transfer),
-        falling back to the checkpoint when the stage has no survivors.
-        Returns with ``peer.state`` current for ``dst`` — or early if
-        the peer itself dies."""
+    def _download_stage_state(self, peer: Peer, s: int):
+        """Warm-state download of ONE stage: copy stage ``s``'s
+        replicated state from a live covering neighbor (retrying if the
+        donor dies mid-transfer), falling back to the checkpoint when
+        the stage has no survivors.  Cross-span by construction: a span
+        donor emits the single-stage snapshot for ``s``, whatever the
+        receiving peer's own span is.  Returns with the stage installed
+        — or early if the peer itself dies."""
         if not self.numeric:           # timing-only state transfer
             yield Sleep(1.0)
             return
 
-        def live_donors():
-            return [p for p in self.peers.values()
-                    if p.alive and p.serving and p.stage == dst
-                    and p is not peer]
-
         while True:
-            donors = live_donors()
+            donors = self._covering(s, but=peer)
             if not donors:
                 yield Sleep(1.0)
                 # same discipline as the donor path below: never adopt
@@ -601,7 +742,7 @@ class SwarmRunner:
                     yield Sleep(0.05)
                 if not peer.alive or self.stopped:
                     return
-                if live_donors():
+                if self._covering(s, but=peer):
                     continue           # a peer recovered during the wait
                 if self._ref_params is None:
                     return
@@ -616,68 +757,158 @@ class SwarmRunner:
                 if k < self.step:
                     yield from self._rollback_to(k)
                 if peer.alive:
-                    self._restore_from_checkpoint(peer, dst, step=k)
+                    self._restore_from_checkpoint(peer, s, step=k)
                 return
             donor = donors[0]
-            yield Sleep(peer.profile.recv_time(donor.state_nbytes()))
+            yield Sleep(peer.profile.recv_time(donor.state_nbytes(stage=s)))
             # adopt outside the All-Reduce window, or the joiner would
             # capture pre-step params while the stage steps past it
             while self._dispatch_paused and not self.stopped:
                 yield Sleep(0.05)
             if not peer.alive:
                 return
-            if donor.alive and donor.serving and donor.stage == dst:
-                peer.adopt_state_from(donor)
+            if donor.alive and donor.serving and s in donor.stages:
+                if peer.stages == donor.stages:
+                    # same span: whole-state adoption (zero-copy when
+                    # the two share an executor)
+                    peer.adopt_state_from(donor)
+                else:
+                    peer.executor.restore(
+                        peer.state,
+                        donor.executor.snapshot(donor.state, stage=s),
+                        stage=s)
                 return
 
-    def _complete_warm_join(self, peer: Peer, dst: int):
-        """Warm-join tail shared by migrations and joins: the state
-        download completes BEFORE the peer is announced or entered into
-        any wiring — a (re)joining peer must never serve stale params.
-        Returns False if the peer died mid-download."""
+    def _download_state(self, peer: Peer, span: range):
+        """Download every stage of ``span`` (possibly from different
+        donors — a merging peer pulls each stage from whoever covers
+        it)."""
+        for s in span:
+            yield from self._download_stage_state(peer, s)
+            if not peer.alive or self.stopped:
+                return
+
+    def _complete_warm_join(self, peer: Peer, span: range):
+        """Warm-join tail shared by migrations, joins, and span resizes:
+        the state download completes BEFORE the peer is announced or
+        entered into any wiring — a (re)joining peer must never serve
+        stale params.  Returns False if the peer died mid-download."""
         peer.serving = False
-        yield from self._download_state(peer, dst)
+        yield from self._download_state(peer, span)
         if not peer.alive:                     # preempted mid-download
             return False
         peer.serving = True
         self._announce(peer)
         for w in self.wirings:
-            w.move_server(peer.id, [dst])
+            w.move_server(peer.id, [span.start])
         return True
 
-    def _migrate(self, peer: Peer, dst: int):
+    def _retire_assignment(self, peer: Peer):
+        """Stop serving the current span, in exactly-once order: drain
+        queued thunks (they must never execute against newly adopted
+        state), release the ledger entries the peer's gradients backed
+        (survivors recompute those indices), leave the DHT slots and
+        wirings."""
+        peer.serving = False
+        peer.drain()
+        lost = []
+        for s in peer.stages:
+            lost += [(s, i) for i in self.ledger.release_peer(s, peer.id)]
+        self._log_releases(lost, peer.id)
+        peer.state.zero_grads()                # grads die with the move
+        self._dht_forget(peer)
+        for w in self.wirings:
+            w.ban_server(peer.id)
+
+    def _migrate(self, peer: Peer, dst: "int | range"):
         """Stage switch, in exactly-once order: stop serving, drain the
-        queued src-stage thunks (they must never execute against the
-        adopted dst params), release the ledger entries the peer's
-        gradients backed (survivors recompute those indices), download
-        the dst state — and only then re-announce and re-enter wirings."""
+        queued src-stage thunks, release the ledger entries, download
+        the dst state — and only then re-announce and re-enter
+        wirings."""
+        dst_span = _as_span(dst)
         # never yank accumulated grads out of an in-progress All-Reduce
         while self._dispatch_paused and not self.stopped:
             yield Sleep(0.05)
         if self.stopped or not peer.alive or not peer.serving:
             return
         # re-check after the deferral: the plan was made from an older
-        # snapshot, and leaving must not strand the source stage
-        if not any(q.alive and q.serving and q.stage == peer.stage
-                   and q is not peer for q in self.peers.values()):
+        # snapshot, and leaving must neither strand any source stage nor
+        # break the span layout's routability
+        if not all(self._covering(s, but=peer) for s in peer.stages) \
+                or not self._routes_without(peer, dst_span):
             return
-        src = peer.stage
-        peer.stage = dst                       # stops accepting src work
-        if peer.executor is not None:          # same backend, dst stage
-            peer.executor = peer.executor.for_stage(dst)
-        peer.serving = False
-        peer.drain()
-        self._log_releases([(src, i) for i in
-                            self.ledger.release_peer(src, peer.id)],
-                           peer.id)
-        peer.state.zero_grads()                # src grads die with the move
-        self.dht.delete(self.dht.stage_key(src), peer.id)
-        self.dht.delete(self.dht.load_key(src), peer.id)
-        for w in self.wirings:
-            w.ban_server(peer.id)
-        ok = yield from self._complete_warm_join(peer, dst)
+        self._retire_assignment(peer)
+        peer.executor = self._rebacked_executor(peer, dst_span)
+        peer.set_span(dst_span)
+        peer.state = peer._fresh_state()
+        ok = yield from self._complete_warm_join(peer, dst_span)
         if ok:
             self.metrics["migrations"] += 1
+
+    def _resize_span(self, peer: Peer, new_span: range):
+        """Shrink or grow a serving peer's span in place (Varuna-style
+        re-partitioning; how spans split into single-stage peers and
+        merge back).  Exactly-once order mirrors ``_migrate``: drain +
+        release first, THEN swap the executor and state.  Stages kept
+        across the resize keep their params locally (an on-device
+        snapshot/restore, no transfer time); newly covered stages
+        warm-download from whoever covers them.  Refuses when dropping
+        a stage would strand it."""
+        while self._dispatch_paused and not self.stopped:
+            yield Sleep(0.05)
+        if self.stopped or not peer.alive or not peer.serving:
+            return False
+        old_span = peer.stages
+        if new_span == old_span:
+            return False
+        dropped = [s for s in old_span if s not in new_span]
+        if not all(self._covering(s, but=peer) for s in dropped):
+            return False                       # would strand a stage
+        if not self._routes_without(peer, new_span):
+            return False                       # coverage != routability
+        kept = [s for s in new_span if s in old_span]
+        keep_snaps = {}
+        if peer.executor is not None:
+            for s in kept:
+                keep_snaps[s] = peer.executor.snapshot(peer.state, stage=s)
+        self._retire_assignment(peer)
+        peer.executor = self._rebacked_executor(peer, new_span)
+        peer.set_span(new_span)
+        peer.state = peer._fresh_state()
+        for s, snap in keep_snaps.items():
+            peer.executor.restore(peer.state, snap, stage=s)
+        peer.serving = False
+        for s in new_span:
+            if s not in kept:
+                yield from self._download_stage_state(peer, s)
+                if not peer.alive or self.stopped:
+                    return False
+        peer.serving = True
+        self._announce(peer)
+        for w in self.wirings:
+            w.move_server(peer.id, [new_span.start])
+        self.metrics["span_changes"] += 1
+        return True
+
+    def split_span(self, peer: Peer, at: int):
+        """Split ``peer``'s span ``[lo, hi)`` at ``at``: a fresh (or
+        revived) peer warm-joins on ``[at, hi)`` — downloading those
+        stages from the splitting peer, which still serves them — and
+        only then does the donor shrink to ``[lo, at)``.  Coverage never
+        gaps; the dying-span-peer path needs no choreography at all
+        (per-stage snapshots already interoperate, see
+        ``_download_stage_state``)."""
+        lo, hi = peer.stages.start, peer.stages.stop
+        if not (lo < at < hi):
+            raise ValueError(f"split point {at} outside ({lo}, {hi})")
+        yield from self._join_new_peer(span=range(at, hi))
+        yield from self._resize_span(peer, range(lo, at))
+
+    def merge_spans(self, peer: Peer, new_span: range):
+        """Grow ``peer`` to ``new_span`` (absorbing adjacent stages it
+        downloads from their current holders) — the inverse of
+        ``split_span``."""
+        yield from self._resize_span(peer, new_span)
 
     # ================================================== fault injection
     def apply_trace(self, trace: list[TraceEvent]):
@@ -700,14 +931,18 @@ class SwarmRunner:
     def _fail_random_peer(self):
         live = [p for p in self.peers.values() if p.alive]
 
-        def n_serving(s: int) -> int:
-            return sum(1 for q in live if q.serving and q.stage == s)
-        # never strand a stage: a serving peer may die only if a second
-        # serving peer covers its stage; a mid-download peer may die
-        # only if its target stage is still served by someone
+        def covered(p: Peer) -> bool:
+            return all(any(q.serving and s in q.stages
+                           for q in live if q is not p)
+                       for s in p.stages)
+        # never strand a stage: a serving peer may die only if every
+        # stage it covers is served by someone else AND the remaining
+        # span layout still routes (a span can be the only bridge at a
+        # boundary even when all its stages stay covered); a
+        # mid-download peer may die only if its target stages are still
+        # served
         candidates = [p for p in live
-                      if (p.serving and n_serving(p.stage) > 1)
-                      or (not p.serving and n_serving(p.stage) >= 1)]
+                      if covered(p) and self._routes_without(p, None)]
         if not candidates:
             return
         self._fail_peer(candidates[self.rng.integers(len(candidates))])
@@ -724,35 +959,40 @@ class SwarmRunner:
         self._log_releases(self.ledger.release_all(victim.id), victim.id)
         for w in self.wirings:
             w.ban_server(victim.id)
-        self.dht.delete(self.dht.stage_key(victim.stage), victim.id)
-        self.dht.delete(self.dht.load_key(victim.stage), victim.id)
+        self._dht_forget(victim)
 
-    def _join_new_peer(self):
-        # new peers join the most loaded stage (§3.2 "assigned to the
-        # optimal pipeline stage by following the same protocol")
-        loads = []
-        for s in range(self.n_stages):
-            group = [p for p in self.peers.values()
-                     if p.alive and p.serving and p.stage == s]
-            q = sum(p.queue_size() for p in group)
-            loads.append((q + 1) / max(len(group), 1e-9))
-        dst = int(np.argmax(loads))
-        # preemptible instances coming back reuse their peer object
-        dead = [p for p in self.peers.values() if not p.alive]
+    def _join_new_peer(self, span: Optional[range] = None):
+        if span is None:
+            # new peers join the most loaded stage (§3.2 "assigned to the
+            # optimal pipeline stage by following the same protocol")
+            loads = []
+            for s in range(self.n_stages):
+                group = self._covering(s)
+                q = sum(p.queue_size() for p in group)
+                loads.append((q + 1) / max(len(group), 1e-9))
+            span = _as_span(int(np.argmax(loads)))
+        # preemptible instances coming back reuse their peer object — but
+        # only a backend that can serve the join span (a dead mesh slice
+        # cannot come back as a fused span peer: MeshExecutor.for_span
+        # refuses width > 1, so a span join gets a fresh peer instead)
+        from repro.runtime import MeshExecutor
+        dead = [p for p in self.peers.values() if not p.alive
+                and not (len(span) > 1
+                         and isinstance(p.executor, MeshExecutor))]
         if dead:
             peer = dead[0]
-            peer.revive(dst)
             # a revived peer keeps its backend (a mesh slice coming back
-            # IS that mesh slice), re-targeted at the join stage
-            peer.executor = (peer.executor.for_stage(dst)
+            # IS that mesh slice), re-targeted at the join span
+            peer.executor = (self._rebacked_executor(peer, span)
                              if peer.executor is not None
-                             else self.executors[dst])
+                             else self._span_executor(span))
+            peer.revive(span)
         else:
-            peer = Peer(self.sim, self.profile_fn(len(self.peers)), dst,
-                        executor=self.executors[dst])
+            peer = Peer(self.sim, self.profile_fn(len(self.peers)), span,
+                        executor=self._span_executor(span))
             self.peers[peer.id] = peer
         self.metrics["joins"] += 1
-        ok = yield from self._complete_warm_join(peer, dst)
+        ok = yield from self._complete_warm_join(peer, span)
         if ok:
             self.sim.spawn(self._announcer(peer))
 

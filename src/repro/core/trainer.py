@@ -1,16 +1,22 @@
 """Trainer processes (paper §3.2 / App. C).
 
 Trainers own no parameters and no GPU: they form microbatches and route
-them through one peer per stage (forward), then back (backward), using
-stochastic wiring.  On a peer failure anywhere along the path the trainer
-bans the peer and re-routes — backward can go to a *different* peer than
-forward because stages recompute activations from the boundary input
-(activation checkpointing, App. A).
+them through the pipeline as a chain of *hops* — one peer per contiguous
+stage span — forward, then back, using stochastic wiring.  A hop may be a
+single-stage peer or a span peer (``PipelineExecutor``) serving several
+consecutive stages in one jitted step; either way the trainer only ever
+enters a peer at its span START, and the activation bytes it moves are
+charged per *hop edge* — fused intra-span boundaries cross nothing.  On a
+peer failure anywhere along the path the trainer bans the peer and
+re-routes — backward can go to a *different* peer than forward because
+stages recompute activations from the boundary input (activation
+checkpointing, App. A); a re-routed backward hop must cover the SAME span
+(the cotangent in hand is pinned to that span's edges).
 
 The trainer is backend- and codec-agnostic: stage execution and wire
 handling (including the int8 round-trip that used to live here) go
 through the peer's :class:`repro.runtime.StageExecutor`, so a path may
-mix single-device and mesh-backed peers freely.
+mix single-device, mesh-backed, and span peers freely.
 """
 from __future__ import annotations
 
@@ -38,6 +44,14 @@ class Microbatch:
     attempt: int = 1            # provenance: ledger dispatch attempt
 
 
+@dataclasses.dataclass
+class _Hop:
+    """One completed forward hop: which peer ran which span on what."""
+    peer: Peer
+    span: range
+    inp: Any                    # the hop's boundary input (for recompute)
+
+
 class Trainer:
     def __init__(self, sim: Sim, swarm, wiring: StochasticWiring,
                  name: str, *, max_retries: int = 50,
@@ -57,8 +71,10 @@ class Trainer:
                 self.swarm.dht, self.swarm.announced_stages())
             self._last_refresh = self.sim.now
 
-    def _pick(self, stage: int):
-        """Choose a live peer for a stage, waiting if none available."""
+    def _pick(self, stage: int, span: Optional[range] = None):
+        """Choose a live peer whose span STARTS at ``stage`` (optionally
+        covering exactly ``span`` — the backward re-route constraint),
+        or None when unavailable."""
         self._maybe_refresh()
         peer_id = self.wiring.choose_server(stage)
         if peer_id is None:
@@ -67,6 +83,10 @@ class Trainer:
         if peer is None or not peer.alive or not peer.serving \
                 or peer.stage != stage:
             self.wiring.ban_server(peer_id)
+            return None
+        if span is not None and peer.stages != span:
+            # a healthy peer with a different span: not bannable, just
+            # unusable for this cotangent — the caller retries/fails
             return None
         return peer
 
@@ -80,33 +100,49 @@ class Trainer:
         swarm = self.swarm
         S = swarm.n_stages
         numeric = swarm.numeric
-        acts: list[Any] = [None] * S        # boundary input of each stage
-        path: list[Optional[Peer]] = [None] * S
+        hops: list[_Hop] = []
 
-        # ---------------- forward
+        # ---------------- forward (hop chain over spans)
         x = mb.tokens if numeric else None
         s = 0
         retries = 0
         while s < S:
             peer = self._pick(s)
             if peer is None:
+                # dead end: NO live peer's span even starts at this
+                # boundary (earlier hop choices walked into a gap of the
+                # span layout, or a resize moved the entry away) — fail
+                # the attempt NOW so the re-issue re-rolls the path,
+                # instead of sleeping out max_retries seconds.  Only
+                # past the first hop: its yields advanced the clock, so
+                # the retry loop around re-issues cannot spin timeless
+                # (at s == 0 the plain Sleep-retry path below waits for
+                # a joiner the usual way).
+                if s > 0 and not any(p.alive and p.stages.start == s
+                                     for p in swarm.peers.values()):
+                    return None, False
                 retries += 1
                 if retries > self.max_retries:
                     return None, False
                 yield Sleep(1.0)
                 continue
+            span = peer.stages
+            covers_last = span.stop == S
             nbytes = self._boundary_bytes(mb) if s > 0 else \
                 mb.n_tokens * 4.0
             t0 = self.sim.now
             try:
                 yield Sleep(peer.profile.recv_time(nbytes))
+                if s > 0:        # a real host boundary crossing
+                    swarm.count_wire_bytes(nbytes)
                 inp = x
 
                 if numeric:
-                    # the executor runs the stage AND produces the wire
-                    # tensor that crosses to the next peer (codec round
-                    # trips, mesh host-gathers — all backend-owned)
-                    if s == S - 1:
+                    # the executor runs the whole span AND produces the
+                    # wire tensor that crosses to the next hop (codec
+                    # round trips, mesh host-gathers — all backend-owned;
+                    # fused boundaries never surface here)
+                    if covers_last:
                         thunk = (lambda _p=peer, _i=inp:
                                  _p.executor.run_fwd(_p.state, _i,
                                                      mb.labels))
@@ -120,12 +156,11 @@ class Trainer:
                 y = yield peer.submit("fwd", ct, thunk).wait()
                 # response travels back / onward
                 yield Sleep(peer.profile.send_time(
-                    self._boundary_bytes(mb) if s < S - 1 else 64.0))
+                    self._boundary_bytes(mb) if not covers_last else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
-                acts[s] = inp
-                path[s] = peer
+                hops.append(_Hop(peer, span, inp))
                 x = y
-                s += 1
+                s = span.stop
                 retries = 0
             except PeerFailure:
                 self.wiring.ban_server(peer.id)
@@ -133,56 +168,69 @@ class Trainer:
                 if retries > self.max_retries:
                     return None, False
 
-        # ---------------- backward (reverse, re-routable per stage)
+        # ---------------- backward (reverse hop chain, re-routable)
         loss_sum = float(x) if numeric else 0.0
         dy = None
-        s = S - 1
+        h = len(hops) - 1
         retries = 0
-        while s >= 0:
-            peer = path[s]
+        while h >= 0:
+            hop = hops[h]
+            peer = hop.peer
             if peer is None or not peer.alive or not peer.serving \
-                    or peer.stage != s:
-                peer = self._pick(s)
+                    or peer.stages != hop.span:
+                peer = self._pick(hop.span.start, span=hop.span)
             if peer is None:
+                # the cotangent in hand is pinned to this hop's span
+                # edges: if NO live peer still has that exact span (a
+                # resize re-partitioned the pipeline; a mid-download
+                # peer that will serve it again counts), fail the
+                # attempt NOW — the ledger re-issues and the fresh
+                # forward follows the new span layout, instead of
+                # sleeping out max_retries against an impossible route
+                if not any(p.alive and p.stages == hop.span
+                           for p in swarm.peers.values()):
+                    return None, False
                 retries += 1
                 if retries > self.max_retries:
                     return None, False
                 yield Sleep(1.0)
                 continue
+            covers_last = hop.span.stop == S
             nbytes = self._boundary_bytes(mb)
             t0 = self.sim.now
             try:
                 yield Sleep(peer.profile.recv_time(nbytes))
+                if not covers_last:      # a cotangent really crossed
+                    swarm.count_wire_bytes(nbytes)
                 if numeric:
-                    if s == S - 1:
-                        def thunk(_p=peer, _i=acts[s], _s=s):
+                    if covers_last:
+                        def thunk(_p=peer, _i=hop.inp):
                             loss, gx, gp = _p.executor.run_bwd(
                                 _p.state, _i, labels=mb.labels)
-                            # the ledger admits (stage, index) at most
-                            # once per round — a re-issued attempt only
-                            # recomputes gx for the stages that lost it
-                            self.swarm.accumulate(_p, gp, mb, float(loss),
-                                                  stage=_s)
+                            # the ledger admits each covered (stage,
+                            # index) at most once per round — a re-issued
+                            # attempt only folds the stages that lost it
+                            self.swarm.accumulate(_p, gp, mb, float(loss))
                             # the cotangent crosses back as a wire tensor
                             # (int8 round-trip etc. — executor-owned)
                             return _p.executor.wire_bwd(gx)
                     else:
-                        def thunk(_p=peer, _i=acts[s], _dy=dy, _s=s):
+                        def thunk(_p=peer, _i=hop.inp, _dy=dy):
                             _, gx, gp = _p.executor.run_bwd(_p.state, _i,
                                                             dy=_dy)
-                            self.swarm.accumulate(_p, gp, mb, None,
-                                                  stage=_s)
+                            self.swarm.accumulate(_p, gp, mb, None)
                             return _p.executor.wire_bwd(gx)
                 else:
-                    def thunk(_p=peer, _s=s):
-                        self.swarm.accumulate(_p, None, mb, None, stage=_s)
+                    def thunk(_p=peer):
+                        self.swarm.accumulate(_p, None, mb, None)
                         return None
-                ct = swarm.compute_time(peer, "bwd", s, mb)
+                ct = swarm.compute_time(peer, "bwd", hop.span.start, mb)
                 gx = yield peer.submit("bwd", ct, thunk).wait()
-                yield Sleep(peer.profile.send_time(nbytes if s > 0 else 64.0))
+                yield Sleep(peer.profile.send_time(
+                    nbytes if hop.span.start > 0 else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 dy = gx
-                s -= 1
+                h -= 1
                 retries = 0
             except PeerFailure:
                 self.wiring.ban_server(peer.id)

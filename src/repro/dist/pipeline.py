@@ -99,7 +99,7 @@ def _period_runs(cfg: ArchConfig, n_stages: int) -> list[tuple[str, int]]:
     return model_lib.segments(cfg.block_kinds[:per])
 
 
-def _restack(per_stage: list) -> jax.Array:
+def restack(per_stage: list) -> jax.Array:
     """Stack per-stage arrays along a new leading (pod-sharded) dim.
 
     Written as zeros + ``.at[s].set`` instead of ``jnp.stack``: the XLA
@@ -107,13 +107,18 @@ def _restack(per_stage: list) -> jax.Array:
     sharded (here: over ``pod``) — stage s > 0 silently computes with
     corrupted weights, ~3e-2 loss error on the 2x2x2 equivalence mesh.
     Static-index dynamic-update-slices partition correctly (verified by
-    the mixed-kind equivalence test in tests/test_distribution.py).
+    the mixed-kind equivalence tests in tests/test_distribution.py, on
+    BOTH call sites: the GSPMD tick below and the span-program stage
+    scan of ``repro.runtime.stage_model.build_span_program``).
     """
     out = jnp.zeros((len(per_stage),) + per_stage[0].shape,
                     per_stage[0].dtype)
     for s, a in enumerate(per_stage):
         out = out.at[s].set(a)
     return out
+
+
+_restack = restack          # historical (pre-span-builder) private name
 
 
 def _stage_blocks(cfg: ArchConfig, blocks: Tree, n_stages: int) -> Tree:
@@ -147,18 +152,27 @@ def _stage_blocks(cfg: ArchConfig, blocks: Tree, n_stages: int) -> Tree:
             lo = lo_g - starts[ri]
             stages.append(jax.tree.map(
                 lambda a, _lo=lo: a[_lo:_lo + c], blocks[ri]))
-        out.append(jax.tree.map(lambda *xs: _restack(list(xs)), *stages))
+        out.append(jax.tree.map(lambda *xs: restack(list(xs)), *stages))
         off += c
     return out
 
 
-def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
-    """One stage's program: scan this stage's layer runs over (x, aux)."""
-    period = _period_runs(cfg, n_stages)
-    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
+def make_block_core(cfg: ArchConfig, runs: list[tuple[str, int]],
+                    reps: int = 1, *, remat: bool = False):
+    """The span-parameterized stage core: scan ``runs`` of stacked layer
+    params over ``(x, aux)``.  ONE implementation shared by every
+    execution path — the GSPMD tick below (via :func:`_make_stage_fn`),
+    the sequential reference, and the per-stage / span programs of
+    ``repro.runtime.stage_model`` — so a stage computes identical math
+    whether it runs vmapped in the shifting buffer, alone on a peer, or
+    fused inside a span.
 
-    def stage_fn(blocks_s: Tree, x: jax.Array, aux: jax.Array, positions):
-        for (kind, _), seg in zip(period, blocks_s):
+    ``blocks_s`` is one stage's ``[tree-per-run]`` list (leaves stacked
+    ``[count, ...]``); ``reps > 1`` re-applies each layer (ALBERT-style
+    sharing, paper §4.3).
+    """
+    def block_fn(blocks_s: Tree, x: jax.Array, aux: jax.Array, positions):
+        for (kind, _), seg in zip(runs, blocks_s):
             apply_fn = REGISTRY[kind][1]
 
             def body(carry, p_l, _apply=apply_fn):
@@ -174,7 +188,14 @@ def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
             (x, aux), _ = jax.lax.scan(body, (x, aux), seg)
         return x, aux
 
-    return stage_fn
+    return block_fn
+
+
+def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
+    """One (periodic) stage's program for the vmapped shifting buffer."""
+    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
+    return make_block_core(cfg, _period_runs(cfg, n_stages), reps,
+                           remat=remat)
 
 
 def _resolve_codec(cfg: ArchConfig, n_stages: int,
@@ -190,6 +211,22 @@ def _resolve_codec(cfg: ArchConfig, n_stages: int,
             f"{cfg.pipeline_stages}) so model_specs attaches "
             "params['boundary']")
     return comp
+
+
+def boundary_crossing(cfg: ArchConfig, comp: str, bparams: Optional[Tree],
+                      b: int, x: jax.Array) -> jax.Array:
+    """What boundary ``b`` (stage b -> b+1) does to the activation, given
+    the stage-stacked codec tree (``bparams`` leading dim = boundary
+    index).  The codec-boundary core shared by the sequential reference
+    and the span programs of ``repro.runtime.stage_model`` — on-device
+    when the boundary is fused inside a span, on the wire otherwise."""
+    if comp == "int8":
+        return quant8.compress_boundary(x)
+    if comp in codecs.LEARNED:
+        pb = jax.tree.map(lambda a: a[b], bparams)
+        return codecs.decompress(
+            cfg, comp, pb, codecs.compress(cfg, comp, pb, x))
+    return x
 
 
 def _boundary_params(params: Tree, comp: str, n_stages: int) -> Tree:
@@ -356,16 +393,6 @@ def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
 
     from repro.train import steps as steps_lib   # lazy: steps imports models
 
-    def crossing(bparams, b: int, x: jax.Array) -> jax.Array:
-        """What boundary ``b`` (stage b -> b+1) does to the activation."""
-        if comp == "int8":
-            return quant8.compress_boundary(x)
-        if comp in codecs.LEARNED:
-            pb = jax.tree.map(lambda a: a[b], bparams)
-            return codecs.decompress(
-                cfg, comp, pb, codecs.compress(cfg, comp, pb, x))
-        return x
-
     def loss_fn(params: Tree, batch: Tree):
         tokens, labels = batch["tokens"], batch["labels"]
         B, S = tokens.shape
@@ -391,7 +418,7 @@ def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
                             for t in stage_blocks]
                 x, aux = stage_fn(blocks_s, x, aux, pos)
                 if s < n_stages - 1:
-                    x = crossing(bparams, s, x)
+                    x = boundary_crossing(cfg, comp, bparams, s, x)
             logits = model_lib.head(cfg, params, x, batch_axes=("data",))
             ces.append(steps_lib.cross_entropy(logits, lab))
             auxs.append(aux)

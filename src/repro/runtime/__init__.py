@@ -6,24 +6,33 @@ Layering (see README "Architecture"):
         │   routes microbatches + lifecycle events to peers
         ▼
     repro.runtime.StageExecutor   (this package: the protocol)
-        ├── NumericExecutor  — single-device stage math, process-wide
-        │                      compile cache (one jit per stage, shared
-        │                      by every peer of that stage)
-        └── MeshExecutor     — the same stage step sharded over a device
-                               mesh via repro.dist sharding rules
-                               (data-parallel within the peer)
+        ├── NumericExecutor   — single-device stage math, process-wide
+        │                       compile cache (one jit per stage, shared
+        │                       by every peer of that stage)
+        ├── MeshExecutor      — the same stage step sharded over a device
+        │                       mesh via repro.dist sharding rules
+        │                       (data-parallel within the peer)
+        └── PipelineExecutor  — a contiguous SPAN of stages [lo, hi)
+                                fused into one jit (square-cube: strong
+                                peers hold more of the model); intra-span
+                                boundaries never cross the host
 """
 from repro.runtime.base import StageExecutor, StageState, host_snapshot
-from repro.runtime.stage_model import (StageProgram, build_stage_programs,
+from repro.runtime.stage_model import (SpanProgram, StageProgram,
+                                       build_span_program,
+                                       build_stage_programs,
                                        init_stage_params)
 from repro.runtime.numeric import (NumericExecutor, build_numeric_executors,
-                                   compile_stats, get_stage_programs,
-                                   reset_compile_stats)
+                                   compile_stats, get_span_program,
+                                   get_stage_programs, reset_compile_stats)
 from repro.runtime.mesh import MeshExecutor
+from repro.runtime.pipeline import PipelineExecutor
 
 __all__ = [
     "StageExecutor", "StageState", "host_snapshot",
-    "StageProgram", "build_stage_programs", "init_stage_params",
-    "NumericExecutor", "MeshExecutor", "build_numeric_executors",
-    "get_stage_programs", "compile_stats", "reset_compile_stats",
+    "StageProgram", "SpanProgram", "build_stage_programs",
+    "build_span_program", "init_stage_params",
+    "NumericExecutor", "MeshExecutor", "PipelineExecutor",
+    "build_numeric_executors", "get_stage_programs", "get_span_program",
+    "compile_stats", "reset_compile_stats",
 ]

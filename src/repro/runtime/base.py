@@ -1,9 +1,9 @@
 """The stage-runtime layer: what a SWARM "peer" runs.
 
 The elastic scheduler (``repro.core``) decides *where* a microbatch goes;
-a :class:`StageExecutor` decides *how* the chosen peer executes its stage.
-Unifying the two previously-disjoint stage implementations — the eager
-per-peer ``StageProgram`` math and the compiled GSPMD path of
+a :class:`StageExecutor` decides *how* the chosen peer executes its
+stages.  Unifying the previously-disjoint stage implementations — the
+eager per-peer ``StageProgram`` math and the compiled GSPMD path of
 ``repro.dist`` — behind this protocol is what lets a heterogeneous swarm
 (paper §3, and Diskin et al.'s pooled-hardware setting) mix peers that
 are a lone T4 with peers that are an 8-device mesh slice, inside one
@@ -14,16 +14,30 @@ pipeline:
   every peer of that stage, instead of per-peer re-tracing);
 * :class:`~repro.runtime.mesh.MeshExecutor` — the stage step sharded
   over a device mesh via the ``repro.dist`` rules (data-parallel within
-  the peer).
+  the peer);
+* :class:`~repro.runtime.pipeline.PipelineExecutor` — a contiguous
+  *span* of stages ``[lo, hi)`` fused into one jitted step (the paper's
+  square-cube rebalancing: well-provisioned peers hold more of the
+  model), intra-span boundaries never crossing the host.
+
+An executor's identity is its ``stages`` range — ``range(s, s+1)`` for
+the single-stage backends.  Every state operation that the scheduler
+performs per pipeline stage (gradient export, the optimizer-step install,
+snapshot/restore) takes an explicit ``stage`` so a span peer is
+per-stage addressable: it occupies one All-Reduce group per covered
+stage, its checkpoint cuts are ordinary single-stage snapshots, and a
+dying span peer hands per-stage state to single-stage peers (and vice
+versa for merges).
 
 Executors are *stateless* with respect to training progress: all mutable
 state lives in the :class:`StageState` the scheduler hands in, so N
 peers of one stage share one executor, and a peer migrating between
-stages just swaps executors.  ``snapshot``/``restore`` speak host-side
-(numpy) trees — the common wire format for peer-to-peer state downloads
-(numeric ↔ mesh in either direction) and for ``repro.ckpt``, which is
-how a stage that lost all its peers resumes from the latest completed
-step instead of step 0 (Varuna-style elastic restart).
+stages (or resizing its span) just swaps executors via ``for_span``.
+``snapshot``/``restore`` speak host-side (numpy) trees — the common wire
+format for peer-to-peer state downloads (numeric ↔ mesh ↔ pipeline in
+any direction) and for ``repro.ckpt``, which is how a stage that lost
+all its peers resumes from the latest completed step instead of step 0
+(Varuna-style elastic restart).
 """
 from __future__ import annotations
 
@@ -38,12 +52,18 @@ Tree = Any
 
 @dataclasses.dataclass
 class StageState:
-    """Replicated training state for one pipeline stage.
+    """Replicated training state for one pipeline stage — or, for a span
+    backend, the per-stage-keyed bundle of them (``per_stage``).
 
     Owned by the executor protocol: schedulers treat it as an opaque
     handle and go through executor methods (``accumulate``, ``snapshot``,
     ``restore``, ``adopt_step``) for every mutation that touches device
-    memory.
+    memory.  ``stage_view(s)`` is the read path the scheduler uses for
+    per-stage bookkeeping (token counts for the All-Reduce weighting,
+    the last stage's loss sum): it returns ``self`` on single-stage
+    states and the stage-``s`` sub-state on span states, so span peers
+    keep exact per-stage accounting (the ledger may admit one covered
+    stage of a microbatch and skip another).
     """
     params: Tree = None
     opt: Tree = None
@@ -51,8 +71,23 @@ class StageState:
     loss_sum: float = 0.0
     token_count: int = 0
     version: int = 0
+    # span backends: global stage id -> per-stage StageState; the outer
+    # object then carries no tensors of its own
+    per_stage: Optional[dict[int, "StageState"]] = None
+
+    def stage_view(self, stage: Optional[int] = None) -> "StageState":
+        if self.per_stage is None or stage is None:
+            return self
+        return self.per_stage[stage]
+
+    def views(self) -> list["StageState"]:
+        return (list(self.per_stage.values()) if self.per_stage is not None
+                else [self])
 
     def zero_grads(self):
+        if self.per_stage is not None:
+            for st in self.per_stage.values():
+                st.zero_grads()
         if self.grad_acc is not None:
             self.grad_acc = jax.tree.map(jnp.zeros_like, self.grad_acc)
         self.loss_sum = 0.0
@@ -69,31 +104,44 @@ class StageState:
 
 @runtime_checkable
 class StageExecutor(Protocol):
-    """How a peer runs one pipeline stage (init / fwd / bwd / accumulate /
-    snapshot / restore / wire-codec handling).
+    """How a peer runs its pipeline stages (init / fwd / bwd / accumulate
+    / snapshot / restore / wire-codec handling).
 
     ``run_fwd``/``run_bwd`` consume and produce *wire* tensors: whatever
     representation crosses between peers (the learned codecs' c-dim
     tensor, or the d-dim activation for ``none``/``int8``).  The int8
     round-trip that used to be special-cased in the trainer lives in
-    ``wire_fwd``/``wire_bwd`` — the trainer is codec-agnostic.
+    ``wire_fwd``/``wire_bwd`` — the trainer is codec-agnostic.  Span
+    backends apply the wire codec only at span *edges*; fused boundaries
+    stay on-device inside ``run_fwd``/``run_bwd``.
+
+    Per-stage state operations take ``stage=None`` meaning "the
+    executor's sole stage" — single-stage backends accept only that (or
+    their own stage id); span backends require an explicit covered
+    stage for ``export_grads``/``export_state``/``adopt_step`` and for
+    single-stage-formatted ``snapshot``/``restore``.
     """
 
-    stage: int
+    stage: int                     # entry stage (== stages.start)
+    stages: range                  # contiguous span served, [lo, hi)
     n_stages: int
     compress_mode: str
     quant_block: int               # int8 wire codec block size
     device_count: int              # relative capacity of this backend
-    fwd_flops_per_token: float
+    fwd_flops_per_token: float     # whole-span totals
     bwd_flops_per_token: float
 
     # ---------------------------------------------------------- lifecycle
     def init_state(self, key: jax.Array) -> StageState: ...
 
-    def for_stage(self, stage: int) -> "StageExecutor":
-        """The sibling executor serving ``stage`` on the same backend
-        (used when a peer migrates between stages)."""
+    def for_span(self, span: range) -> "StageExecutor":
+        """The sibling executor serving ``span`` on the same backend —
+        how a peer migrates between stages, and how span peers split
+        into single-stage peers and merge back (``for_stage`` is the
+        width-1 shorthand)."""
         ...
+
+    def for_stage(self, stage: int) -> "StageExecutor": ...
 
     def dp_shards(self, batch: int) -> int:
         """How many ways this backend actually splits a ``batch``-sized
@@ -104,17 +152,22 @@ class StageExecutor(Protocol):
     # ---------------------------------------------------------- execution
     def run_fwd(self, state: StageState, inp: Tree,
                 labels: Optional[jax.Array] = None) -> Tree:
-        """Stage forward from the boundary input.  Last stage returns the
-        token-sum loss; others return the outbound wire tensor."""
+        """Span forward from the boundary input.  A span covering the
+        last stage returns the token-sum loss; others return the
+        outbound wire tensor."""
         ...
 
     def run_bwd(self, state: StageState, inp: Tree,
                 dy: Optional[Tree] = None,
                 labels: Optional[jax.Array] = None
                 ) -> tuple[Optional[float], Optional[Tree], Tree]:
-        """Stage backward (recomputes forward from ``inp``, App. A).
-        Returns ``(loss, gx, gp)``; ``loss`` only on the last stage,
-        ``gx`` None on the first."""
+        """Span backward (recomputes forward from ``inp``, App. A).
+        Returns ``(loss, gx, gp)``; ``loss`` only when the span covers
+        the last stage, ``gx`` None when it starts at 0.  Single-stage
+        backends return ``gp`` as the stage's param tree; span backends
+        return a dict keyed by *global stage id* so the scheduler can
+        fold each covered stage independently (the ledger may admit a
+        subset)."""
         ...
 
     # --------------------------------------------------------- wire codec
@@ -128,40 +181,48 @@ class StageExecutor(Protocol):
 
     # -------------------------------------------------------- accumulation
     def accumulate(self, state: StageState, gp: Optional[Tree],
-                   loss: Optional[float], n_tokens: int) -> None:
-        """Fold one microbatch gradient into the state's accumulator."""
+                   loss: Optional[float], n_tokens: int,
+                   stage: Optional[int] = None) -> None:
+        """Fold one microbatch gradient into the (per-stage) accumulator."""
         ...
 
-    def export_grads(self, state: StageState) -> Tree:
-        """The accumulator in a form addable across this stage's peers
-        on the scheduler's device (identity for single-device backends,
-        host-gathered for mesh backends)."""
+    def export_grads(self, state: StageState,
+                     stage: Optional[int] = None) -> Tree:
+        """Stage ``stage``'s accumulator in a form addable across that
+        stage's peers on the scheduler's device (identity for
+        single-device backends, host-gathered for mesh backends)."""
         ...
 
-    def export_state(self, state: StageState) -> tuple[Tree, Tree]:
+    def export_state(self, state: StageState,
+                     stage: Optional[int] = None) -> tuple[Tree, Tree]:
         """``(params, opt)`` in scheduler-local form, for the optimizer
         step at the All-Reduce barrier."""
         ...
 
     def adopt_step(self, state: StageState, new_params: Tree,
-                   new_opt: Tree) -> None:
-        """Install post-optimizer-step state (placing it onto this
-        backend's devices) and zero the accumulator."""
+                   new_opt: Tree, stage: Optional[int] = None) -> None:
+        """Install post-optimizer-step state for one stage (placing it
+        onto this backend's devices) and zero that stage's accumulator."""
         ...
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState) -> Tree:
+    def snapshot(self, state: StageState,
+                 stage: Optional[int] = None) -> Tree:
         """Host-side (numpy) ``{"params", "opt", "version"}`` tree — the
-        wire format for peer-to-peer downloads and ``repro.ckpt``."""
+        wire format for peer-to-peer downloads and ``repro.ckpt``.  With
+        an explicit ``stage``, span backends emit that covered stage in
+        the SAME single-stage format, so span ↔ single hand-offs (and
+        checkpoint cuts) are interchangeable."""
         ...
 
-    def restore(self, state: StageState, snap: Tree) -> None:
+    def restore(self, state: StageState, snap: Tree,
+                stage: Optional[int] = None) -> None:
         """Install a snapshot (device placement is the executor's job)."""
         ...
 
 
 def host_snapshot(state: StageState) -> Tree:
-    """Default ``snapshot``: pull params/opt to host numpy."""
+    """Default single-stage ``snapshot``: pull params/opt to host numpy."""
     return {"params": jax.device_get(state.params),
             "opt": jax.device_get(state.opt),
             "version": state.version}
@@ -188,12 +249,20 @@ def fold_into(state: StageState, gp: Optional[Tree],
         state.loss_sum += loss
 
 
+def single_stage(ex: StageExecutor, stage: Optional[int]) -> None:
+    """Guard for single-stage backends' ``stage=`` keywords."""
+    if stage is not None and stage != ex.stage:
+        raise ValueError(
+            f"{type(ex).__name__} serves stage {ex.stage}, not {stage}")
+
+
 def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
     """Shared ``wire_fwd`` codec step: int8 quantize-on-send on live
-    boundaries.  Learned codecs already emitted the c-dim wire tensor
-    inside the stage program; ``none`` crosses raw; the last stage
-    emits a loss, not a boundary."""
-    if ex.compress_mode == "int8" and ex.stage < ex.n_stages - 1:
+    span-edge boundaries.  Learned codecs already emitted the c-dim wire
+    tensor inside the stage program; ``none`` crosses raw; a span whose
+    last covered stage is the pipeline's last emits a loss, not a
+    boundary — and fused (intra-span) boundaries never reach here."""
+    if ex.compress_mode == "int8" and ex.stages.stop < ex.n_stages:
         from repro.compression.quant8 import _roundtrip
         return _roundtrip(y, ex.quant_block)
     return y
@@ -202,7 +271,8 @@ def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
 def wire_bwd_codec(ex: StageExecutor, gx: Optional[Tree]
                    ) -> Optional[Tree]:
     """Shared ``wire_bwd`` codec step: int8 quantizes the boundary
-    cotangent (None on the first stage — nothing crosses back)."""
+    cotangent (None when the span starts at stage 0 — nothing crosses
+    back)."""
     if gx is not None and ex.compress_mode == "int8":
         from repro.compression.quant8 import _roundtrip
         return _roundtrip(gx, ex.quant_block)

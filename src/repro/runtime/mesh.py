@@ -37,7 +37,7 @@ from repro.dist.sharding import ShardingRules, DEFAULT_RULES, \
     stage_param_shardings
 from repro.models.config import ArchConfig
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
-    wire_bwd_codec, wire_fwd_codec
+    single_stage, wire_bwd_codec, wire_fwd_codec
 from repro.runtime.stage_model import _traced, init_stage_params
 from repro.runtime import numeric as numeric_rt
 
@@ -148,12 +148,24 @@ class MeshExecutor:
         state.reset_progress()
         return state
 
+    @property
+    def stages(self) -> range:
+        return range(self.stage, self.stage + 1)
+
     def for_stage(self, stage: int) -> "MeshExecutor":
         if stage == self.stage:
             return self
         return MeshExecutor(self.cfg, self.n_stages, self.seq_len, stage,
                             self.mesh, self.compress_mode,
                             self.quant_block, self.rules, self.batch_axis)
+
+    def for_span(self, span: range) -> "MeshExecutor":
+        if len(span) != 1:
+            raise NotImplementedError(
+                "mesh-backed span serving is pending the async/DPU "
+                "overlap work (ROADMAP) — fuse spans on the "
+                "PipelineExecutor backend instead")
+        return self.for_stage(span.start)
 
     def dp_shards(self, batch: int) -> int:
         """Actual data-parallel split of a ``batch``-sized microbatch —
@@ -193,28 +205,39 @@ class MeshExecutor:
 
     # -------------------------------------------------------- accumulation
     def accumulate(self, state: StageState, gp: Optional[Tree],
-                   loss: Optional[float], n_tokens: int) -> None:
+                   loss: Optional[float], n_tokens: int,
+                   stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         fold_into(state, gp, loss, n_tokens)
 
-    def export_grads(self, state: StageState) -> Tree:
+    def export_grads(self, state: StageState,
+                     stage: Optional[int] = None) -> Tree:
         # host-gathered: addable with any other backend's accumulator
+        single_stage(self, stage)
         return jax.device_get(state.grad_acc)
 
-    def export_state(self, state: StageState):
+    def export_state(self, state: StageState,
+                     stage: Optional[int] = None):
+        single_stage(self, stage)
         return jax.device_get(state.params), jax.device_get(state.opt)
 
     def adopt_step(self, state: StageState, new_params: Tree,
-                   new_opt: Tree) -> None:
+                   new_opt: Tree, stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         state.params = self._place_params(new_params)
         state.opt = self._place_opt(new_opt)
         state.version += 1
         state.reset_progress()
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState) -> Tree:
+    def snapshot(self, state: StageState,
+                 stage: Optional[int] = None) -> Tree:
+        single_stage(self, stage)
         return host_snapshot(state)
 
-    def restore(self, state: StageState, snap: Tree) -> None:
+    def restore(self, state: StageState, snap: Tree,
+                stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         state.params = self._place_params(snap["params"])
         state.opt = self._place_opt(snap.get("opt"))
         state.version = int(snap.get("version", 0))

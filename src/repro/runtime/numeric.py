@@ -26,8 +26,10 @@ import jax.numpy as jnp
 from repro.compression import codecs
 from repro.models.config import ArchConfig
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
-    wire_bwd_codec, wire_fwd_codec
-from repro.runtime.stage_model import (StageProgram, build_stage_programs,
+    single_stage, wire_bwd_codec, wire_fwd_codec
+from repro.runtime.stage_model import (SpanProgram, StageProgram,
+                                       build_span_program,
+                                       build_stage_programs,
                                        init_stage_params)
 
 Tree = Any
@@ -36,6 +38,9 @@ Tree = Any
 # (cfg, n_stages, seq_len, comp) -> list[StageProgram]; ArchConfig is a
 # frozen dataclass, hence hashable — identical configs share programs.
 _PROGRAMS: dict[tuple, list[StageProgram]] = {}
+# (cfg, n_stages, seq_len, comp, (lo, hi)) -> SpanProgram: one fused jit
+# per (span, codec), shared by every peer serving that span
+_SPANS: dict[tuple, SpanProgram] = {}
 # (stage, kind, shapes) per program-cache key -> number of XLA traces
 _TRACES: dict[tuple, int] = {}
 _LOCK = threading.Lock()
@@ -56,6 +61,7 @@ def reset_compile_stats() -> None:
     with _LOCK:
         _TRACES.clear()
         _PROGRAMS.clear()
+        _SPANS.clear()
     with mesh_rt._LOCK:
         mesh_rt._MESH_JITS.clear()
 
@@ -93,6 +99,31 @@ def get_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
     return progs
 
 
+def get_span_program(cfg: ArchConfig, n_stages: int, seq_len: int,
+                     span: tuple[int, int],
+                     compress: Optional[str] = None) -> SpanProgram:
+    """The shared, counted fused program for a ``[lo, hi)`` span: one
+    fwd/bwd jit per (configuration, span, codec) process-wide, so N span
+    peers of one span compile once and a second same-shape runner
+    re-traces nothing (same discipline as the per-stage cache)."""
+    comp = codecs.resolve_mode(cfg, compress)
+    key = (cfg, n_stages, seq_len, comp, tuple(span))
+    with _LOCK:
+        prog = _SPANS.get(key)
+    if prog is not None:
+        return prog
+    tag = (cfg.name, n_stages, seq_len, comp)
+
+    def hook(span_id, kind: str, shapes: tuple):
+        record_trace(tag + (span_id, kind, shapes))
+
+    prog = build_span_program(cfg, n_stages, seq_len, tuple(span),
+                              compress=comp, trace_hook=hook)
+    with _LOCK:
+        prog = _SPANS.setdefault(key, prog)
+    return prog
+
+
 class NumericExecutor:
     """Single-device stage execution (today's eager-ish SWARM peer)."""
 
@@ -100,17 +131,23 @@ class NumericExecutor:
 
     def __init__(self, cfg: ArchConfig, prog: StageProgram,
                  compress_mode: str, quant_block: int = 64,
-                 family: Optional[list["NumericExecutor"]] = None):
+                 family: Optional[list["NumericExecutor"]] = None,
+                 seq_len: Optional[int] = None):
         self.cfg = cfg
         self.prog = prog
         self.stage = prog.stage
         self.n_stages = prog.n_stages
+        self.seq_len = seq_len              # lets for_span build fused kin
         self.compress_mode = compress_mode
         self.quant_block = quant_block
         self.fwd_flops_per_token = prog.fwd_flops_per_token
         self.bwd_flops_per_token = prog.bwd_flops_per_token
         # all executors of one pipeline, so migrations can swap stages
         self._family = family if family is not None else [self]
+
+    @property
+    def stages(self) -> range:
+        return range(self.stage, self.stage + 1)
 
     # ---------------------------------------------------------- lifecycle
     def init_state(self, key: jax.Array) -> StageState:
@@ -120,6 +157,22 @@ class NumericExecutor:
 
     def for_stage(self, stage: int) -> "NumericExecutor":
         return self._family[stage]
+
+    def for_span(self, span: range) -> "StageExecutor":
+        """Width-1 spans stay in the numeric family; wider spans swap the
+        peer onto the fused :class:`~repro.runtime.pipeline
+        .PipelineExecutor` backend (how a merge turns a single-stage
+        peer into a span peer)."""
+        if len(span) == 1:
+            return self._family[span.start]
+        if self.seq_len is None:
+            raise ValueError("NumericExecutor built without seq_len "
+                             "cannot widen to a span")
+        from repro.runtime.pipeline import PipelineExecutor
+        return PipelineExecutor(self.cfg, self.n_stages, self.seq_len,
+                                (span.start, span.stop),
+                                compress=self.compress_mode,
+                                quant_block=self.quant_block)
 
     def dp_shards(self, batch: int) -> int:
         del batch
@@ -150,27 +203,38 @@ class NumericExecutor:
 
     # -------------------------------------------------------- accumulation
     def accumulate(self, state: StageState, gp: Optional[Tree],
-                   loss: Optional[float], n_tokens: int) -> None:
+                   loss: Optional[float], n_tokens: int,
+                   stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         fold_into(state, gp, loss, n_tokens)
 
-    def export_grads(self, state: StageState) -> Tree:
+    def export_grads(self, state: StageState,
+                     stage: Optional[int] = None) -> Tree:
+        single_stage(self, stage)
         return state.grad_acc                   # already scheduler-local
 
-    def export_state(self, state: StageState):
+    def export_state(self, state: StageState,
+                     stage: Optional[int] = None):
+        single_stage(self, stage)
         return state.params, state.opt
 
     def adopt_step(self, state: StageState, new_params: Tree,
-                   new_opt: Tree) -> None:
+                   new_opt: Tree, stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         state.params = new_params
         state.opt = new_opt
         state.version += 1
         state.reset_progress()
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState) -> Tree:
+    def snapshot(self, state: StageState,
+                 stage: Optional[int] = None) -> Tree:
+        single_stage(self, stage)
         return host_snapshot(state)
 
-    def restore(self, state: StageState, snap: Tree) -> None:
+    def restore(self, state: StageState, snap: Tree,
+                stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
         state.params = jax.tree.map(jnp.asarray, snap["params"])
         state.opt = (jax.tree.map(jnp.asarray, snap["opt"])
                      if snap.get("opt") is not None else None)
@@ -191,5 +255,5 @@ def build_numeric_executors(cfg: ArchConfig, n_stages: int, seq_len: int,
     family: list[NumericExecutor] = []
     for p in progs:
         family.append(NumericExecutor(cfg, p, comp, quant_block,
-                                      family=family))
+                                      family=family, seq_len=seq_len))
     return family

@@ -14,24 +14,39 @@ trainer carries between peers IS the c-dim wire tensor, and codec gradients
 arrive through the ordinary per-stage ``bwd`` like any other parameter.
 ``"int8"`` stays outside the programs (the trainer round-trips the wire
 tensor), matching SWARM's quantize-on-send.
+
+The builders are *span-parameterized*: :func:`build_stage_programs` is the
+``[s, s+1)`` special case of the same machinery
+:func:`build_span_program` uses to fuse a contiguous span ``[lo, hi)`` of
+stages into ONE jitted fwd/bwd (the
+:class:`repro.runtime.pipeline.PipelineExecutor` backend).  Inside a span,
+intra-span boundaries never leave the device: chaining stage ``b``'s
+in-program compress with stage ``b+1``'s decompress reproduces the exact
+single-stage math, minus the host crossing.  Structurally identical
+consecutive stages are stacked with :func:`repro.dist.pipeline.restack`
+(the XLA-0.4.x sharded-concat workaround — the same construction the
+GSPMD shifting buffer vmaps over ``pod``) and scanned over the stage dim;
+the per-stage layer math itself is
+:func:`repro.dist.pipeline.make_block_core`, shared with the compiled
+pipeline, so span peers, single-stage peers, and the GSPMD step compute
+one set of stage numerics.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Callable, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.compression import codecs
+from repro.dist.constrain import constrain
+from repro.dist.pipeline import make_block_core, restack
 from repro.models.config import ArchConfig
 from repro.models import params as P
 from repro.models import layers as L
 from repro.models import model as model_lib
-from repro.models.blocks import REGISTRY
 from repro.models import flops as F
-from repro.train.steps import cross_entropy
 
 Tree = Any
 
@@ -49,11 +64,38 @@ class StageProgram:
     bwd_fn: Optional[Callable] = None   # with their own shardings)
 
 
-def _traced(fn: Callable, hook: Optional[Callable], stage: int, kind: str
+@dataclasses.dataclass
+class SpanProgram:
+    """A contiguous span ``[lo, hi)`` of stages fused into one jitted step.
+
+    ``fwd``/``bwd`` take a *tuple* of per-stage param trees (ordered
+    ``lo..hi-1``, each shaped exactly like the corresponding
+    :class:`StageProgram`'s ``specs``) so a span peer's state stays
+    per-stage-keyed: checkpoint cuts, peer-to-peer downloads and span
+    split/merge hand-offs move single-stage snapshots, never a fused
+    blob.  ``bwd`` returns per-stage gradients as the same tuple.
+    """
+    span: tuple[int, int]
+    n_stages: int
+    specs: dict[int, Tree]        # per covered stage, keyed by global id
+    fwd: Callable                 # jitted
+    bwd: Callable                 # jitted
+    fwd_flops_per_token: float    # whole-span totals
+    bwd_flops_per_token: float
+    fwd_fn: Optional[Callable] = None
+    bwd_fn: Optional[Callable] = None
+
+    @property
+    def stages(self) -> range:
+        return range(*self.span)
+
+
+def _traced(fn: Callable, hook: Optional[Callable], stage, kind: str
             ) -> Callable:
     """Jit ``fn``; if ``hook`` is given, call it once per XLA trace (the
     body side effect runs at trace time only) with the argument shapes —
-    the runtime layer's retrace counter hangs off this."""
+    the runtime layer's retrace counter hangs off this.  ``stage`` is an
+    int for single-stage programs, a ``(lo, hi)`` span tuple for spans."""
     if hook is None:
         return jax.jit(fn)
 
@@ -76,6 +118,106 @@ def _stage_slice(cfg: ArchConfig, stage: int, n_stages: int):
     return cfg.block_kinds[lo:hi], False
 
 
+def _stage_runs(cfg: ArchConfig, s: int, n_stages: int):
+    """(kinds, [per-run (kind, count)], reps) for one stage's layer slice."""
+    kinds, shared = _stage_slice(cfg, s, n_stages)
+    runs = model_lib.segments(kinds)
+    if shared:
+        runs = [(kinds[0], 1)]          # single shared group
+    reps = len(kinds) if shared else 1
+    return kinds, runs, reps
+
+
+def _stage_specs(cfg: ArchConfig, s: int, n_stages: int, comp: str,
+                 learned: bool) -> Tree:
+    """One stage's ParamSpec tree: blocks + edge extras (embed / head) +
+    its side(s) of the learned boundary codec."""
+    _, runs, _ = _stage_runs(cfg, s, n_stages)
+    from repro.models.blocks import REGISTRY
+    specs: Tree = {"blocks": [
+        model_lib.stack_specs(REGISTRY[k][0](cfg), n) for k, n in runs]}
+    if s == 0:
+        specs["embed"] = P.ParamSpec(
+            (cfg.vocab_size, cfg.d_model), cfg.param_jdtype, "embed",
+            ("vocab", "embed"))
+    if s == n_stages - 1:
+        specs["final_norm"] = L.norm_specs(cfg)
+        if not cfg.tie_embeddings or s != 0:
+            specs["head"] = P.ParamSpec(
+                (cfg.d_model, cfg.vocab_size), cfg.param_jdtype,
+                "normal", ("embed", "vocab"))
+    if learned:
+        # receiving side (w_d) for s > 0, sending side (w_c) for
+        # s < S-1; maxout's compress is param-free so its stage-0
+        # "boundary" tree is empty and omitted
+        bnd: Tree = {}
+        if s > 0:
+            bnd.update(codecs.receiver_specs(cfg, comp))
+        if s < n_stages - 1:
+            bnd.update(codecs.sender_specs(cfg, comp))
+        if bnd:
+            specs["boundary"] = bnd
+    return specs
+
+
+def _make_stage_fwd(cfg: ArchConfig, s: int, n_stages: int, comp: str,
+                    learned: bool) -> Callable:
+    """Stage ``s``'s wire-to-wire forward: decode the inbound wire tensor
+    (embed for stage 0), run the stage's layers through the shared block
+    core, emit the outbound wire tensor (hidden for the last stage — the
+    head/loss is applied by the caller)."""
+    _, runs, reps = _stage_runs(cfg, s, n_stages)
+    core = make_block_core(cfg, runs, reps)
+    is_first, is_last = s == 0, s == n_stages - 1
+
+    def stage_fwd(params: Tree, inp):
+        if is_first:
+            tokens = inp
+            x = params["embed"][tokens].astype(cfg.compute_jdtype)
+            if cfg.scale_embed:
+                x = x * (cfg.d_model ** 0.5)
+        else:
+            x = inp.astype(cfg.compute_jdtype)
+            if learned:          # wire tensor arrives c-dim: restore
+                x = codecs.decompress(cfg, comp,
+                                      params.get("boundary"), x)
+        positions = jnp.arange(x.shape[1])
+        x, _aux = core(params["blocks"], x,
+                       jnp.zeros((), jnp.float32), positions)
+        if learned and not is_last:    # emit the c-dim wire tensor
+            x = codecs.compress(cfg, comp, params.get("boundary"), x)
+        return x
+
+    return stage_fwd
+
+
+def _head_loss(cfg: ArchConfig, params: Tree, x, labels):
+    """Final norm + LM head + token-sum CE (so microbatch gradients add
+    exactly, App. E) — the last stage's extra ownership."""
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    w = (params["embed"].T if cfg.tie_embeddings and "head" not in
+         params else params["head"])
+    logits = x @ w.astype(x.dtype)
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.sum(lse - gold)
+
+
+def _stage_fwd_flops(cfg: ArchConfig, s: int, n_stages: int, seq_len: int,
+                     comp: str, learned: bool) -> float:
+    kinds, _, _ = _stage_runs(cfg, s, n_stages)
+    is_first, is_last = s == 0, s == n_stages - 1
+    ctx = F._ctx_for(cfg, seq_len, causal_avg=True)
+    layer_f = sum(F.per_token_layer_flops(cfg, k, ctx) for k in kinds)
+    head_f = 2 * cfg.d_model * cfg.vocab_size if is_last else 0.0
+    codec_f = codecs.codec_flops_per_token(
+        cfg, comp, sender=learned and not is_last,
+        receiver=learned and not is_first)
+    return layer_f + head_f + codec_f
+
+
 def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
                          compress: Optional[str] = None,
                          trace_hook: Optional[Callable] = None
@@ -86,79 +228,12 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
     learned = comp in codecs.LEARNED and n_stages > 1
     programs = []
     for s in range(n_stages):
-        kinds, shared = _stage_slice(cfg, s, n_stages)
-        runs = model_lib.segments(kinds)
-        if shared:
-            runs = [(kinds[0], 1)]          # single shared group
-        reps = len(kinds) if shared else 1
-
-        specs: Tree = {"blocks": [
-            model_lib.stack_specs(REGISTRY[k][0](cfg), n) for k, n in runs]}
-        if s == 0:
-            specs["embed"] = P.ParamSpec(
-                (cfg.vocab_size, cfg.d_model), cfg.param_jdtype, "embed",
-                ("vocab", "embed"))
-        if s == n_stages - 1:
-            specs["final_norm"] = L.norm_specs(cfg)
-            if not cfg.tie_embeddings or s != 0:
-                specs["head"] = P.ParamSpec(
-                    (cfg.d_model, cfg.vocab_size), cfg.param_jdtype,
-                    "normal", ("embed", "vocab"))
-        if learned:
-            # receiving side (w_d) for s > 0, sending side (w_c) for
-            # s < S-1; maxout's compress is param-free so its stage-0
-            # "boundary" tree is empty and omitted
-            bnd: Tree = {}
-            if s > 0:
-                bnd.update(codecs.receiver_specs(cfg, comp))
-            if s < n_stages - 1:
-                bnd.update(codecs.sender_specs(cfg, comp))
-            if bnd:
-                specs["boundary"] = bnd
-
-        def run_blocks(params, x, _runs=runs, _reps=reps):
-            positions = jnp.arange(x.shape[1])
-            for (kind, _), seg in zip(_runs, params["blocks"]):
-                apply_fn = REGISTRY[kind][1]
-
-                def body(x, p_l, _a=apply_fn, _r=_reps):
-                    for _ in range(_r):
-                        x, _aux = _a(cfg, p_l, x, positions)
-                    return x, None
-                x, _ = jax.lax.scan(body, x, seg)
-            return x
-
+        specs = _stage_specs(cfg, s, n_stages, comp, learned)
+        stage_fwd = _make_stage_fwd(cfg, s, n_stages, comp, learned)
         is_first, is_last = s == 0, s == n_stages - 1
 
-        def stage_fwd(params, inp, _rb=run_blocks, _first=is_first,
-                      _last=is_last):
-            if _first:
-                tokens = inp
-                x = params["embed"][tokens].astype(cfg.compute_jdtype)
-                if cfg.scale_embed:
-                    x = x * (cfg.d_model ** 0.5)
-            else:
-                x = inp.astype(cfg.compute_jdtype)
-                if learned:          # wire tensor arrives c-dim: restore
-                    x = codecs.decompress(cfg, comp,
-                                          params.get("boundary"), x)
-            x = _rb(params, x)
-            if learned and not _last:    # emit the c-dim wire tensor
-                x = codecs.compress(cfg, comp, params.get("boundary"), x)
-            return x
-
         def stage_loss(params, inp, labels, _fwd=stage_fwd):
-            x = _fwd(params, inp)
-            x = L.apply_norm(cfg, params["final_norm"], x)
-            w = (params["embed"].T if cfg.tie_embeddings and "head" not in
-                 params else params["head"])
-            logits = x @ w.astype(x.dtype)
-            # token-sum CE so microbatch gradients add exactly (App. E)
-            logits = logits.astype(jnp.float32)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, labels[..., None],
-                                       axis=-1)[..., 0]
-            return jnp.sum(lse - gold)
+            return _head_loss(cfg, params, _fwd(params, inp), labels)
 
         if is_last:
             def fwd(params, inp, labels, _sl=stage_loss):
@@ -190,13 +265,7 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
         fwd_j = _traced(fwd, trace_hook, s, "fwd")
         bwd_j = _traced(bwd, trace_hook, s, "bwd")
 
-        ctx = F._ctx_for(cfg, seq_len, causal_avg=True)
-        layer_f = sum(F.per_token_layer_flops(cfg, k, ctx) for k in kinds)
-        head_f = 2 * cfg.d_model * cfg.vocab_size if is_last else 0.0
-        codec_f = codecs.codec_flops_per_token(
-            cfg, comp, sender=learned and not is_last,
-            receiver=learned and not is_first)
-        fwd_f = layer_f + head_f + codec_f
+        fwd_f = _stage_fwd_flops(cfg, s, n_stages, seq_len, comp, learned)
         programs.append(StageProgram(
             stage=s, n_stages=n_stages, specs=specs, fwd=fwd_j, bwd=bwd_j,
             fwd_flops_per_token=fwd_f,
@@ -204,6 +273,131 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
             fwd_fn=fwd, bwd_fn=bwd,
         ))
     return programs
+
+
+# ------------------------------------------------------------- span fusion
+def _span_fingerprint(cfg: ArchConfig, s: int, n_stages: int, comp: str,
+                      learned: bool, specs_s: Tree):
+    """Two covered stages may share one scan slot iff this matches: same
+    layer runs, same edge role, and bit-identical param-tree geometry."""
+    _, runs, reps = _stage_runs(cfg, s, n_stages)
+    leaves, treedef = jax.tree.flatten(specs_s, is_leaf=P.is_spec)
+    return (tuple(runs), reps, s == 0, s == n_stages - 1,
+            treedef, tuple(leaves))
+
+
+def _scan_groups(fingerprints: list) -> list[tuple[int, int]]:
+    """Maximal runs of consecutive equal fingerprints, as (start, count)
+    over span-local indices."""
+    groups, i = [], 0
+    while i < len(fingerprints):
+        j = i + 1
+        while j < len(fingerprints) and fingerprints[j] == fingerprints[i]:
+            j += 1
+        groups.append((i, j - i))
+        i = j
+    return groups
+
+
+def build_span_program(cfg: ArchConfig, n_stages: int, seq_len: int,
+                       span: tuple[int, int],
+                       compress: Optional[str] = None,
+                       trace_hook: Optional[Callable] = None
+                       ) -> SpanProgram:
+    """Fuse stages ``[lo, hi)`` into one jitted fwd/bwd.
+
+    The single-jit span step is what lets a well-provisioned peer hold
+    *more of the model* (the paper's square-cube rebalancing; Varuna's
+    stage fusion): intra-span boundaries stay on-device — under a learned
+    codec the sending stage's in-program compress chains into the
+    receiving stage's decompress, reproducing the single-stage math
+    exactly, with zero host bytes for the fused boundary.  Runs of
+    structurally identical covered stages are stacked along a leading
+    stage dim with :func:`repro.dist.pipeline.restack` (constrained to
+    ``pod`` when a mesh is ambient — the same sharded stacking the GSPMD
+    tick uses, so the XLA-0.4.x concat workaround is load-bearing here
+    too) and executed as a ``lax.scan`` over stages.
+    """
+    lo, hi = span
+    if not (0 <= lo < hi <= n_stages):
+        raise ValueError(f"span [{lo}, {hi}) outside [0, {n_stages})")
+    assert cfg.n_layers % n_stages == 0
+    assert cfg.encoder_layers == 0, "enc-dec archs use pod-DP (DESIGN §5)"
+    comp = codecs.resolve_mode(cfg, compress)
+    learned = comp in codecs.LEARNED and n_stages > 1
+    covers_last = hi == n_stages
+
+    specs: dict[int, Tree] = {}
+    fwds: dict[int, Callable] = {}
+    fprints = []
+    fwd_f = 0.0
+    for s in range(lo, hi):
+        specs[s] = _stage_specs(cfg, s, n_stages, comp, learned)
+        fwds[s] = _make_stage_fwd(cfg, s, n_stages, comp, learned)
+        fprints.append(_span_fingerprint(cfg, s, n_stages, comp, learned,
+                                         specs[s]))
+        fwd_f += _stage_fwd_flops(cfg, s, n_stages, seq_len, comp, learned)
+    groups = _scan_groups(fprints)
+
+    def span_fwd(params_by_stage, inp):
+        """(tuple ordered lo..hi-1, inbound wire) -> hidden (covers_last)
+        or outbound wire tensor."""
+        x = inp
+        for start, count in groups:
+            f = fwds[lo + start]
+            if count >= 2:
+                members = [params_by_stage[i]
+                           for i in range(start, start + count)]
+                stacked = jax.tree.map(
+                    lambda *xs: restack(list(xs)), *members)
+                stacked = jax.tree.map(
+                    lambda a: constrain(a, "pod", *([None] * (a.ndim - 1))),
+                    stacked)
+
+                def body(x, p_s, _f=f):
+                    return _f(p_s, x), None
+                x, _ = jax.lax.scan(body, x, stacked)
+            else:
+                x = f(params_by_stage[start], x)
+        return x
+
+    if covers_last:
+        def span_loss(ps, inp, labels, _sf=span_fwd):
+            return _head_loss(cfg, ps[-1], _sf(ps, inp), labels)
+
+        def fwd(ps, inp, labels, _sl=span_loss):
+            return _sl(ps, inp, labels)
+
+        if lo == 0:
+            def bwd(ps, inp, labels, _sl=span_loss):
+                loss, gp = jax.value_and_grad(_sl)(ps, inp, labels)
+                return loss, None, gp
+        else:
+            def bwd(ps, inp, labels, _sl=span_loss):
+                loss, (gp, gx) = jax.value_and_grad(_sl, argnums=(0, 1))(
+                    ps, inp, labels)
+                return loss, gx, gp
+    else:
+        def fwd(ps, inp, _sf=span_fwd):
+            return _sf(ps, inp)
+
+        if lo == 0:
+            def bwd(ps, inp, dy, _sf=span_fwd):
+                y, pullback = jax.vjp(lambda p: _sf(p, inp), ps)
+                (gp,) = pullback(dy.astype(y.dtype))
+                return None, gp
+        else:
+            def bwd(ps, inp, dy, _sf=span_fwd):
+                y, pullback = jax.vjp(_sf, ps, inp)
+                gp, gx = pullback(dy.astype(y.dtype))
+                return gx, gp
+
+    return SpanProgram(
+        span=(lo, hi), n_stages=n_stages, specs=specs,
+        fwd=_traced(fwd, trace_hook, (lo, hi), "fwd"),
+        bwd=_traced(bwd, trace_hook, (lo, hi), "bwd"),
+        fwd_flops_per_token=fwd_f, bwd_flops_per_token=3.0 * fwd_f,
+        fwd_fn=fwd, bwd_fn=bwd)
 
 
 def init_stage_params(programs: list[StageProgram], key: jax.Array

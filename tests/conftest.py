@@ -63,17 +63,18 @@ def tiny_dense_config(**kw):
 
 def reference_losses(cfg, programs, opt, seed, steps, seq, mb, gb,
                      data_seed=17):
-    """Fault-free sequential 2-stage reference trajectory (same data
-    order, same params init) — the oracle every churn-/runtime-
-    equivalence test compares a SwarmRunner against.  One copy: the
-    accumulation and token-weighted averaging conventions here must
-    stay in lockstep with ``SwarmRunner._all_reduce_and_step``."""
+    """Fault-free sequential single-stage-per-peer reference trajectory
+    (same data order, same params init) — the oracle every churn-/
+    runtime-/span-equivalence test compares a SwarmRunner against.  One
+    copy: the accumulation and token-weighted averaging conventions here
+    must stay in lockstep with ``SwarmRunner._all_reduce_and_step``."""
     import jax
     import jax.numpy as jnp
     from repro.data.synthetic import SyntheticLM
     from repro.runtime import init_stage_params
 
-    assert len(programs) == 2
+    S = len(programs)
+    assert S >= 2
     params = init_stage_params(programs, jax.random.PRNGKey(seed))
     opt_states = [opt.init(p) for p in params]
     ds = SyntheticLM(cfg.vocab_size, seq, mb, seed=data_seed)
@@ -84,15 +85,21 @@ def reference_losses(cfg, programs, opt, seed, steps, seq, mb, gb,
         for _ in range(gb // mb):
             b = ds.batch(idx)
             idx += 1
-            x = programs[0].fwd(params[0], b["tokens"])
-            loss, gx, gp1 = programs[1].bwd(params[1], x, b["labels"])
-            _, gp0 = programs[0].bwd(params[0], b["tokens"], gx)
-            grads[0] = jax.tree.map(jnp.add, grads[0], gp0)
-            grads[1] = jax.tree.map(jnp.add, grads[1], gp1)
+            xs = [b["tokens"]]              # per-stage boundary inputs
+            for s in range(S - 1):
+                xs.append(programs[s].fwd(params[s], xs[-1]))
+            loss, gx, gp = programs[S - 1].bwd(params[S - 1], xs[-1],
+                                               b["labels"])
+            grads[S - 1] = jax.tree.map(jnp.add, grads[S - 1], gp)
+            for s in range(S - 2, 0, -1):
+                gx, gp = programs[s].bwd(params[s], xs[s], gx)
+                grads[s] = jax.tree.map(jnp.add, grads[s], gp)
+            _, gp = programs[0].bwd(params[0], xs[0], gx)
+            grads[0] = jax.tree.map(jnp.add, grads[0], gp)
             loss_sum += float(loss)
             tok += mb * seq
         losses.append(loss_sum / tok)
-        for s in range(2):
+        for s in range(S):
             gm = jax.tree.map(lambda g: g / tok, grads[s])
             upd, opt_states[s] = opt.update(gm, opt_states[s], params[s])
             params[s] = jax.tree.map(lambda p, u: p + u.astype(p.dtype),

@@ -74,6 +74,112 @@ def test_ledger_rejects_stale_round_indices():
     assert led.record(0, 2, "a")
 
 
+# ------------------------------------------------------- span peers
+def test_ledger_span_peer_holds_one_row_per_covered_stage():
+    """A span peer admits each covered (stage, microbatch) pair exactly
+    once — and a re-issued attempt after the span peer's death folds
+    ONLY the stages whose grads died with it, skipping survivors."""
+    led = MicrobatchLedger(3)
+    led.open_round([0])
+    assert led.next_index() == (0, 1)
+    # stage 0 held by a single-stage survivor; the span peer covers
+    # [1, 3) and records one row per covered stage
+    assert led.record(0, 0, "single")
+    assert led.record(1, 0, "span") and led.record(2, 0, "span")
+    assert not led.record(1, 0, "span")     # exactly once per pair
+    assert not led.record(2, 0, "other")
+    led.settle(0)
+    assert led.complete()
+    # the span peer dies: exactly ITS rows release (both covered stages)
+    assert sorted(led.release_all("span")) == [(1, 0), (2, 0)]
+    assert led.next_index() == (0, 2)       # re-issued, attempt 2
+    # the re-issue skips the surviving stage-0 gradient...
+    assert not led.record(0, 0, "other")
+    # ...and recomputes exactly the span's lost stages
+    assert led.record(1, 0, "other") and led.record(2, 0, "other")
+    led.settle(0)
+    assert led.complete()
+
+
+def test_swarm_accumulate_spans_all_covered_stages_exactly_once():
+    """SwarmRunner.accumulate with a span peer: one ledger row + one
+    fold per covered stage per microbatch, refused on re-delivery, and
+    partial-fold when another peer already holds one covered stage."""
+    cfg = tiny_dense_config()
+    scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=64,
+                       global_batch=4, n_trainers=0, rebalance_period=0.0,
+                       compress=False, max_steps=1)
+    r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
+                    record_accumulation=True)
+    span_peer = r.add_peer(range(0, 2))      # timing-mode span peer
+    single = r.add_peer(1)
+    from repro.core.trainer import Microbatch
+    mb = Microbatch(index=r.ledger.round_indices[0], size=1, n_tokens=64)
+    assert r.accumulate(span_peer, None, mb, loss=1.0)
+    assert r.ledger.acc[0][mb.index] == span_peer.id
+    assert r.ledger.acc[1][mb.index] == span_peer.id
+    # per-stage bookkeeping on the span state; loss lands on the LAST
+    # stage only (the swarm's loss metric reads stage S-1)
+    assert span_peer.state.stage_view(0).token_count == 64
+    assert span_peer.state.stage_view(1).token_count == 64
+    assert span_peer.state.stage_view(0).loss_sum == 0.0
+    assert span_peer.state.stage_view(1).loss_sum == 1.0
+    # re-delivery folds nothing anywhere
+    assert not r.accumulate(span_peer, None, mb, loss=1.0)
+    assert span_peer.state.stage_view(1).token_count == 64
+    # a second microbatch partially held elsewhere: the span peer folds
+    # only its missing stage
+    mb2 = Microbatch(index=r.ledger.round_indices[1], size=1, n_tokens=64)
+    assert r.accumulate(single, None, mb2, loss=None, stage=1)
+    assert r.accumulate(span_peer, None, mb2, loss=2.0)
+    assert r.ledger.acc[1][mb2.index] == single.id      # survivor kept
+    assert r.ledger.acc[0][mb2.index] == span_peer.id
+    assert span_peer.state.stage_view(0).token_count == 128
+    assert span_peer.state.stage_view(1).token_count == 64
+    assert span_peer.state.stage_view(1).loss_sum == 1.0  # loss skipped
+
+
+def test_span_peer_kill_reissues_only_lost_stages_under_churn():
+    """Runner-level: kill a span peer mid-round; every re-issued
+    accumulation (attempt > 1) lands on a previously-released (stage,
+    index) pair — stages whose grads survived on other peers are never
+    folded twice (replayed from the audit trail)."""
+    cfg = tiny_dense_config()
+    scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=512,
+                       global_batch=8, n_trainers=4, rebalance_period=0.0,
+                       compress=False, max_steps=6)
+    r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=3,
+                    record_accumulation=True)
+    r.build(peers_per_stage=2)
+    span_peer = r.add_peer(range(0, 2))
+    from repro.core.sim import Sleep as _Sleep
+
+    def killer(rr, victim):
+        # strike only while the victim HOLDS gradients of the open round
+        # (a kill between rounds releases nothing and tests nothing)
+        while not rr.stopped and victim.alive:
+            if not rr._dispatch_paused and any(
+                    victim.id in d.values() for d in rr.ledger.acc):
+                rr._fail_peer(victim)
+                return
+            yield _Sleep(0.01)
+
+    r.sim.spawn(killer(r, span_peer))
+    r.run(until=60.0)
+    assert r.step > 0 and r.metrics["failures"] == 1
+    released = set()
+    for kind, step, stage, idx, attempt, pid in r.ledger_log:
+        key = (step, stage, idx)
+        if kind == "rel":
+            released.add(key)
+        elif kind == "acc" and attempt > 1:
+            # a recompute may only land where a gradient was lost
+            assert key in released, (key, pid)
+    assert any(pid == span_peer.id and kind == "rel"
+               for kind, *_x, pid in r.ledger_log)
+    _assert_exactly_once(r, 2, 8)
+
+
 # ------------------------------------------------- churn equivalence
 @pytest.fixture(scope="module")
 def churn_setup():

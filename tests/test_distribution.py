@@ -161,6 +161,77 @@ def test_pipeline_mixed_kind_equals_reference():
     assert "MIXED_EQUIV_OK" in r.stdout, r.stdout + r.stderr
 
 
+_SPAN_MIXED_EQUIV = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.config import ArchConfig, SSMConfig
+    from repro.runtime.stage_model import (build_span_program,
+                                           build_stage_programs,
+                                           init_stage_params)
+    from repro.data import make_batch
+
+    # mixed-kind periodic stack, 4 stages of (mlstm, slstm): the span
+    # [1, 3) covers TWO structurally identical interior stages, so the
+    # span builder stacks their param trees with restack and scans over
+    # the stage dim — the exact sharded-concat pattern the XLA 0.4.x
+    # workaround guards (stacked leaves constrained over "pod")
+    cfg = ArchConfig(name="tiny-x", family="ssm", n_layers=8, d_model=64,
+                     n_heads=4, n_kv_heads=4, d_ff=0, vocab_size=256,
+                     head_dim=16, rope="none", act="gelu", norm="layernorm",
+                     block_pattern=("mlstm", "slstm") * 4,
+                     ssm=SSMConfig(state_dim=8, chunk=16),
+                     compute_dtype="float32", param_dtype="float32",
+                     boundary_compression="none")
+    SEQ = 32
+    progs = build_stage_programs(cfg, 4, SEQ)
+    params = init_stage_params(progs, jax.random.PRNGKey(0))
+    span = build_span_program(cfg, 4, SEQ, (1, 3))
+    batch = make_batch(cfg.vocab_size, SEQ, 4)
+
+    x1 = progs[0].fwd(params[0], batch["tokens"])
+    # single-device reference: the chained per-stage programs
+    x2 = progs[1].fwd(params[1], x1)
+    x3_ref = progs[2].fwd(params[2], x2)
+    loss_ref, gx3, gp3 = progs[3].bwd(params[3], x3_ref, batch["labels"])
+    gx2_ref, gp2 = progs[2].bwd(params[2], x2, gx3)
+    gx1_ref, gp1 = progs[1].bwd(params[1], x1, gx2_ref)
+
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    with mesh:
+        x3 = span.fwd(tuple(params[1:3]), x1)
+        gx1, gp = span.bwd(tuple(params[1:3]), x1, gx3)
+    # the 0.4.x miscompile corrupts stage s > 0 of the stack at ~3e-2;
+    # legitimate whole-graph fusion noise sits at f32-ulp scale
+    np.testing.assert_allclose(np.asarray(x3), np.asarray(x3_ref),
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx1_ref),
+                               atol=1e-4)
+    for a, b in zip(jax.tree.leaves((gp1, gp2)), jax.tree.leaves(gp)):
+        scale = float(jnp.max(jnp.abs(a))) + 1e-9
+        np.testing.assert_allclose(np.asarray(a) / scale,
+                                   np.asarray(b) / scale, atol=1e-3)
+    print("SPAN_MIXED_EQUIV_OK")
+""")
+
+
+@pytest.mark.slow
+def test_span_program_mixed_kind_equals_reference():
+    """The span builder's restack-and-scan path (structurally identical
+    interior stages stacked over the leading dim, constrained to "pod")
+    must match the chained single-stage programs on a mesh with a real
+    pod axis: guards the XLA SPMD sharded-concatenate miscompile on the
+    span path, the second call site of dist/pipeline.py::restack (see
+    tests/test_pins.py)."""
+    r = subprocess.run([sys.executable, "-c", _SPAN_MIXED_EQUIV],
+                       capture_output=True, text=True,
+                       cwd=os.path.join(os.path.dirname(__file__), ".."),
+                       timeout=600)
+    assert "SPAN_MIXED_EQUIV_OK" in r.stdout, r.stdout + r.stderr
+
+
 _INT8_PIPELINE = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

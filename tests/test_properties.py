@@ -9,6 +9,7 @@ from repro.compression.quant8 import blockwise_quantize, blockwise_dequantize
 from repro.models import rope as rope_lib
 from repro.models import layers as L
 from repro.core.faults import synth_preemptible_trace, active_counts
+from repro.core.rebalance import optimal_assignment, pipeline_throughput
 
 
 # ------------------------------------------------------------------ quant
@@ -84,6 +85,61 @@ def test_trace_deterministic():
     a = synth_preemptible_trace(seed=5, horizon_s=1800.0)
     b = synth_preemptible_trace(seed=5, horizon_s=1800.0)
     assert [(e.time, e.delta) for e in a] == [(e.time, e.delta) for e in b]
+
+
+# ------------------------------------------------- span assignment
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 8), st.integers(1, 6),
+       st.lists(st.floats(0.1, 8.0), min_size=8, max_size=8),
+       st.lists(st.floats(0.2, 4.0), min_size=6, max_size=6),
+       st.sampled_from([0.0, 0.25, 1.0]))
+def test_span_assignment_covers_and_never_loses_throughput(
+        n_peers, n_stages, speeds8, costs6, boundary_cost):
+    """For random (n_peers, n_stages, speeds, costs), span-enabled
+    optimal_assignment always yields (1) full stage coverage, (2) one
+    valid non-overlapping contiguous span per peer, and (3)
+    pipeline_throughput >= the span-free (width-1 greedy) assignment's
+    — the square-cube guarantee: fusing stages may only help."""
+    speeds = speeds8[:n_peers]
+    costs = costs6[:n_stages]
+    spans = optimal_assignment(n_peers, n_stages, costs, speeds=speeds,
+                               spans=True, boundary_cost=boundary_cost)
+    assert len(spans) == n_peers
+    covered = set()
+    for lo, hi in spans:
+        # a peer's assignment is ONE contiguous [lo, hi): trivially free
+        # of overlapping spans on that peer, and must be well-formed
+        assert 0 <= lo < hi <= n_stages
+        covered |= set(range(lo, hi))
+    assert covered == set(range(n_stages))
+    thr = pipeline_throughput(spans, speeds, stage_costs=costs,
+                              boundary_cost=boundary_cost)
+    assert thr > 0.0
+    if n_peers >= n_stages:          # span-free placement exists at all
+        free = optimal_assignment(n_peers, n_stages, costs, speeds=speeds,
+                                  spans=True, boundary_cost=boundary_cost,
+                                  max_span=1)
+        assert all(hi - lo == 1 for lo, hi in free)
+        thr_free = pipeline_throughput(free, speeds, stage_costs=costs,
+                                       boundary_cost=boundary_cost)
+        assert thr >= thr_free - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 6), st.sampled_from([0.5, 1.0, 2.0]))
+def test_single_peer_span_serves_whole_pipeline(n_stages, boundary_cost):
+    """One peer can only cover the pipeline as the full span [0, S) —
+    and with a boundary price, fusing beats the (impossible) alternative
+    of paying 2 host edges per stage."""
+    [span] = optimal_assignment(1, n_stages, spans=True,
+                                boundary_cost=boundary_cost)
+    assert tuple(span) == (0, n_stages)
+    # count-form throughput with boundary pricing: width-1 stages pay
+    # their host edges, so the fused span's rate is strictly higher
+    fused = pipeline_throughput([(0, n_stages)], 1.0,
+                                stage_costs=[1.0] * n_stages,
+                                boundary_cost=boundary_cost)
+    assert fused == 1.0 / n_stages   # interior boundaries cost nothing
 
 
 # ----------------------------------------------------- attention masks

@@ -3,8 +3,9 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dht import DHT
-from repro.core.rebalance import (plan_migration, optimal_assignment,
-                                  pipeline_throughput)
+from repro.core.rebalance import (plan_migration, plan_span_change,
+                                  optimal_assignment, pipeline_throughput,
+                                  spans_route)
 
 
 class FakeClock:
@@ -59,6 +60,105 @@ def test_optimal_assignment_invariants(n_peers, n_stages):
 def test_throughput_weakest_link():
     assert pipeline_throughput([4, 1, 4]) == 1.0
     assert pipeline_throughput([2, 2, 2]) == 2.0
+
+
+# ------------------------------------------------------------- spans
+def _span_dht(loads_per_stage, peer_queues):
+    """DHT where stage s's load records come from ``peer_queues`` (pid ->
+    {stage: queue}); ``loads_per_stage`` only sanity-checks the sums."""
+    dht = DHT(FakeClock())
+    for pid, per_stage in peer_queues.items():
+        for s, q in per_stage.items():
+            dht.store(dht.load_key(s), pid, q, ttl=100)
+    return dht
+
+
+def test_span_change_splits_overloaded_span_onto_bottleneck():
+    """A backlogged span peer covering the max-load stage shrinks onto
+    that stage — provided every stage it drops keeps another cover."""
+    spans = {"wide": (0, 2), "s0": (0, 1), "s1": (1, 2)}
+    dht = _span_dht(None, {"wide": {0: 5.0, 1: 5.0},
+                           "s0": {0: 0.1}, "s1": {1: 9.0}})
+    ch = plan_span_change(dht, 2, spans)
+    assert ch is not None
+    assert ch.peer == "wide" and ch.new_span == (1, 2)
+
+
+def test_span_change_never_strands_a_dropped_stage():
+    """Same bottleneck, but nobody else covers stage 0: the wide peer
+    may NOT shrink away from it."""
+    spans = {"wide": (0, 2), "s1": (1, 2)}
+    dht = _span_dht(None, {"wide": {0: 5.0, 1: 5.0}, "s1": {1: 9.0}})
+    assert plan_span_change(dht, 2, spans) is None
+
+
+def test_span_change_merges_into_well_covered_neighbor_when_balanced():
+    """Balanced loads: the least-loaded peer absorbs an adjacent stage
+    covered by >= 2 peers, deleting one host boundary for its traffic."""
+    spans = {"a": (0, 1), "b": (1, 2), "c": (1, 2)}
+    dht = _span_dht(None, {"a": {0: 1.0}, "b": {1: 0.5}, "c": {1: 0.5}})
+    ch = plan_span_change(dht, 2, spans)
+    assert ch is not None
+    assert ch.peer == "a" and ch.new_span == (0, 2)
+
+
+def test_span_change_no_merge_into_singly_covered_stage():
+    spans = {"a": (0, 1), "b": (1, 2)}
+    dht = _span_dht(None, {"a": {0: 1.0}, "b": {1: 1.0}})
+    assert plan_span_change(dht, 2, spans) is None
+
+
+def test_span_assignment_max_span_cap_raises_when_uncoverable():
+    """An explicit width cap that cannot cover the pipe must raise the
+    informative error, not crash on an empty candidate list."""
+    with pytest.raises(ValueError, match="max_span"):
+        optimal_assignment(2, 5, spans=True, max_span=2)
+    with pytest.raises(ValueError, match="max_span"):
+        optimal_assignment(2, 3, spans=True, max_span=1)
+    # coverable caps still work
+    spans = optimal_assignment(3, 5, spans=True, max_span=2)
+    assert {s for lo, hi in spans for s in range(lo, hi)} == set(range(5))
+    assert all(hi - lo <= 2 for lo, hi in spans)
+
+
+def test_spans_route_needs_a_start_at_every_hop_boundary():
+    """Coverage is weaker than routability: a hop enters a span only at
+    its start, so the layout must chain 0 -> S through span edges."""
+    assert spans_route(2, [(0, 2), (1, 2)])
+    assert spans_route(3, [(0, 1), (1, 3)])
+    assert spans_route(3, [(0, 2), (0, 1), (1, 3)])
+    # covers every stage of a 3-stage pipe, but nothing starts at 2
+    assert not spans_route(3, [(0, 2), (1, 2), (1, 3)])
+    assert not spans_route(2, [(1, 2)])          # nothing starts at 0
+    assert not spans_route(3, [(0, 2), (1, 3)])  # classic misalignment
+
+
+def test_span_change_never_breaks_routability():
+    """The exact trap sequence: {a:(0,2), b:(1,2), c:(2,3)} is balanced
+    and stage 1 is double-covered, but growing c down to (1,3) would
+    leave no span starting at boundary 2 — every microbatch would stall.
+    The planner must skip that grow (and propose only routable moves)."""
+    spans = {"a": (0, 2), "b": (1, 2), "c": (2, 3)}
+    dht = _span_dht(None, {"a": {0: 1.0, 1: 1.0}, "b": {1: 1.0},
+                           "c": {2: 2.0}})
+    ch = plan_span_change(dht, 3, spans)
+    if ch is not None:
+        layout = [sp for pid, sp in spans.items() if pid != ch.peer]
+        layout.append(ch.new_span)
+        assert spans_route(3, layout), ch
+        assert ch != ("c", (2, 3), (1, 3))
+
+
+def test_span_change_split_tolerates_queue_jitter():
+    """Sub-threshold load differences (announce jitter, uneven peer
+    counts) must read as balanced — merges still fire — while a real
+    bottleneck still splits."""
+    # tiny asymmetry only: stays in the merge branch
+    spans = {"a": (0, 1), "b": (1, 2), "c": (1, 2)}
+    dht = _span_dht(None, {"a": {0: 0.003}, "b": {1: 0.001},
+                           "c": {1: 0.001}})
+    ch = plan_span_change(dht, 2, spans)
+    assert ch is not None and ch.peer == "a" and ch.new_span == (0, 2)
 
 
 def test_repeated_migration_converges_to_balance():
