@@ -41,7 +41,7 @@ PAPER_TABLE7 = {
 def _train(mode: str, steps: int = 20):
     scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=64,
                        global_batch=16, n_trainers=4, rebalance_period=0.0,
-                       compress=mode, max_steps=steps)
+                       codec=mode, max_steps=steps)
     r = SwarmRunner(CFG, scfg, adamw(lr=3e-3, grad_clip=0.0), numeric=True,
                     seed=0)
     r.build(peers_per_stage=1)

@@ -26,7 +26,7 @@ TARGET_SAMPLES = 4096 * 4000     # samples to reach the target loss
 def _fleet_throughput(n, profile, preemptible):
     scfg = SwarmConfig(n_stages=4, microbatch_size=8, seq_len=512,
                        global_batch=4096, n_trainers=8,
-                       rebalance_period=300.0, compress=True)
+                       rebalance_period=300.0, codec="int8")
     r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0,
                     profile_fn=lambda i: profile)
     r.build(peers_per_stage=n // 4)

@@ -34,7 +34,7 @@ def _run(T: float, trace, n0: int, n_stages: int = 4, horizon=HORIZON):
     # loop) are the bottleneck — the regime where rebalancing matters
     scfg = SwarmConfig(n_stages=n_stages, microbatch_size=1, seq_len=512,
                        global_batch=2048, n_trainers=3 * n0,
-                       rebalance_period=T, compress=True)
+                       rebalance_period=T, codec="int8")
     r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0,
                     profile_fn=lambda i: T4)
     r.build(peers_per_stage=n0 // n_stages)

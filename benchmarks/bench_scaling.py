@@ -15,10 +15,10 @@ MODEL = ArchConfig(name="swarm1b-sim", family="dense", n_layers=3,
                    vocab_size=50257, tie_embeddings=True)
 
 
-def _throughput(n_peers, profile_fn, compress=True, horizon=900.0):
+def _throughput(n_peers, profile_fn, codec="int8", horizon=900.0):
     scfg = SwarmConfig(n_stages=3, microbatch_size=1, seq_len=2048,
                        global_batch=512, n_trainers=3 * n_peers,
-                       rebalance_period=300.0, compress=compress)
+                       rebalance_period=300.0, codec=codec)
     r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0,
                     profile_fn=profile_fn)
     r.build(peers_per_stage=n_peers // 3)

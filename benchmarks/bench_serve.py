@@ -1,0 +1,133 @@
+"""Serving benchmark: tokens/s + latency percentiles, with and without
+churn, through :class:`repro.serve.ServeRunner`.
+
+Emits machine-readable ``artifacts/BENCH_serve.json`` so the serving
+trajectory (throughput, p50/p99 latency, recovery work) is tracked
+across PRs — CI uploads it as an artifact.
+
+Three headline invariants, asserted here:
+
+* **token-for-token** — the staged swarm's greedy outputs equal the
+  single-process reference (``full_session_program``) in BOTH runs:
+  span hand-offs, continuous batching, and churn recovery are
+  numerically invisible;
+* **exactly-once KV** — killing a decode-span peer mid-generation
+  re-prefills exactly the dead span's stages (the strict
+  :class:`~repro.core.ledger.SessionKVLedger` turns any double-prefill
+  into a hard error, so a green run IS the proof);
+* **no request lost** — every request completes under the churn trace.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.models.config import ArchConfig
+from repro.serve import ServeConfig, ServeRunner
+from repro.serve.runner import reference_generate
+
+CFG = ArchConfig(name="bench-serve-tiny", family="dense", n_layers=4,
+                 d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                 vocab_size=256, head_dim=16, compute_dtype="float32",
+                 param_dtype="float32")
+N_STAGES = 4
+
+
+def _requests(n: int, prompt_len: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, CFG.vocab_size, size=(n, prompt_len),
+                        dtype=np.int64)
+
+
+def _no_churn(prompts, new_tokens: int) -> tuple[dict, np.ndarray]:
+    """Disaggregated pools (2 narrow prefill + 2 wide decode peers)."""
+    scfg = ServeConfig(n_stages=N_STAGES, max_batch=2, max_sessions=2)
+    r = ServeRunner(CFG, scfg, seed=0)
+    layout = r.build_pools(n_prefill=2, n_decode=2)
+    reqs = [r.submit(p, new_tokens) for p in prompts]
+    summary = r.run()
+    summary["layout"] = layout
+    return summary, np.stack([q.tokens for q in reqs]), r.params
+
+
+def _churn(prompts, new_tokens: int, t_kill: float,
+           t_revive: float) -> tuple[dict, np.ndarray]:
+    """4-peer decode-only span swarm; one span peer dies mid-decode and
+    later revives (cold: its KV re-prefills on next touch)."""
+    scfg = ServeConfig(n_stages=N_STAGES, max_batch=2, max_sessions=1)
+    r = ServeRunner(CFG, scfg, seed=0)
+    for name, span in (("d0a", (0, 2)), ("d1a", (2, 4)),
+                       ("d0b", (0, 2)), ("d1b", (2, 4))):
+        r.add_peer(span, pool="decode", name=name)
+    reqs = [r.submit(p, new_tokens) for p in prompts]
+    r.schedule_fail(t_kill, "d1a")
+    r.schedule_revive(t_revive, "d1a")
+    summary = r.run()
+    return summary, np.stack([q.tokens for q in reqs])
+
+
+def run(csv: bool = True, out_path: str = "artifacts/BENCH_serve.json",
+        smoke: bool = False) -> dict:
+    n_req, prompt_len, new_tokens = (4, 8, 6) if smoke else (8, 16, 12)
+    prompts = _requests(n_req, prompt_len)
+
+    t0 = time.perf_counter()
+    plain, got_plain, params = _no_churn(prompts, new_tokens)
+    wall_plain = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    churn, got_churn = _churn(prompts, new_tokens, t_kill=0.045,
+                              t_revive=0.25)
+    wall_churn = time.perf_counter() - t0
+
+    ref = reference_generate(CFG, params, prompts, new_tokens)
+    plain["match_reference"] = bool(np.array_equal(got_plain, ref))
+    churn["match_reference"] = bool(np.array_equal(got_churn, ref))
+
+    assert plain["match_reference"], "disaggregated serve != reference"
+    assert churn["match_reference"], "churn serve != reference"
+    assert plain["failed"] == 0 and churn["failed"] == 0
+    assert churn["reprefills"] >= 1, "churn trace never exercised recovery"
+    assert churn["reprefilled_stages"] == 2 * churn["reprefills"], \
+        "recovery touched stages outside the dead (2, 4) span"
+
+    report = {
+        "bench": "serve",
+        "config": {"model": CFG.name, "stages": N_STAGES,
+                   "requests": n_req, "prompt_len": prompt_len,
+                   "new_tokens": new_tokens, "smoke": smoke},
+        "no_churn": plain,
+        "churn": churn,
+        "wall_s": {"no_churn": wall_plain, "churn": wall_churn},
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    if csv:
+        print("name,us_per_call,derived")
+        print(f"serve_tokens_per_s,,{plain['tokens_per_s']:.1f}")
+        print(f"serve_p99_latency_s,,{plain['p99_latency_s']:.4f}")
+        print(f"serve_churn_tokens_per_s,,{churn['tokens_per_s']:.1f}")
+        print(f"serve_churn_p99_latency_s,,{churn['p99_latency_s']:.4f}")
+        print(f"serve_churn_reprefilled_stages,,"
+              f"{churn['reprefilled_stages']}")
+        print(f"serve_match_reference,,"
+              f"{plain['match_reference'] and churn['match_reference']}")
+        print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes for the CI fast lane")
+    ap.add_argument("--out", default="artifacts/BENCH_serve.json")
+    args = ap.parse_args()
+    run(out_path=args.out, smoke=args.smoke)

@@ -43,14 +43,14 @@ CFG_CODEC = CFG.with_overrides(name="bench-swarm-tiny-codec",
                                bottleneck_dim=16)
 
 
-def _scfg(compress) -> SwarmConfig:
+def _scfg(codec) -> SwarmConfig:
     return SwarmConfig(n_stages=N_STAGES, microbatch_size=2, seq_len=32,
                        global_batch=8, n_trainers=3, rebalance_period=0.0,
-                       compress=compress, max_steps=STEPS)
+                       codec=codec, max_steps=STEPS)
 
 
 def _run_numeric(seed: int) -> tuple[SwarmRunner, float]:
-    r = SwarmRunner(CFG, _scfg(False), adamw(lr=1e-2), numeric=True,
+    r = SwarmRunner(CFG, _scfg("none"), adamw(lr=1e-2), numeric=True,
                     seed=seed)
     r.build(peers_per_stage=PEERS_PER_STAGE)
     t0 = time.perf_counter()

@@ -76,7 +76,7 @@ def _swarm(cfg, micro, latency):
                          500 * MBPS, 0.003 + latency)
     scfg = SwarmConfig(n_stages=4, microbatch_size=micro, seq_len=512,
                        global_batch=10 ** 9, n_trainers=128,
-                       rebalance_period=0.0, compress=False)
+                       rebalance_period=0.0, codec="none")
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
                     profile_fn=lambda i: prof)
     r.build(peers_per_stage=4)

@@ -69,7 +69,7 @@ def main() -> None:
     from benchmarks import (bench_square_cube, bench_throughput,
                             bench_rebalance, bench_scaling,
                             bench_compression, bench_cost, bench_swarm,
-                            roofline)
+                            bench_serve, roofline)
     suites = {
         "square_cube": bench_square_cube.run,     # Fig.3 / Table 1
         "throughput": bench_throughput.run,       # Table 2
@@ -79,6 +79,8 @@ def main() -> None:
         "cost": bench_cost.run,                   # Table 9
         "swarm": bench_swarm.run,                 # runtime layer: compile
                                                   # cache + BENCH_swarm.json
+        "serve": bench_serve.run,                 # serving layer: tokens/s,
+                                                  # p99, churn recovery
     }
     failed = []
     for name, fn in suites.items():

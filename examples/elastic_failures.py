@@ -22,7 +22,7 @@ HORIZON = 3600.0
 def run(rebalance_T: float, trace):
     scfg = SwarmConfig(n_stages=4, microbatch_size=1, seq_len=512,
                        global_batch=1024, n_trainers=72,
-                       rebalance_period=rebalance_T, compress=True)
+                       rebalance_period=rebalance_T, codec="int8")
     r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0)
     r.build(peers_per_stage=6)
     r.apply_trace(trace)

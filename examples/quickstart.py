@@ -23,7 +23,7 @@ def main():
                      compute_dtype="float32", param_dtype="float32")
     scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=64,
                        global_batch=16, n_trainers=3,
-                       rebalance_period=30.0, compress=True, max_steps=10)
+                       rebalance_period=30.0, codec="int8", max_steps=10)
     runner = SwarmRunner(cfg, scfg, adamw(lr=3e-3), numeric=True, seed=0)
     runner.build(peers_per_stage=2)
     # a preemption one virtual second in: SWARM reroutes and keeps going

@@ -1,6 +1,7 @@
-"""Serving demo: batched prefill -> greedy decode with the production
-step functions (prefill emits the decode caches; ring-buffer SWA caches
-keep sliding-window archs O(window)).
+"""Serving demo: batched prefill -> greedy decode through the session
+program API (``repro.serve``).  The prefill allocates its decode caches
+at the full session horizon, so decoding writes in place — no cache
+re-padding between prefill and decode.
 
     PYTHONPATH=src python examples/serve_pipeline.py [--arch yi-6b]
 """
@@ -14,9 +15,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced, ASSIGNED
-from repro.optim import adamw
-from repro.train.steps import (make_prefill_step, make_serve_step,
-                               make_state)
+from repro.models import model as model_lib
+from repro.models import params as P
+from repro.serve import full_session_program
 
 
 def main():
@@ -29,45 +30,30 @@ def main():
     args = ap.parse_args()
 
     cfg = get_reduced(args.arch)          # CPU-sized, same family
+    if cfg.family == "audio":
+        sys.exit("audio serving needs the encoder frontend batch — pick "
+                 "an LM arch (see tests/test_system.py for whisper decode)")
     print(f"serving {args.arch} (reduced config: {cfg.n_layers}L "
           f"d={cfg.d_model})")
-    state = make_state(cfg, adamw(), jax.random.PRNGKey(0))
-    params = state["params"]
+    params = P.init(jax.random.PRNGKey(0), model_lib.lm_specs(cfg))
 
-    key = jax.random.PRNGKey(1)
     prompts = jax.random.randint(
-        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)
-    batch = {"tokens": prompts}
-    if cfg.rope == "mrope":
-        batch["positions"] = jnp.broadcast_to(
-            jnp.arange(args.prompt_len), (3, args.batch, args.prompt_len))
-    if cfg.family == "audio":
-        batch["audio_embed"] = jax.random.normal(
-            key, (args.batch, cfg.encoder_max_len, cfg.d_model),
-            cfg.compute_jdtype)
+        jax.random.PRNGKey(1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)
 
-    # prefill with room for the generated tokens in the cache
-    from repro.train.steps import decode_cache_specs
-    from repro.configs import ShapeSpec
+    # one program per session horizon: caches are born at total_len
     total = args.prompt_len + args.new_tokens
-    prefill = jax.jit(make_prefill_step(cfg))
-    serve = jax.jit(make_serve_step(cfg))
+    prog = full_session_program(cfg, total)
 
     t0 = time.time()
-    tok, caches = prefill(params, batch)
-    # pad caches to the full decode horizon
-    specs = decode_cache_specs(cfg, ShapeSpec("d", total, args.batch,
-                                              "decode"))
-    caches = jax.tree.map(
-        lambda c, s: jnp.zeros(s.shape, s.dtype).at[
-            tuple(slice(0, d) for d in c.shape)].set(c)
-        if c.shape != s.shape else c, caches, specs)
+    tok, kv = prog.prefill(params, prompts)
     t_prefill = time.time() - t0
 
     out = [tok]
     t0 = time.time()
-    for pos in range(args.prompt_len, total - 1):
-        tok, caches = serve(params, caches, tok, jnp.int32(pos))
+    for i in range(args.new_tokens - 1):
+        tok, kv = prog.decode(params, kv, tok,
+                              jnp.int32(args.prompt_len + i))
         out.append(tok)
     t_decode = time.time() - t0
 

@@ -49,7 +49,7 @@ def main():
     # --- SWARM run (2 stages x 2 peers, int8 boundaries, real math)
     scfg = SwarmConfig(n_stages=2, microbatch_size=args.batch // 4,
                        seq_len=args.seq, global_batch=args.batch,
-                       n_trainers=4, rebalance_period=0.0, compress=True,
+                       n_trainers=4, rebalance_period=0.0, codec="int8",
                        max_steps=args.steps)
     t0 = time.time()
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)

@@ -32,10 +32,17 @@ class PeerFailure(Exception):
 
 def _alias_state(dst: StageState, src: StageState) -> None:
     """Zero-copy single-stage state adoption (identical backend +
-    placement: aliasing the immutable device arrays is exact)."""
+    placement: aliasing the immutable device arrays is exact).  Only the
+    training state crosses: the donor's non-core slots (e.g. serving KV,
+    whose per-session holdership the KV ledger tracks) are NOT cloned,
+    and any the adopter held are dropped — same semantics as a
+    snapshot/restore hand-off with default ``slots=()``."""
+    from repro.runtime.base import CORE_SLOTS
     dst.params = jax.tree.map(lambda x: x, src.params)
     dst.opt = jax.tree.map(lambda x: x, src.opt)
     dst.version = src.version
+    for name in [n for n in dst.slots if n not in CORE_SLOTS]:
+        del dst.slots[name]
     dst.grad_acc = (jax.tree.map(jnp.zeros_like, src.params)
                     if src.params is not None else None)
     dst.loss_sum = 0.0

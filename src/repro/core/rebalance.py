@@ -267,6 +267,74 @@ def optimal_assignment(n_peers: int, n_stages: int,
     return max(candidates, key=thr)
 
 
+def serve_assignment(n_prefill: int, n_decode: int, n_stages: int,
+                     stage_costs: Optional[list[float]] = None, *,
+                     prefill_speeds: Optional[Sequence[float]] = None,
+                     decode_speeds: Optional[Sequence[float]] = None,
+                     boundary_cost: float = 0.0
+                     ) -> dict[str, list[tuple[int, int]]]:
+    """Disaggregated serving layout: one span pool per phase.
+
+    Prefill is throughput-bound like the training forward — a host
+    boundary costs one activation transfer amortized over the whole
+    prompt, so narrow spans placed compute-optimal are fine.  Decode
+    moves a single token per hop, so per-hop latency dominates: the
+    decode pool prices each host edge at the whole pipe's compute,
+    pushing the partition toward maximally fused (wide) spans.
+
+    The prefill layout *refines* the decode layout: every decode-span
+    start is also a prefill hop boundary.  The serve runner records the
+    wire tensor entering each hop, and recovery re-prefills a dead decode
+    peer's span from that recorded history — which only exists at
+    boundaries where the prefill chain actually hopped.
+
+    Returns ``{"prefill": [(lo, hi), ...], "decode": [(lo, hi), ...]}``
+    (one span per pool peer; both layouts tile, hence route).  With
+    ``n_prefill == 0`` the prefill pool is empty and prefill runs on the
+    decode chain itself (no disaggregation)."""
+    costs = list(stage_costs or [1.0] * n_stages)
+    dv = list(decode_speeds) if decode_speeds is not None \
+        else [1.0] * n_decode
+    pv = list(prefill_speeds) if prefill_speeds is not None \
+        else [1.0] * n_prefill
+    assert len(dv) == n_decode and len(pv) == n_prefill
+
+    decode = [tuple(sp) for sp in optimal_assignment(
+        n_decode, n_stages, costs, speeds=dv, spans=True,
+        boundary_cost=max(boundary_cost, sum(costs)))]
+    if n_prefill == 0:
+        return {"prefill": [], "decode": decode}
+
+    # decode-aligned chunks: every decode-span edge is a cut point
+    cuts = sorted({0, n_stages} | {lo for lo, _ in decode}
+                  | {hi for _, hi in decode})
+    chunks = list(zip(cuts[:-1], cuts[1:]))
+    if n_prefill < len(chunks):
+        raise ValueError(
+            f"prefill pool of {n_prefill} cannot tile the {len(chunks)} "
+            f"decode-aligned chunks — grow the pool or pass n_prefill=0 "
+            f"to prefill on the decode chain")
+
+    # spread the pool over the chunks by compute cost (counts form),
+    # then refine each chunk into near-equal sub-spans; surplus peers
+    # reinforce their chunk's sub-spans round-robin
+    alloc = optimal_assignment(n_prefill, len(chunks),
+                               [sum(costs[lo:hi]) for lo, hi in chunks])
+    slots: list[tuple[int, int]] = []
+    for (lo, hi), k in zip(chunks, alloc):
+        subs = _contiguous_partition(min(k, hi - lo), costs[lo:hi])
+        subs = [(lo + a, lo + b) for a, b in subs]
+        slots.extend(subs[j % len(subs)] for j in range(k))
+    # fastest prefill peers onto the costliest sub-spans
+    slots.sort(key=lambda sp: -sum(costs[sp[0]:sp[1]]))
+    prefill: list[Optional[tuple[int, int]]] = [None] * n_prefill
+    for rank, i in enumerate(
+            sorted(range(n_prefill), key=lambda i: -pv[i])):
+        prefill[i] = slots[rank]
+    assert spans_route(n_stages, prefill) and spans_route(n_stages, decode)
+    return {"prefill": prefill, "decode": decode}
+
+
 def pipeline_throughput(alloc, peer_speed=1.0,
                         stage_costs: Optional[list[float]] = None,
                         boundary_cost: float = 0.0) -> float:

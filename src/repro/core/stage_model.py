@@ -1,8 +1,15 @@
-"""Back-compat shim: the stage-program machinery moved into the stage
-runtime layer (``repro.runtime.stage_model``), which owns jitting and
-the process-wide compile cache — see ``repro.runtime``.  Import from
-there in new code."""
+"""DEPRECATED back-compat shim: the stage-program machinery lives in the
+stage runtime layer (``repro.runtime.stage_model``), which owns jitting
+and the process-wide compile cache — see ``repro.runtime``.  Importing
+this module warns; it will be removed once nothing references it."""
+import warnings
+
 from repro.runtime.stage_model import (  # noqa: F401
     StageProgram, build_stage_programs, init_stage_params)
+
+warnings.warn(
+    "repro.core.stage_model is deprecated; import StageProgram, "
+    "build_stage_programs and init_stage_params from repro.runtime",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["StageProgram", "build_stage_programs", "init_stage_params"]

@@ -28,6 +28,7 @@ Two modes:
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -67,10 +68,15 @@ class SwarmConfig:
     announce_interval: float = 120.0
     announce_ttl: float = 300.0
     wiring_gamma: float = 0.1            # EMA alpha (paper §4.3)
-    # boundary compression: False -> "none", True -> "int8" (back-compat
-    # booleans), or an explicit mode string incl. the learned codecs
-    # ("none" | "int8" | "bottleneck" | "maxout", paper App. J)
-    compress: bool | str = True
+    # boundary wire codec, canonical: "none" | "int8" | a learned mode
+    # ("bottleneck" | "maxout", paper App. J) | "auto" (defer to
+    # ``cfg.boundary_compression``).  Default "int8" is the historical
+    # ``compress=True``.
+    codec: Optional[str] = None
+    # DEPRECATED spelling of ``codec`` (False -> "none", True -> "int8",
+    # str passthrough); normalized away in ``__post_init__`` so
+    # ``dataclasses.replace`` round-trips never re-warn
+    compress: "bool | str | None" = None
     quant_block: int = 64
     dpu: bool = False
     max_steps: Optional[int] = None
@@ -91,6 +97,25 @@ class SwarmConfig:
     # absorbs an adjacent well-covered stage (saving its host boundary)
     spans: bool = False
 
+    def __post_init__(self):
+        if self.compress is not None:
+            resolved = ("int8" if self.compress is True else
+                        "none" if self.compress is False else self.compress)
+            warnings.warn(
+                f"SwarmConfig(compress=...) is deprecated; use "
+                f"codec={resolved!r}", DeprecationWarning, stacklevel=3)
+            if self.codec is not None and self.codec != resolved:
+                raise ValueError(
+                    f"conflicting codecs: codec={self.codec!r} vs "
+                    f"compress={self.compress!r}")
+            self.codec = resolved
+            self.compress = None
+        if self.codec is None:
+            self.codec = "int8"
+        if self.codec != "auto" and self.codec not in codecs.MODES:
+            raise ValueError(f"unknown codec {self.codec!r}; expected "
+                             f"'auto' or one of {codecs.MODES}")
+
 
 class SwarmRunner:
     def __init__(self, cfg: ArchConfig, scfg: SwarmConfig,
@@ -107,11 +132,8 @@ class SwarmRunner:
         self.sim = Sim()
         self.dht = DHT(lambda: self.sim.now)
         self.n_stages = scfg.n_stages
-        self.compress = scfg.compress
-        if isinstance(scfg.compress, bool):
-            self.compress_mode = "int8" if scfg.compress else "none"
-        else:
-            self.compress_mode = codecs.resolve_mode(cfg, scfg.compress)
+        self.compress_mode = codecs.resolve_mode(
+            cfg, None if scfg.codec == "auto" else scfg.codec)
         self.quant_block = scfg.quant_block
         self.rng = np.random.default_rng(seed)
         self.profile_fn = profile_fn or (lambda i: T4)

@@ -41,19 +41,29 @@ all its peers resumes from the latest completed step instead of step 0
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Optional, Protocol, runtime_checkable
+from typing import Any, Hashable, Iterable, Optional, Protocol, \
+    runtime_checkable
 
 import jax
 import jax.numpy as jnp
 
 Tree = Any
 
+# slot names with executor-protocol semantics of their own: "grads" is
+# the per-stage gradient accumulator (accumulate / export_grads /
+# zero_grads), "opt" the optimizer state (export_state / adopt_step).
+# They travel in the snapshot's TOP-LEVEL fields ("opt"; grads never
+# travel — a download or step never imports gradients), not under
+# "slots", which keeps the single-stage snapshot format bit-compatible
+# with every pre-slot checkpoint and hand-off.
+GRADS_SLOT = "grads"
+OPT_SLOT = "opt"
+CORE_SLOTS = (GRADS_SLOT, OPT_SLOT)
 
-@dataclasses.dataclass
+
 class StageState:
-    """Replicated training state for one pipeline stage — or, for a span
-    backend, the per-stage-keyed bundle of them (``per_stage``).
+    """Replicated executor-owned state for one pipeline stage — or, for
+    a span backend, the per-stage-keyed bundle of them (``per_stage``).
 
     Owned by the executor protocol: schedulers treat it as an opaque
     handle and go through executor methods (``accumulate``, ``snapshot``,
@@ -64,17 +74,75 @@ class StageState:
     states and the stage-``s`` sub-state on span states, so span peers
     keep exact per-stage accounting (the ledger may admit one covered
     stage of a microbatch and skip another).
-    """
-    params: Tree = None
-    opt: Tree = None
-    grad_acc: Tree = None
-    loss_sum: float = 0.0
-    token_count: int = 0
-    version: int = 0
-    # span backends: global stage id -> per-stage StageState; the outer
-    # object then carries no tensors of its own
-    per_stage: Optional[dict[int, "StageState"]] = None
 
+    Besides ``params``, everything an executor owns for a stage lives in
+    named *keyed slots* — ``slots[name]`` is a ``{key: tree}`` dict.
+    Training uses two of them: ``slots["grads"]["acc"]`` (the gradient
+    accumulator) and ``slots["opt"]["state"]`` (optimizer state), still
+    reachable through the ``grad_acc``/``opt`` properties every caller
+    already uses.  Serving adds ``slots["kv"]`` keyed by session id (a
+    decode cache per live session) — the same churn machinery
+    (snapshot/restore, warm joins, per-stage hand-offs) moves any slot,
+    which is what lets KV caches ride peer lifecycle events exactly like
+    grads and opt do.
+    """
+
+    def __init__(self, params: Tree = None, opt: Tree = None,
+                 grad_acc: Tree = None, loss_sum: float = 0.0,
+                 token_count: int = 0, version: int = 0,
+                 per_stage: Optional[dict[int, "StageState"]] = None):
+        self.params = params
+        self.slots: dict[str, dict[Hashable, Tree]] = {}
+        if opt is not None:
+            self.opt = opt
+        if grad_acc is not None:
+            self.grad_acc = grad_acc
+        self.loss_sum = loss_sum
+        self.token_count = token_count
+        self.version = version
+        # span backends: global stage id -> per-stage StageState; the
+        # outer object then carries no tensors of its own
+        self.per_stage = per_stage
+
+    # ------------------------------------------------------------- slots
+    def slot(self, name: str) -> dict[Hashable, Tree]:
+        """The named keyed slot, created empty on first touch."""
+        return self.slots.setdefault(name, {})
+
+    def drop_slot(self, name: str, key: Optional[Hashable] = None) -> None:
+        """Forget one entry (``key``) or the whole slot (``key=None``)."""
+        if key is None:
+            self.slots.pop(name, None)
+            return
+        ent = self.slots.get(name)
+        if ent is not None:
+            ent.pop(key, None)
+            if not ent:
+                del self.slots[name]
+
+    @property
+    def opt(self) -> Tree:
+        return self.slots.get(OPT_SLOT, {}).get("state")
+
+    @opt.setter
+    def opt(self, value: Tree) -> None:
+        if value is None:
+            self.slots.pop(OPT_SLOT, None)
+        else:
+            self.slot(OPT_SLOT)["state"] = value
+
+    @property
+    def grad_acc(self) -> Tree:
+        return self.slots.get(GRADS_SLOT, {}).get("acc")
+
+    @grad_acc.setter
+    def grad_acc(self, value: Tree) -> None:
+        if value is None:
+            self.slots.pop(GRADS_SLOT, None)
+        else:
+            self.slot(GRADS_SLOT)["acc"] = value
+
+    # ------------------------------------------------------------- views
     def stage_view(self, stage: Optional[int] = None) -> "StageState":
         if self.per_stage is None or stage is None:
             return self
@@ -96,7 +164,9 @@ class StageState:
     def reset_progress(self):
         """Fresh accumulator (zeros shaped/placed like ``params``) and
         cleared loss/token counters — the tail of every state install
-        (restore, adopt_step): a download or step never imports grads."""
+        (restore, adopt_step): a download or step never imports grads.
+        Non-core slots (e.g. serving KV) are untouched: adopting an
+        optimizer step must not evict live sessions."""
         self.grad_acc = jax.tree.map(jnp.zeros_like, self.params)
         self.loss_sum = 0.0
         self.token_count = 0
@@ -147,6 +217,14 @@ class StageExecutor(Protocol):
         """How many ways this backend actually splits a ``batch``-sized
         microbatch (the cost model's compute speedup).  1 whenever the
         placement would replicate instead of shard."""
+        ...
+
+    def session_program(self, total_len: int):
+        """The serving :class:`repro.serve.programs.SessionProgram` for
+        this executor's span at horizon ``total_len`` (prompt +
+        generated tokens): fused prefill/decode whose KV caches live in
+        the state's ``"kv"`` keyed slot.  Backends that cannot serve
+        raise ``NotImplementedError``."""
         ...
 
     # ---------------------------------------------------------- execution
@@ -206,26 +284,99 @@ class StageExecutor(Protocol):
         ...
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState,
-                 stage: Optional[int] = None) -> Tree:
+    def snapshot(self, state: StageState, stage: Optional[int] = None,
+                 slots: Iterable[str] = ()) -> Tree:
         """Host-side (numpy) ``{"params", "opt", "version"}`` tree — the
         wire format for peer-to-peer downloads and ``repro.ckpt``.  With
         an explicit ``stage``, span backends emit that covered stage in
         the SAME single-stage format, so span ↔ single hand-offs (and
-        checkpoint cuts) are interchangeable."""
+        checkpoint cuts) are interchangeable.  ``slots`` names the extra
+        keyed slots (e.g. ``"kv"``) to carry under a ``"slots"`` key;
+        the default carries none, so training hand-offs and checkpoint
+        cuts keep the historical format byte-for-byte and serving state
+        never leaks into them."""
         ...
 
     def restore(self, state: StageState, snap: Tree,
-                stage: Optional[int] = None) -> None:
-        """Install a snapshot (device placement is the executor's job)."""
+                stage: Optional[int] = None,
+                slots: Iterable[str] = ()) -> None:
+        """Install a snapshot (device placement is the executor's job).
+        A restore is a FULL state install: non-core slots not named in
+        ``slots`` (or absent from the snapshot) are dropped — restoring
+        a kv-carrying snapshot into a training-only peer sheds the kv
+        slot, and restoring a training snapshot into a serving peer
+        evicts its stale sessions."""
+        ...
+
+    # ------------------------------------------------------ keyed slots
+    def export_slot(self, state: StageState, name: str, key: Hashable,
+                    stage: Optional[int] = None) -> Tree:
+        """One slot entry as a host (numpy) tree — the wire format for
+        per-session hand-offs (e.g. prefill → decode KV transfer)."""
+        ...
+
+    def install_slot(self, state: StageState, name: str, key: Hashable,
+                     value: Tree, stage: Optional[int] = None) -> None:
+        """Place one slot entry onto this backend's devices."""
+        ...
+
+    def drop_slot(self, state: StageState, name: str,
+                  key: Optional[Hashable] = None,
+                  stage: Optional[int] = None) -> None:
+        """Forget one slot entry (or, with ``key=None``, the slot)."""
         ...
 
 
-def host_snapshot(state: StageState) -> Tree:
-    """Default single-stage ``snapshot``: pull params/opt to host numpy."""
-    return {"params": jax.device_get(state.params),
+def host_snapshot(state: StageState, slots: Iterable[str] = ()) -> Tree:
+    """Default single-stage ``snapshot``: pull params/opt to host numpy,
+    plus any requested non-core ``slots`` present on the state."""
+    snap = {"params": jax.device_get(state.params),
             "opt": jax.device_get(state.opt),
             "version": state.version}
+    extra = {name: {k: jax.device_get(v)
+                    for k, v in state.slots[name].items()}
+             for name in slots
+             if name not in CORE_SLOTS and name in state.slots}
+    if extra:
+        snap["slots"] = extra
+    return snap
+
+
+def install_snapshot(state: StageState, snap: Tree,
+                     slots: Iterable[str] = (),
+                     place=None) -> None:
+    """Default single-stage ``restore`` body: install params/opt/version
+    (placed via ``place``, default ``jnp.asarray``), replace the state's
+    non-core slots with the requested ones from the snapshot, and reset
+    training progress.  Executors with their own placement (mesh) pass
+    ``place``; the slot entries always place via ``jnp.asarray`` (KV
+    trees are per-peer, never sharded)."""
+    place = place or (lambda t: jax.tree.map(jnp.asarray, t))
+    state.params = place(snap["params"])
+    state.opt = (place(snap["opt"])
+                 if snap.get("opt") is not None else None)
+    state.version = int(snap.get("version", 0))
+    for name in [n for n in state.slots if n not in CORE_SLOTS]:
+        del state.slots[name]
+    carried = snap.get("slots", {})
+    for name in slots:
+        if name in CORE_SLOTS or name not in carried:
+            continue
+        state.slot(name).update(
+            {k: jax.tree.map(jnp.asarray, v)
+             for k, v in carried[name].items()})
+    state.reset_progress()
+
+
+def slot_export(view: StageState, name: str, key: Hashable) -> Tree:
+    """Default ``export_slot`` body over one stage view."""
+    return jax.device_get(view.slot(name)[key])
+
+
+def slot_install(view: StageState, name: str, key: Hashable,
+                 value: Tree) -> None:
+    """Default ``install_slot`` body over one stage view."""
+    view.slot(name)[key] = jax.tree.map(jnp.asarray, value)
 
 
 # donated-accumulator fold shared by every backend: one jit object, jax

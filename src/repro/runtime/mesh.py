@@ -37,7 +37,8 @@ from repro.dist.sharding import ShardingRules, DEFAULT_RULES, \
     stage_param_shardings
 from repro.models.config import ArchConfig
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
-    single_stage, wire_bwd_codec, wire_fwd_codec
+    install_snapshot, single_stage, slot_export, slot_install, \
+    wire_bwd_codec, wire_fwd_codec
 from repro.runtime.stage_model import _traced, init_stage_params
 from repro.runtime import numeric as numeric_rt
 
@@ -174,6 +175,11 @@ class MeshExecutor:
         n = int(self.mesh.shape.get(self.batch_axis, 1))
         return n if n > 1 and batch % n == 0 else 1
 
+    def session_program(self, total_len: int):
+        raise NotImplementedError(
+            "mesh-backed serving is pending the sharded-decode work "
+            "(ROADMAP) — serve spans on the numeric/pipeline backends")
+
     # ---------------------------------------------------------- execution
     def run_fwd(self, state: StageState, inp: Tree,
                 labels: Optional[jax.Array] = None) -> Tree:
@@ -230,15 +236,34 @@ class MeshExecutor:
         state.reset_progress()
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState,
-                 stage: Optional[int] = None) -> Tree:
+    def snapshot(self, state: StageState, stage: Optional[int] = None,
+                 slots=()) -> Tree:
         single_stage(self, stage)
-        return host_snapshot(state)
+        return host_snapshot(state, slots=slots)
 
     def restore(self, state: StageState, snap: Tree,
-                stage: Optional[int] = None) -> None:
+                stage: Optional[int] = None, slots=()) -> None:
         single_stage(self, stage)
-        state.params = self._place_params(snap["params"])
-        state.opt = self._place_opt(snap.get("opt"))
-        state.version = int(snap.get("version", 0))
-        state.reset_progress()
+        # mesh placement for params; opt follows the params shardings
+        # (install_snapshot's generic placement can't know them)
+        placed = dict(snap)
+        placed["params"] = self._place_params(snap["params"])
+        placed["opt"] = self._place_opt(snap.get("opt"))
+        install_snapshot(state, placed, slots=slots,
+                         place=lambda t: t)
+
+    # ------------------------------------------------------ keyed slots
+    def export_slot(self, state: StageState, name: str, key,
+                    stage: Optional[int] = None) -> Tree:
+        single_stage(self, stage)
+        return slot_export(state, name, key)
+
+    def install_slot(self, state: StageState, name: str, key, value: Tree,
+                     stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
+        slot_install(state, name, key, value)
+
+    def drop_slot(self, state: StageState, name: str, key=None,
+                  stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
+        state.drop_slot(name, key)

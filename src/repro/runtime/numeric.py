@@ -26,7 +26,8 @@ import jax.numpy as jnp
 from repro.compression import codecs
 from repro.models.config import ArchConfig
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
-    single_stage, wire_bwd_codec, wire_fwd_codec
+    install_snapshot, single_stage, slot_export, slot_install, \
+    wire_bwd_codec, wire_fwd_codec
 from repro.runtime.stage_model import (SpanProgram, StageProgram,
                                        build_span_program,
                                        build_stage_programs,
@@ -54,9 +55,10 @@ def record_trace(key: tuple) -> None:
 
 
 def reset_compile_stats() -> None:
-    """Clear retrace counters AND every jit cache — numeric programs and
-    mesh jits alike — so tests/benchmarks that assert compile counts
-    start from a genuinely cold cache."""
+    """Clear retrace counters AND every jit cache — numeric programs,
+    mesh jits, and serving session programs alike — so tests/benchmarks
+    that assert compile counts start from a genuinely cold cache."""
+    import sys
     from repro.runtime import mesh as mesh_rt   # lazy: mesh imports us
     with _LOCK:
         _TRACES.clear()
@@ -64,6 +66,9 @@ def reset_compile_stats() -> None:
         _SPANS.clear()
     with mesh_rt._LOCK:
         mesh_rt._MESH_JITS.clear()
+    serve_progs = sys.modules.get("repro.serve.programs")
+    if serve_progs is not None:
+        serve_progs.reset_session_cache()
 
 
 def compile_stats() -> dict:
@@ -178,6 +183,12 @@ class NumericExecutor:
         del batch
         return 1
 
+    def session_program(self, total_len: int):
+        from repro.serve.programs import get_session_program
+        return get_session_program(
+            self.cfg, self.n_stages, (self.stage, self.stage + 1),
+            total_len, compress=self.compress_mode)
+
     # ---------------------------------------------------------- execution
     def run_fwd(self, state: StageState, inp: Tree,
                 labels: Optional[jax.Array] = None) -> Tree:
@@ -227,19 +238,31 @@ class NumericExecutor:
         state.reset_progress()
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState,
-                 stage: Optional[int] = None) -> Tree:
+    def snapshot(self, state: StageState, stage: Optional[int] = None,
+                 slots=()) -> Tree:
         single_stage(self, stage)
-        return host_snapshot(state)
+        return host_snapshot(state, slots=slots)
 
     def restore(self, state: StageState, snap: Tree,
-                stage: Optional[int] = None) -> None:
+                stage: Optional[int] = None, slots=()) -> None:
         single_stage(self, stage)
-        state.params = jax.tree.map(jnp.asarray, snap["params"])
-        state.opt = (jax.tree.map(jnp.asarray, snap["opt"])
-                     if snap.get("opt") is not None else None)
-        state.version = int(snap.get("version", 0))
-        state.reset_progress()
+        install_snapshot(state, snap, slots=slots)
+
+    # ------------------------------------------------------ keyed slots
+    def export_slot(self, state: StageState, name: str, key,
+                    stage: Optional[int] = None) -> Tree:
+        single_stage(self, stage)
+        return slot_export(state, name, key)
+
+    def install_slot(self, state: StageState, name: str, key, value: Tree,
+                     stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
+        slot_install(state, name, key, value)
+
+    def drop_slot(self, state: StageState, name: str, key=None,
+                  stage: Optional[int] = None) -> None:
+        single_stage(self, stage)
+        state.drop_slot(name, key)
 
 
 def build_numeric_executors(cfg: ArchConfig, n_stages: int, seq_len: int,

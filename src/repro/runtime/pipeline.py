@@ -42,7 +42,8 @@ from repro.compression import codecs
 from repro.models.config import ArchConfig
 from repro.models import params as P
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
-    wire_bwd_codec, wire_fwd_codec
+    install_snapshot, slot_export, slot_install, wire_bwd_codec, \
+    wire_fwd_codec
 from repro.runtime import numeric as numeric_rt
 
 Tree = Any
@@ -105,6 +106,11 @@ class PipelineExecutor:
     def dp_shards(self, batch: int) -> int:
         del batch
         return 1
+
+    def session_program(self, total_len: int):
+        from repro.serve.programs import get_session_program
+        return get_session_program(self.cfg, self.n_stages, self.span,
+                                   total_len, compress=self.compress_mode)
 
     # ------------------------------------------------------------ helpers
     def _params_tuple(self, state: StageState) -> tuple:
@@ -177,28 +183,44 @@ class PipelineExecutor:
         sub.reset_progress()
 
     # ---------------------------------------------------- state transfer
-    def snapshot(self, state: StageState,
-                 stage: Optional[int] = None) -> Tree:
+    def snapshot(self, state: StageState, stage: Optional[int] = None,
+                 slots=()) -> Tree:
         """Single-stage-format snapshot of one covered stage, or (with
         ``stage=None``) the whole span as ``{"per_stage": {s: snap}}`` —
         the former is the interop format every hand-off uses."""
         if stage is None:
-            return {"per_stage": {s: host_snapshot(state.per_stage[s])
-                                  for s in self.stages}}
-        return host_snapshot(state.per_stage[self._require(stage)])
+            return {"per_stage": {
+                s: host_snapshot(state.per_stage[s], slots=slots)
+                for s in self.stages}}
+        return host_snapshot(state.per_stage[self._require(stage)],
+                             slots=slots)
 
     def restore(self, state: StageState, snap: Tree,
-                stage: Optional[int] = None) -> None:
+                stage: Optional[int] = None, slots=()) -> None:
         if state.per_stage is None:
             state.per_stage = {}
         if stage is None:
             for s, sub_snap in snap["per_stage"].items():
-                self.restore(state, sub_snap, stage=int(s))
+                self.restore(state, sub_snap, stage=int(s), slots=slots)
             return
         s = self._require(stage)
         sub = state.per_stage.setdefault(s, StageState())
-        sub.params = jax.tree.map(jnp.asarray, snap["params"])
-        sub.opt = (jax.tree.map(jnp.asarray, snap["opt"])
-                   if snap.get("opt") is not None else None)
-        sub.version = int(snap.get("version", 0))
-        sub.reset_progress()
+        install_snapshot(sub, snap, slots=slots)
+
+    # ------------------------------------------------------ keyed slots
+    def export_slot(self, state: StageState, name: str, key,
+                    stage: Optional[int] = None) -> Tree:
+        return slot_export(state.per_stage[self._require(stage)], name, key)
+
+    def install_slot(self, state: StageState, name: str, key, value: Tree,
+                     stage: Optional[int] = None) -> None:
+        slot_install(state.per_stage[self._require(stage)], name, key,
+                     value)
+
+    def drop_slot(self, state: StageState, name: str, key=None,
+                  stage: Optional[int] = None) -> None:
+        if stage is None:
+            for sub in state.views():
+                sub.drop_slot(name, key)
+            return
+        state.per_stage[self._require(stage)].drop_slot(name, key)

@@ -191,14 +191,22 @@ def _make_stage_fwd(cfg: ArchConfig, s: int, n_stages: int, comp: str,
     return stage_fwd
 
 
-def _head_loss(cfg: ArchConfig, params: Tree, x, labels):
-    """Final norm + LM head + token-sum CE (so microbatch gradients add
-    exactly, App. E) — the last stage's extra ownership."""
+def _head_logits(cfg: ArchConfig, params: Tree, x):
+    """Final norm + LM head — the last stage's extra ownership.  Shared
+    by the training loss below and the serving session programs
+    (``repro.serve.programs``), so staged decode and staged training
+    read logits through one code path."""
     x = L.apply_norm(cfg, params["final_norm"], x)
     w = (params["embed"].T if cfg.tie_embeddings and "head" not in
          params else params["head"])
     logits = x @ w.astype(x.dtype)
-    logits = logits.astype(jnp.float32)
+    return logits.astype(jnp.float32)
+
+
+def _head_loss(cfg: ArchConfig, params: Tree, x, labels):
+    """Logits + token-sum CE (so microbatch gradients add exactly,
+    App. E)."""
+    logits = _head_logits(cfg, params, x)
     lse = jax.nn.logsumexp(logits, axis=-1)
     gold = jnp.take_along_axis(logits, labels[..., None],
                                axis=-1)[..., 0]
@@ -404,3 +412,59 @@ def init_stage_params(programs: list[StageProgram], key: jax.Array
                       ) -> list[Tree]:
     keys = jax.random.split(key, len(programs))
     return [P.init(k, p.specs) for k, p in zip(keys, programs)]
+
+
+def split_lm_params(cfg: ArchConfig, n_stages: int, params: Tree,
+                    compress: Optional[str] = None) -> list[Tree]:
+    """Slice a full-model param tree (``repro.models.model.lm_specs``
+    layout) into per-stage trees shaped like :func:`_stage_specs` — how
+    weights trained or loaded through the single-process path get served
+    by a staged swarm.  Exact: every leaf is a copy or a slice of the
+    original, so staged forward/decode matches the full model
+    bit-for-bit (the serving equivalence test relies on this).
+
+    Learned boundary codecs are unsupported: the single-process tree
+    carries the GSPMD pipeline's per-boundary codec stack, not the
+    per-stage ``w_c``/``w_d`` split the stage programs own.
+    """
+    comp = codecs.resolve_mode(cfg, compress)
+    if comp in codecs.LEARNED and n_stages > 1:
+        raise NotImplementedError(
+            "split_lm_params cannot split learned boundary-codec params; "
+            "init per-stage codec weights via init_stage_params instead")
+    assert cfg.n_layers % n_stages == 0
+    per = cfg.n_layers // n_stages
+    if not cfg.share_groups:
+        per_layer: list[Tree] = []
+        for (kind, n), seg in zip(model_lib.segments(cfg.block_kinds),
+                                  params["blocks"]):
+            for i in range(n):
+                per_layer.append(jax.tree.map(lambda a, _i=i: a[_i], seg))
+    out: list[Tree] = []
+    for s in range(n_stages):
+        if cfg.share_groups:
+            # one shared group per stage (stage s applies group s
+            # `per` times) — slice keeps the leading stack dim of 1
+            blocks = [jax.tree.map(lambda a, _s=s: a[_s:_s + 1],
+                                   params["blocks"][0])]
+        else:
+            blocks, idx = [], s * per
+            for kind, n in model_lib.segments(
+                    cfg.block_kinds[s * per:(s + 1) * per]):
+                trees = per_layer[idx:idx + n]
+                idx += n
+                blocks.append(jax.tree.map(
+                    lambda *xs: jnp.stack(xs), *trees))
+        st: Tree = {"blocks": blocks}
+        if s == 0:
+            st["embed"] = params["embed"]
+        if s == n_stages - 1:
+            st["final_norm"] = params["final_norm"]
+            if not cfg.tie_embeddings:
+                st["head"] = params["head"]
+            elif s != 0:
+                # tied embeddings with the embed table on another stage:
+                # the last stage materializes the tied head
+                st["head"] = params["embed"].T
+        out.append(st)
+    return out

@@ -1,0 +1,22 @@
+"""Elastic span serving over SWARM pipelines.
+
+Layers on top of ``repro.runtime`` (the executors) and ``repro.core``
+(the sim + swarm machinery): :mod:`repro.serve.programs` fuses a span's
+prefill/decode into session programs whose KV caches live in the
+executor-state ``"kv"`` keyed slot, and :mod:`repro.serve.runner` drives
+sessions through a churning swarm — prefill/decode disaggregation,
+slot-granular continuous batching, and KV-ledger-exact re-prefill of
+only the stages a dead peer took with it.
+"""
+from repro.serve.programs import (KV_SLOT, SessionProgram,
+                                  build_session_program,
+                                  full_session_program,
+                                  get_session_program)
+from repro.serve.runner import (Request, ServeConfig, ServeRunner,
+                                ServeStats)
+
+__all__ = [
+    "KV_SLOT", "SessionProgram", "build_session_program",
+    "full_session_program", "get_session_program",
+    "Request", "ServeConfig", "ServeRunner", "ServeStats",
+]

@@ -115,16 +115,23 @@ def make_train_step(cfg: ArchConfig, optimizer: Optimizer,
 
 
 def make_prefill_step(cfg: ArchConfig, remat: bool = True,
-                      last_only: bool = True):
-    """Inference prefill: forward + decode-cache emission + first token."""
+                      last_only: bool = True,
+                      cache_len: Optional[int] = None):
+    """Inference prefill: forward + decode-cache emission + first token.
+
+    ``cache_len`` sizes the emitted caches for the session's full
+    horizon (prompt + generated), so decode steps write in place —
+    defaults to the prompt length (the historical behavior, which then
+    needs cache re-padding before decoding further)."""
     def prefill_step(params: Tree, batch: Tree):
         if cfg.family == "audio":
             logits, caches = whisper_lib.whisper_prefill(
-                cfg, params, batch, remat=remat, last_only=last_only)
+                cfg, params, batch, cache_len=cache_len, remat=remat,
+                last_only=last_only)
         else:
             logits, caches = model_lib.lm_prefill(
                 cfg, params, batch["tokens"], batch.get("positions"),
-                remat=remat, last_only=last_only)
+                cache_len=cache_len, remat=remat, last_only=last_only)
         nxt = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
         return nxt, caches
 

@@ -19,7 +19,7 @@ from conftest import reference_losses, tiny_dense_config
 from repro.core import SwarmRunner, SwarmConfig, TraceEvent, MicrobatchLedger
 from repro.core.faults import synth_preemptible_trace
 from repro.core.sim import Sleep
-from repro.core.stage_model import build_stage_programs
+from repro.runtime import build_stage_programs
 from repro.optim import adamw
 
 SEQ, MB, GB, STEPS = 32, 2, 8, 3
@@ -108,7 +108,7 @@ def test_swarm_accumulate_spans_all_covered_stages_exactly_once():
     cfg = tiny_dense_config()
     scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=64,
                        global_batch=4, n_trainers=0, rebalance_period=0.0,
-                       compress=False, max_steps=1)
+                       codec="none", max_steps=1)
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
                     record_accumulation=True)
     span_peer = r.add_peer(range(0, 2))      # timing-mode span peer
@@ -147,7 +147,7 @@ def test_span_peer_kill_reissues_only_lost_stages_under_churn():
     cfg = tiny_dense_config()
     scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=512,
                        global_batch=8, n_trainers=4, rebalance_period=0.0,
-                       compress=False, max_steps=6)
+                       codec="none", max_steps=6)
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=3,
                     record_accumulation=True)
     r.build(peers_per_stage=2)
@@ -241,7 +241,7 @@ def test_churn_equals_fault_free_reference(churn_setup, seed):
     cfg, programs, opt = churn_setup
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress=False, max_steps=STEPS)
+                       codec="none", max_steps=STEPS)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=seed,
                          programs=programs, record_accumulation=True)
     runner.build(peers_per_stage=3)
@@ -263,7 +263,7 @@ def test_revived_peer_serves_again(churn_setup):
     cfg, programs, opt = churn_setup
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=2, rebalance_period=0.0,
-                       compress=False, max_steps=STEPS)
+                       codec="none", max_steps=STEPS)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0,
                          programs=programs, record_accumulation=True)
     runner.build(peers_per_stage=2)
@@ -293,7 +293,7 @@ def _run_throughput_churn(seed):
     # the pre-fix code double-counted surviving stages' gradients
     scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=512,
                        global_batch=16, n_trainers=6, rebalance_period=1.0,
-                       compress=True, max_steps=20, trainer_max_retries=2)
+                       codec="int8", max_steps=20, trainer_max_retries=2)
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=seed,
                     record_accumulation=True)
     r.build(peers_per_stage=3)

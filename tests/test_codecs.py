@@ -18,7 +18,7 @@ from conftest import tiny_dense_config
 from repro.compression import codecs
 from repro.compression.quant8 import BLOCK, compressed_bytes
 from repro.core import SwarmRunner, SwarmConfig
-from repro.core.stage_model import build_stage_programs, init_stage_params
+from repro.runtime import build_stage_programs, init_stage_params
 from repro.models import flops as F
 from repro.optim import adamw
 
@@ -52,13 +52,13 @@ def test_swarm_boundary_nbytes_matches_flops():
     """The sim charges exactly the analytic per-mode wire bytes."""
     cfg = tiny_dense_config(bottleneck_dim=16, maxout_k=4)
     for mode in codecs.MODES:
-        scfg = SwarmConfig(n_stages=2, seq_len=32, compress=mode)
+        scfg = SwarmConfig(n_stages=2, seq_len=32, codec=mode)
         r = SwarmRunner(cfg, scfg, adamw(), numeric=False)
         mb = r.next_microbatch()
         assert r.boundary_nbytes(mb) == F.boundary_bytes(
             cfg, mb.size, 32, mode)
     # booleans keep their historical meaning
-    r = SwarmRunner(cfg, SwarmConfig(n_stages=2, seq_len=32, compress=True),
+    r = SwarmRunner(cfg, SwarmConfig(n_stages=2, seq_len=32, codec="int8"),
                     adamw(), numeric=False)
     assert r.compress_mode == "int8"
 
@@ -104,7 +104,7 @@ def test_swarm_trains_with_learned_codecs():
     for mode in ("bottleneck", "maxout"):
         scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
                            global_batch=4, n_trainers=2,
-                           rebalance_period=0.0, compress=mode, max_steps=2)
+                           rebalance_period=0.0, codec=mode, max_steps=2)
         r = SwarmRunner(cfg, scfg, adamw(lr=1e-2, grad_clip=0.0),
                         numeric=True, seed=0)
         r.build(peers_per_stage=1)
@@ -156,7 +156,7 @@ def test_elastic_codec_equals_reference(mode):
     opt = adamw(lr=1e-2, grad_clip=0.0)
     scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
                        global_batch=8, n_trainers=3, rebalance_period=0.0,
-                       compress=mode, max_steps=3)
+                       codec=mode, max_steps=3)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     runner.build(peers_per_stage=2)
     metrics = runner.run(until=1e6)

@@ -49,7 +49,7 @@ def test_mixed_mesh_numeric_churn_equals_reference():
     opt = adamw(lr=1e-2, grad_clip=0.0)
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=STEPS)
+                       codec="bottleneck", max_steps=STEPS)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0,
                          record_accumulation=True)
     runner.build(peers_per_stage=2)
@@ -121,7 +121,7 @@ def test_compile_cache_one_trace_per_stage_shape_and_codec():
     cfg = tiny_dense_config()
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress=False, max_steps=1)
+                       codec="none", max_steps=1)
     opt = adamw(lr=1e-2, grad_clip=0.0)
     r1 = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     r1.build(peers_per_stage=4)                 # 4 peers x 2 stages
@@ -166,7 +166,7 @@ def test_stage_resumes_from_latest_checkpoint(tmp_path):
     total = STEPS + 1
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=total,
+                       codec="bottleneck", max_steps=total,
                        ckpt_dir=str(tmp_path))
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     runner.build(peers_per_stage=2)
@@ -203,7 +203,7 @@ def test_stale_checkpoint_triggers_global_rollback(tmp_path):
     total = 4
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=total,
+                       codec="bottleneck", max_steps=total,
                        ckpt_dir=str(tmp_path), ckpt_period=2)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     runner.build(peers_per_stage=2)
@@ -242,7 +242,7 @@ def test_rollback_after_cold_resume_truncates_relative_losses(tmp_path):
     def make(max_steps, period):
         scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                            global_batch=GB, n_trainers=3,
-                           rebalance_period=0.0, compress="bottleneck",
+                           rebalance_period=0.0, codec="bottleneck",
                            max_steps=max_steps, ckpt_dir=str(tmp_path),
                            ckpt_period=period)
         r = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
@@ -286,7 +286,7 @@ def test_runner_cold_start_resumes_previous_run(tmp_path):
     def make(max_steps):
         scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                            global_batch=GB, n_trainers=3,
-                           rebalance_period=0.0, compress="bottleneck",
+                           rebalance_period=0.0, codec="bottleneck",
                            max_steps=max_steps, ckpt_dir=str(tmp_path))
         r = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
         r.build(peers_per_stage=2)
@@ -310,7 +310,7 @@ def test_without_ckpt_dir_falls_back_to_step0_reference():
     opt = adamw(lr=1e-2, grad_clip=0.0)
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=2, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=1)
+                       codec="bottleneck", max_steps=1)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     runner.build(peers_per_stage=1)
     peer = runner.add_peer(0)
@@ -371,7 +371,7 @@ _MULTIDEV_MIXED = textwrap.dedent("""
                         jax.tree.map(lambda x: -lr * x, g), s))
     scfg = SwarmConfig(n_stages=2, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=STEPS)
+                       codec="bottleneck", max_steps=STEPS)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0)
     runner.build(peers_per_stage=1)
     for s in range(2):
@@ -419,7 +419,7 @@ def test_faster_peer_receives_proportionally_more_microbatches():
     cfg = tiny_dense_config(n_layers=2)
     scfg = SwarmConfig(n_stages=1, microbatch_size=1, seq_len=512,
                        global_batch=64, n_trainers=4, rebalance_period=0.0,
-                       compress=False, max_steps=6)
+                       codec="none", max_steps=6)
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
                     profile_fn=lambda i: (fast, slow)[i % 2],
                     record_accumulation=True)

@@ -1,0 +1,241 @@
+"""Serving layer: keyed executor slots, the session KV ledger,
+prefill/decode disaggregated assignment, codec config normalization,
+and ServeRunner end-to-end (token-for-token vs the single-process
+reference, with and without span-peer churn)."""
+import dataclasses
+import sys
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import tiny_dense_config
+
+from repro.core.ledger import SessionKVLedger
+from repro.core.rebalance import serve_assignment, spans_route
+from repro.core.swarm import SwarmConfig
+from repro.runtime import StageState, build_numeric_executors
+from repro.serve import ServeConfig, ServeRunner
+from repro.serve.programs import KV_SLOT
+from repro.serve.runner import reference_generate
+
+
+# ---------------------------------------------------------------- slots
+class TestKeyedSlotSnapshots:
+    """snapshot/restore with ``slots=``: serving state rides along only
+    when asked for, and a restore is a full install (unrequested slots
+    are shed)."""
+
+    def _peer_state(self):
+        cfg = tiny_dense_config(n_layers=2)
+        ex = build_numeric_executors(cfg, 1, seq_len=8)[0]
+        state = StageState(params={"w": jnp.ones((2, 2))})
+        ex.install_slot(state, KV_SLOT, "sess-0",
+                        {"k": np.arange(4.0).reshape(2, 2)})
+        return ex, state
+
+    def test_default_snapshot_keeps_historical_format(self):
+        ex, state = self._peer_state()
+        snap = ex.snapshot(state)
+        assert set(snap) == {"params", "opt", "version"}  # no slots key
+
+    def test_snapshot_carries_requested_slot(self):
+        ex, state = self._peer_state()
+        snap = ex.snapshot(state, slots=(KV_SLOT,))
+        assert "sess-0" in snap["slots"][KV_SLOT]
+        np.testing.assert_array_equal(
+            snap["slots"][KV_SLOT]["sess-0"]["k"],
+            np.arange(4.0).reshape(2, 2))
+
+    def test_restore_with_slots_installs_kv(self):
+        ex, state = self._peer_state()
+        snap = ex.snapshot(state, slots=(KV_SLOT,))
+        other = StageState()
+        ex.restore(other, snap, slots=(KV_SLOT,))
+        got = ex.export_slot(other, KV_SLOT, "sess-0")
+        np.testing.assert_array_equal(got["k"],
+                                      np.arange(4.0).reshape(2, 2))
+
+    def test_training_only_restore_sheds_kv(self):
+        """Restoring a training snapshot into a serving peer evicts its
+        sessions; restoring a kv snapshot without asking for the slot
+        drops it on the floor."""
+        ex, state = self._peer_state()
+        snap = ex.snapshot(state, slots=(KV_SLOT,))
+        ex.restore(state, ex.snapshot(state))      # training-only restore
+        assert KV_SLOT not in state.slots
+        ex.restore(state, snap)                    # kv present, not asked
+        assert KV_SLOT not in state.slots
+        ex.restore(state, snap, slots=(KV_SLOT,))
+        assert "sess-0" in state.slot(KV_SLOT)
+
+    def test_grads_never_ride_slot_snapshots(self):
+        ex, state = self._peer_state()
+        snap = ex.snapshot(state, slots=("grads", KV_SLOT))
+        assert set(snap["slots"]) == {KV_SLOT}     # core slots excluded
+
+
+# --------------------------------------------------------------- ledger
+class TestSessionKVLedger:
+    def test_exactly_once_is_a_hard_error(self):
+        led = SessionKVLedger(3)
+        led.record(1, "s0", "peerA")
+        with pytest.raises(RuntimeError, match="double prefill"):
+            led.record(1, "s0", "peerB")
+        assert led.holder(1, "s0") == "peerA"      # first admit wins
+
+    def test_transfer_moves_without_reprefill(self):
+        led = SessionKVLedger(2)
+        led.record(0, "s0", "prefiller")
+        led.transfer(0, "s0", "decoder")
+        assert led.holder(0, "s0") == "decoder"
+        with pytest.raises(RuntimeError):          # still exactly-once
+            led.record(0, "s0", "decoder")
+
+    def test_peer_death_releases_only_its_rows(self):
+        led = SessionKVLedger(4)
+        for s in (0, 1):
+            led.record(s, "s0", "p-lo")
+        for s in (2, 3):
+            led.record(s, "s0", "p-hi")
+        lost = led.release_all("p-hi")
+        assert sorted(lost) == [(2, "s0"), (3, "s0")]
+        assert led.missing_stages("s0") == [2, 3]
+        assert led.sessions_of("p-lo") == {"s0"}
+        assert led.sessions_of("p-hi") == set()
+
+
+# ----------------------------------------------------------- assignment
+class TestServeAssignment:
+    def test_both_pools_route(self):
+        out = serve_assignment(n_prefill=3, n_decode=2, n_stages=6)
+        assert spans_route(6, out["prefill"])
+        assert spans_route(6, out["decode"])
+
+    def test_prefill_refines_decode(self):
+        """Every decode-span entry boundary is a prefill hop boundary —
+        the invariant that guarantees wire history exists wherever a
+        replacement decode peer needs to re-prefill."""
+        out = serve_assignment(n_prefill=4, n_decode=3, n_stages=8,
+                               stage_costs=[3, 1, 1, 1, 2, 1, 1, 2])
+        cuts = {lo for lo, _ in out["prefill"]} | {8}
+        for lo, hi in out["decode"]:
+            assert lo in cuts and hi in cuts
+
+    def test_decode_spans_fuse_wide(self):
+        out = serve_assignment(n_prefill=4, n_decode=2, n_stages=4)
+        d_width = np.mean([hi - lo for lo, hi in out["decode"]])
+        p_width = np.mean([hi - lo for lo, hi in out["prefill"]])
+        assert d_width >= p_width
+
+    def test_empty_prefill_pool_serves_direct(self):
+        out = serve_assignment(n_prefill=0, n_decode=2, n_stages=4)
+        assert out["prefill"] == [] and spans_route(4, out["decode"])
+
+    def test_decode_pool_prices_hops_at_whole_pipe(self):
+        """Per-hop latency dominates decode, so the decode layout fuses
+        each peer onto the full pipeline regardless of speed skew."""
+        out = serve_assignment(n_prefill=2, n_decode=3, n_stages=6,
+                               stage_costs=[5, 1, 1, 1, 1, 5],
+                               decode_speeds=[1.0, 4.0, 0.5])
+        assert out["decode"] == [(0, 6)] * 3
+
+
+# ------------------------------------------------------- codec config
+class TestCodecNormalization:
+    def test_compress_bool_resolves_with_warning(self):
+        with pytest.warns(DeprecationWarning, match="codec='int8'"):
+            assert SwarmConfig(compress=True).codec == "int8"
+        with pytest.warns(DeprecationWarning, match="codec='none'"):
+            assert SwarmConfig(compress=False).codec == "none"
+
+    def test_compress_str_passthrough(self):
+        with pytest.warns(DeprecationWarning):
+            assert SwarmConfig(compress="bottleneck").codec == "bottleneck"
+
+    def test_conflicting_spellings_raise(self):
+        with pytest.warns(DeprecationWarning):
+            with pytest.raises(ValueError, match="conflicting"):
+                SwarmConfig(codec="none", compress=True)
+
+    def test_replace_does_not_rewarn(self):
+        with pytest.warns(DeprecationWarning):
+            scfg = SwarmConfig(compress=True)
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            scfg2 = dataclasses.replace(scfg, max_steps=3)
+        assert scfg2.codec == "int8" and scfg2.max_steps == 3
+
+    def test_default_and_validation(self):
+        assert SwarmConfig().codec == "int8"       # historical default
+        assert SwarmConfig(codec="auto").codec == "auto"
+        with pytest.raises(ValueError):
+            SwarmConfig(codec="zstd")
+
+
+def test_core_stage_model_shim_warns():
+    sys.modules.pop("repro.core.stage_model", None)
+    with pytest.warns(DeprecationWarning, match="repro.runtime"):
+        import repro.core.stage_model  # noqa: F401
+    from repro.core.stage_model import build_stage_programs
+    from repro.runtime import build_stage_programs as canonical
+    assert build_stage_programs is canonical
+
+
+# ----------------------------------------------------------- end-to-end
+S, NEW = 8, 6
+
+
+def _prompts(cfg, n=4, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, size=(n, S))
+
+
+class TestServeRunner:
+    def test_disaggregated_matches_reference(self):
+        """2 prefill + 2 decode peers over 4 stages: prefill KV hands
+        off to the decode pool (ledger ``transfer``, never re-prefill)
+        and greedy outputs equal the single-process program."""
+        cfg = tiny_dense_config()
+        r = ServeRunner(cfg, ServeConfig(n_stages=4, max_batch=2,
+                                         max_sessions=2), seed=0)
+        r.build_pools(n_prefill=2, n_decode=2)
+        prompts = _prompts(cfg)
+        reqs = [r.submit(p, NEW) for p in prompts]
+        summary = r.run()
+        ref = reference_generate(cfg, r.params, prompts, NEW)
+        np.testing.assert_array_equal(np.stack([q.tokens for q in reqs]),
+                                      ref)
+        assert summary["failed"] == 0
+        assert summary["reprefills"] == 0
+        # every (stage, session) moved pools exactly once: 4 stages x
+        # 2 session batches
+        assert summary["kv_transfers"] == 4 * 2
+        assert all(c == 0 for c in r.kv.stage_counts())  # all released
+
+    def test_span_kill_reprefills_only_lost_stages(self):
+        """Kill a decode span peer mid-generation: its replacement
+        re-prefills EXACTLY the dead span's stages from the recorded
+        boundary history; the surviving span's KV is reused.  The strict
+        ledger raises on any double-prefill, so completion is proof of
+        exactly-once."""
+        cfg = tiny_dense_config()
+        r = ServeRunner(cfg, ServeConfig(n_stages=4, max_batch=2,
+                                         max_sessions=1), seed=0)
+        for name, span in (("d0a", (0, 2)), ("d1a", (2, 4)),
+                           ("d0b", (0, 2)), ("d1b", (2, 4))):
+            r.add_peer(span, pool="decode", name=name)
+        prompts = _prompts(cfg)
+        reqs = [r.submit(p, NEW) for p in prompts]
+        r.schedule_fail(0.045, "d1a")               # lands mid-decode
+        summary = r.run()
+        ref = reference_generate(cfg, r.params, prompts, NEW)
+        np.testing.assert_array_equal(np.stack([q.tokens for q in reqs]),
+                                      ref)
+        assert summary["failed"] == 0
+        assert summary["reprefills"] >= 1
+        # recovery touched the dead (2, 4) span only — 2 stages per
+        # re-prefill, never the surviving (0, 2) span's stages
+        assert summary["reprefilled_stages"] == 2 * summary["reprefills"]
+        assert all(c == 0 for c in r.kv.stage_counts())

@@ -43,7 +43,7 @@ def _codec_cfg():
 def _scfg(n_stages, max_steps=STEPS, **kw):
     return SwarmConfig(n_stages=n_stages, microbatch_size=MB, seq_len=SEQ,
                        global_batch=GB, n_trainers=3, rebalance_period=0.0,
-                       compress="bottleneck", max_steps=max_steps, **kw)
+                       codec="bottleneck", max_steps=max_steps, **kw)
 
 
 def _span_peer(runner, lo, hi):
@@ -295,7 +295,7 @@ def test_rebalance_loop_shrinks_span_peer_onto_bottleneck():
     cfg = tiny_dense_config()
     scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=512,
                        global_batch=16, n_trainers=6,
-                       rebalance_period=0.5, compress=False,
+                       rebalance_period=0.5, codec="none",
                        max_steps=30, spans=True)
     r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=0,
                     record_accumulation=True)

@@ -7,7 +7,7 @@ import pytest
 
 from conftest import tiny_dense_config
 from repro.core import SwarmRunner, SwarmConfig, TraceEvent
-from repro.core.stage_model import build_stage_programs, init_stage_params
+from repro.runtime import build_stage_programs, init_stage_params
 from repro.data.synthetic import SyntheticLM
 from repro.optim import adamw, delayed_parameter_updates
 
@@ -46,7 +46,7 @@ def swarm_setup():
     cfg = tiny_dense_config()
     scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
                        global_batch=8, n_trainers=3, rebalance_period=0.0,
-                       compress=False, max_steps=3)
+                       codec="none", max_steps=3)
     return cfg, scfg
 
 
@@ -70,7 +70,7 @@ def test_swarm_equals_synchronous_training(swarm_setup):
 def test_swarm_survives_failures_and_joins(swarm_setup):
     cfg, scfg = swarm_setup
     import dataclasses
-    scfg = dataclasses.replace(scfg, rebalance_period=2.0, compress=True,
+    scfg = dataclasses.replace(scfg, rebalance_period=2.0, codec="int8",
                                max_steps=4)
     opt = adamw(lr=1e-2, grad_clip=0.0)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=0,
@@ -100,7 +100,7 @@ def test_swarm_loss_decreases():
     # 12 gives a deterministic 2x margin at the same lr
     scfg = SwarmConfig(n_stages=2, microbatch_size=4, seq_len=32,
                        global_batch=16, n_trainers=4, rebalance_period=0.0,
-                       compress=True, max_steps=12)
+                       codec="int8", max_steps=12)
     opt = adamw(lr=3e-3, grad_clip=0.0)
     runner = SwarmRunner(cfg, scfg, opt, numeric=True, seed=1)
     runner.build(peers_per_stage=2)
@@ -113,16 +113,17 @@ def test_8bit_compression_close_to_uncompressed():
     """App. J: 8-bit boundary compression barely perturbs the step."""
     cfg = tiny_dense_config(n_layers=2)
     losses = {}
-    for compress in (False, True):
+    for codec in ("none", "int8"):
         scfg = SwarmConfig(n_stages=2, microbatch_size=2, seq_len=32,
                            global_batch=8, n_trainers=2,
-                           rebalance_period=0.0, compress=compress,
+                           rebalance_period=0.0, codec=codec,
                            max_steps=3)
         r = SwarmRunner(cfg, scfg, adamw(lr=1e-2, grad_clip=0.0),
                         numeric=True, seed=0)
         r.build(peers_per_stage=1)
-        losses[compress] = r.run(until=1e6)["loss"]
-    diff = max(abs(a - b) for a, b in zip(losses[True], losses[False]))
+        losses[codec] = r.run(until=1e6)["loss"]
+    diff = max(abs(a - b)
+               for a, b in zip(losses["int8"], losses["none"]))
     assert diff < 0.05, (losses, diff)
 
 
@@ -153,7 +154,7 @@ def test_rebalancing_improves_throughput_under_churn():
     for T in (0.0, 60.0):
         scfg = SwarmConfig(n_stages=2, microbatch_size=1, seq_len=128,
                            global_batch=64, n_trainers=8,
-                           rebalance_period=T, compress=True)
+                           rebalance_period=T, codec="int8")
         r = SwarmRunner(cfg, scfg, adamw(), numeric=False, seed=4)
         r.build(peers_per_stage=8)
         r.apply_trace(trace)
