@@ -4,7 +4,7 @@ Emits machine-readable ``artifacts/BENCH_swarm.json`` so the perf
 trajectory (throughput, step time, compile/retrace counts, host wire
 bytes) is tracked across PRs — CI uploads it as an artifact.
 
-Two headline invariants:
+Three headline invariants:
 
 * **shared compile cache** — on a 4-peer / 2-stage numeric run the
   runtime produces **one jit per (stage, kind)**: at least 2x fewer
@@ -16,7 +16,11 @@ Two headline invariants:
   bottleneck codec on) reaches the SAME loss trajectory while moving
   strictly fewer boundary bytes through the host (zero, for whole-pipe
   spans), compiling exactly once per (span, kind, codec), with zero
-  re-traces on a second runner.
+  re-traces on a second runner;
+* **async tick** — the same workload with in-flight boundary transfers
+  and a bounded-staleness All-Reduce window (``overlap=True``,
+  ``staleness=1``) is at least as fast as the blocking tick, with a
+  nonzero fraction of wire time hidden behind compute.
 """
 from __future__ import annotations
 
@@ -43,15 +47,27 @@ CFG_CODEC = CFG.with_overrides(name="bench-swarm-tiny-codec",
                                bottleneck_dim=16)
 
 
-def _scfg(codec) -> SwarmConfig:
+def _scfg(codec, **kw) -> SwarmConfig:
     return SwarmConfig(n_stages=N_STAGES, microbatch_size=2, seq_len=32,
                        global_batch=8, n_trainers=3, rebalance_period=0.0,
-                       codec=codec, max_steps=STEPS)
+                       codec=codec, max_steps=STEPS, **kw)
 
 
 def _run_numeric(seed: int) -> tuple[SwarmRunner, float]:
     r = SwarmRunner(CFG, _scfg("none"), adamw(lr=1e-2), numeric=True,
                     seed=seed)
+    r.build(peers_per_stage=PEERS_PER_STAGE)
+    t0 = time.perf_counter()
+    r.run(until=1e6)
+    return r, time.perf_counter() - t0
+
+
+def _run_async(seed: int) -> tuple[SwarmRunner, float]:
+    """Same 4-peer/2-stage workload with the async tick on: in-flight
+    boundary transfers (overlap) plus a bounded-staleness All-Reduce
+    window (staleness=1 => DPU numerics inside the runner)."""
+    r = SwarmRunner(CFG, _scfg("none", overlap=True, staleness=1),
+                    adamw(lr=1e-2), numeric=True, seed=seed)
     r.build(peers_per_stage=PEERS_PER_STAGE)
     t0 = time.perf_counter()
     r.run(until=1e6)
@@ -93,6 +109,9 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     r2, wall2 = _run_numeric(seed=1)         # same shapes: cache hits only
     second = compile_stats()
 
+    # ---- sync vs async tick (same shapes => reuses the warm cache)
+    ra, wall_async = _run_async(seed=0)
+
     # ---- span vs single, codec on, same seed => same trajectory
     reset_compile_stats()
     rs_single, wall_single = _run_codec(seed=0, span=False)
@@ -107,6 +126,8 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     naive = peers * N_STAGES                 # per-peer re-trace baseline
     steps = r1.metrics["step_time"]
     mean_step = sum(steps) / max(len(steps), 1)
+    steps_async = ra.metrics["step_time"]
+    mean_step_async = sum(steps_async) / max(len(steps_async), 1)
     report = {
         "bench": "swarm_runtime",
         "config": {"peers": peers, "stages": N_STAGES, "steps": STEPS,
@@ -123,6 +144,19 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
             "peers_times_stages": naive,
             "per_key": {" ".join(map(str, k)): v
                         for k, v in sorted(first["per_key"].items())},
+        },
+        # sync vs async tick (ISSUE 7: in-flight boundary transfers +
+        # bounded-staleness All-Reduce must not cost throughput):
+        "async": {
+            "overlap": True,
+            "staleness": 1,
+            "sync_throughput_sim": r1.throughput(),
+            "async_throughput_sim": ra.throughput(),
+            "sync_mean_step_s_sim": mean_step,
+            "async_mean_step_s_sim": mean_step_async,
+            "overlap_fraction": ra.metrics["overlap_fraction"],
+            "inflight_bytes": ra.metrics["inflight_bytes"],
+            "wall_s": wall_async,
         },
         # span-vs-single (codec on, identical seed/sample order):
         "span": {
@@ -153,6 +187,18 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
         "second same-shape runner re-traced: "
         f"{second['traces']} vs {first['traces']}")
 
+    # ---- async invariants (the ISSUE 7 acceptance bar): overlapping
+    # the wire with compute must never cost throughput, and the run must
+    # actually have put boundary bytes in flight
+    asy = report["async"]
+    assert asy["async_throughput_sim"] >= asy["sync_throughput_sim"], (
+        "async tick slower than sync on the 4-peer/2-stage run: "
+        f"{asy['async_throughput_sim']:.2f} vs "
+        f"{asy['sync_throughput_sim']:.2f} samples/s")
+    assert asy["overlap_fraction"] > 0, (
+        "async run hid no wire time behind compute: "
+        f"overlap_fraction={asy['overlap_fraction']}")
+
     # ---- span invariants (the ISSUE 5 acceptance bar)
     sp = report["span"]
     assert len(sp["span_loss"]) == STEPS and len(sp["single_loss"]) == STEPS
@@ -173,6 +219,10 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     print(f"swarm/throughput,0,sim={r1.throughput():.2f}/s "
           f"mean_step={mean_step:.3f}s wall1={wall1:.1f}s "
           f"wall2={wall2:.1f}s")
+    print(f"swarm/async,0,sim={asy['async_throughput_sim']:.2f}/s vs "
+          f"{asy['sync_throughput_sim']:.2f}/s sync; overlap_fraction="
+          f"{asy['overlap_fraction']:.2f} "
+          f"inflight={asy['inflight_bytes'] / 1e6:.1f}MB staleness=1")
     print(f"swarm/span,0,wire_bytes {sp['span_wire_bytes']:.0f} vs "
           f"{sp['single_wire_bytes']:.0f} single; span compiles "
           f"{sum(span_keys.values())} (1 per (span,kind)); loss equal "

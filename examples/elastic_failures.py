@@ -19,10 +19,11 @@ MODEL = ArchConfig(name="elastic-demo", family="dense", n_layers=4,
 HORIZON = 3600.0
 
 
-def run(rebalance_T: float, trace):
+def run(rebalance_T: float, trace, overlap: bool = False):
     scfg = SwarmConfig(n_stages=4, microbatch_size=1, seq_len=512,
                        global_batch=1024, n_trainers=72,
-                       rebalance_period=rebalance_T, codec="int8")
+                       rebalance_period=rebalance_T, codec="int8",
+                       overlap=overlap)
     r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=0)
     r.build(peers_per_stage=6)
     r.apply_trace(trace)
@@ -35,14 +36,22 @@ def main():
                                     mean_lifetime_s=1200.0, seed=3)
     counts = active_counts(trace, 24, HORIZON, dt=600.0)
     print("active peers over the hour:", list(counts))
-    for T, tag in ((0.0, "no rebalancing "), (60.0, "rebalance T=60 ")):
-        r = run(T, trace)
+    for T, overlap, tag in ((0.0, False, "no rebalancing "),
+                            (60.0, False, "rebalance T=60 "),
+                            (60.0, True, "T=60 + overlap ")):
+        r = run(T, trace, overlap=overlap)
         print(f"{tag}: {r.throughput():.2f} samples/s, "
               f"{r.metrics['failures']} failures, "
               f"{r.metrics['joins']} joins, "
               f"{r.metrics['migrations']} migrations, "
               f"{r.metrics['recomputed_microbatches']} recomputed "
               f"microbatches (exactly-once ledger)")
+        idle = r.metrics["peer_idle_s"]
+        mean_idle = sum(idle.values()) / max(len(idle), 1)
+        print(f"{' ' * len(tag)}  overlap fraction "
+              f"{r.metrics['overlap_fraction']:.2f}, "
+              f"{r.metrics['inflight_bytes'] / 1e9:.2f} GB in flight, "
+              f"mean peer idle {mean_idle:.0f}s")
 
 
 if __name__ == "__main__":

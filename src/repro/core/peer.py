@@ -113,6 +113,13 @@ class Peer:
         self._epoch = 0               # bumped by drain(): voids queued work
         self._generation = 0          # bumped by revive(): retires executor
         self.busy_time = 0.0          # for utilization metrics
+        # NIC model for the async tick: boundary tensors in flight
+        # occupy these links, never the compute queue, so the peer
+        # computes microbatch k+1 while k's boundary is on the wire
+        self.uplink = sim.link()
+        self.downlink = sim.link()
+        self.idle_time = 0.0          # executor-waited-empty seconds
+        self._idle_since: Optional[float] = None
         self.spawn_executor()
 
     # ------------------------------------------------------------ span
@@ -149,10 +156,13 @@ class Peer:
         while self.alive and gen == self._generation:
             if not self._tasks:
                 self._wake = self.sim.event()
+                self._idle_since = self.sim.now
                 try:
                     yield self._wake.wait()
                 except Interrupt:
+                    self._close_idle()
                     return
+                self._close_idle()
                 continue
             task = self._tasks.pop(0)
             epoch = self._epoch
@@ -173,6 +183,47 @@ class Peer:
 
     def queue_size(self) -> int:
         return len(self._tasks)
+
+    def _close_idle(self) -> None:
+        if self._idle_since is not None:
+            self.idle_time += self.sim.now - self._idle_since
+            self._idle_since = None
+
+    def total_idle(self, now: Optional[float] = None) -> float:
+        """Executor idle seconds, including the currently open interval."""
+        open_dt = 0.0
+        if self._idle_since is not None:
+            open_dt = (now if now is not None else self.sim.now) \
+                - self._idle_since
+        return self.idle_time + open_dt
+
+    # ------------------------------------------------------------ wire
+    def send(self, nbytes: float, to: "Optional[Peer]" = None) -> Event:
+        """Put ``nbytes`` on this peer's uplink.  The transfer occupies
+        the LINK, not the compute queue — the executor keeps working
+        while the boundary is in flight.  With ``to`` given the transfer
+        is end-to-end priced at the bottleneck of the pair (one latency,
+        min of up/down bandwidth) and the receiver's downlink is charged
+        the same window."""
+        if to is None:
+            dur = self.profile.send_time(nbytes)
+        else:
+            bw = min(self.profile.up_bw, to.profile.down_bw)
+            dur = self.profile.latency + nbytes / bw
+            to.downlink.occupy(dur, nbytes)
+        return self.uplink.transfer(dur, nbytes)
+
+    def recv(self, nbytes: float, frm: "Optional[Peer]" = None) -> Event:
+        """Await ``nbytes`` landing on this peer's downlink.  With
+        ``frm`` given the transfer is priced at the bottleneck of the
+        pair and the sender's uplink is charged the same window."""
+        if frm is None:
+            dur = self.profile.recv_time(nbytes)
+        else:
+            bw = min(self.profile.down_bw, frm.profile.up_bw)
+            dur = self.profile.latency + nbytes / bw
+            frm.uplink.occupy(dur, nbytes)
+        return self.downlink.transfer(dur, nbytes)
 
     def submit(self, kind: str, compute_time: float,
                thunk: Callable[[], Any]) -> Event:

@@ -113,20 +113,29 @@ def spans_route(n_stages: int,
 
 
 def _span_cost(span: tuple[int, int], costs: list[float],
-               boundary_cost: float, n_stages: int) -> float:
+               boundary_cost: float, n_stages: int,
+               overlap_wire: bool = False) -> float:
     """Per-microbatch service cost of one peer running ``span`` fused:
     the covered stages' compute plus ``boundary_cost`` per *host* edge —
     fused intra-span boundaries are free, which is exactly the saved
-    wire bytes the span backend realizes."""
+    wire bytes the span backend realizes.  ``overlap_wire`` prices the
+    async tick: boundary transfers ride the NIC concurrently with the
+    next microbatch's compute, so the steady-state cost is the MAX of
+    compute and wire (the busier of the two pipelines), not their sum —
+    never more than the serial price, equal when either side is zero."""
     lo, hi = span
     edges = (1 if lo > 0 else 0) + (1 if hi < n_stages else 0)
-    return sum(costs[lo:hi]) + boundary_cost * edges
+    compute, wire = sum(costs[lo:hi]), boundary_cost * edges
+    if overlap_wire:
+        return max(compute, wire)
+    return compute + wire
 
 
 def span_stage_rates(spans: Sequence[tuple[int, int]],
                      speeds: Sequence[float], n_stages: int,
                      stage_costs: Optional[list[float]] = None,
-                     boundary_cost: float = 0.0) -> list[float]:
+                     boundary_cost: float = 0.0,
+                     overlap_wire: bool = False) -> list[float]:
     """Aggregate service rate per stage under a span assignment: a peer
     of speed ``v`` serving span σ contributes ``v / cost(σ)`` to every
     stage of σ (it pushes each microbatch through the whole span)."""
@@ -135,7 +144,8 @@ def span_stage_rates(spans: Sequence[tuple[int, int]],
     for span, v in zip(spans, speeds):
         if span is None:
             continue
-        c = _span_cost(tuple(span), costs, boundary_cost, n_stages)
+        c = _span_cost(tuple(span), costs, boundary_cost, n_stages,
+                       overlap_wire)
         for s in range(span[0], span[1]):
             rate[s] += v / max(c, 1e-12)
     return rate
@@ -167,7 +177,8 @@ def _contiguous_partition(n_chunks: int, costs: list[float]
 
 
 def _greedy_single_assignment(speeds: list[float], n_stages: int,
-                              costs: list[float], boundary_cost: float
+                              costs: list[float], boundary_cost: float,
+                              overlap_wire: bool = False
                               ) -> Optional[list[tuple[int, int]]]:
     """Best-effort width-1 placement (the span-free baseline): fastest
     peers first, each onto the currently weakest stage.  None when
@@ -183,7 +194,8 @@ def _greedy_single_assignment(speeds: list[float], n_stages: int,
         s = min(range(n_stages), key=lambda j: (rate[j], -costs[j]))
         spans[i] = (s, s + 1)
         rate[s] += speeds[i] / max(
-            _span_cost((s, s + 1), costs, boundary_cost, n_stages), 1e-12)
+            _span_cost((s, s + 1), costs, boundary_cost, n_stages,
+                       overlap_wire), 1e-12)
     return spans
 
 
@@ -191,7 +203,8 @@ def optimal_assignment(n_peers: int, n_stages: int,
                        stage_costs: Optional[list[float]] = None, *,
                        speeds: Optional[Sequence[float]] = None,
                        spans: bool = False, boundary_cost: float = 0.0,
-                       max_span: Optional[int] = None):
+                       max_span: Optional[int] = None,
+                       overlap_wire: bool = False):
     """Throughput-optimal placement (the 'always optimal' baseline of
     Table 5).
 
@@ -228,9 +241,11 @@ def optimal_assignment(n_peers: int, n_stages: int,
 
     def thr(assign):
         return pipeline_throughput(assign, v, stage_costs=costs,
-                                   boundary_cost=boundary_cost)
+                                   boundary_cost=boundary_cost,
+                                   overlap_wire=overlap_wire)
 
-    single = _greedy_single_assignment(v, n_stages, costs, boundary_cost)
+    single = _greedy_single_assignment(v, n_stages, costs, boundary_cost,
+                                       overlap_wire)
     if max_span == 1:
         if single is None:
             raise ValueError(f"max_span=1 cannot cover {n_stages} stages "
@@ -246,7 +261,7 @@ def optimal_assignment(n_peers: int, n_stages: int,
                 hi - lo > max_span for lo, hi in chunks):
             continue
         by_cost = sorted(range(k), key=lambda c: -_span_cost(
-            chunks[c], costs, boundary_cost, n_stages))
+            chunks[c], costs, boundary_cost, n_stages, overlap_wire))
         order = sorted(range(n_peers), key=lambda i: -v[i])
         assign: list[Optional[tuple[int, int]]] = [None] * n_peers
         for rank, c in enumerate(by_cost):
@@ -255,7 +270,7 @@ def optimal_assignment(n_peers: int, n_stages: int,
             rate = span_stage_rates(
                 [a for a in assign if a is not None],
                 [v[j] for j, a in enumerate(assign) if a is not None],
-                n_stages, costs, boundary_cost)
+                n_stages, costs, boundary_cost, overlap_wire)
             weakest = min(range(n_stages), key=lambda s: rate[s])
             assign[i] = next(c for c in chunks
                              if c[0] <= weakest < c[1])
@@ -337,7 +352,8 @@ def serve_assignment(n_prefill: int, n_decode: int, n_stages: int,
 
 def pipeline_throughput(alloc, peer_speed=1.0,
                         stage_costs: Optional[list[float]] = None,
-                        boundary_cost: float = 0.0) -> float:
+                        boundary_cost: float = 0.0,
+                        overlap_wire: bool = False) -> float:
     """Steady-state pipeline throughput = min over stages of aggregate
     stage speed (the weakest-link law, §3.2).
 
@@ -346,7 +362,10 @@ def pipeline_throughput(alloc, peer_speed=1.0,
     ``peer_speed`` a scalar or per-peer sequence — where each host
     boundary a peer's span touches costs ``boundary_cost`` on top of the
     covered stages' compute, so fused boundaries visibly buy
-    throughput."""
+    throughput.  ``overlap_wire=True`` prices the async tick instead:
+    wire rides concurrently with compute, so each peer's cost is
+    ``max(compute, wire)`` — overlapped throughput is never below the
+    serial figure, and equals it at ``boundary_cost=0``."""
     if alloc and not isinstance(alloc[0], (int, float)):
         spans = [tuple(a) for a in alloc]
         n_stages = len(stage_costs) if stage_costs else \
@@ -354,7 +373,7 @@ def pipeline_throughput(alloc, peer_speed=1.0,
         speeds = (list(peer_speed) if isinstance(peer_speed, (list, tuple))
                   else [float(peer_speed)] * len(spans))
         rate = span_stage_rates(spans, speeds, n_stages, stage_costs,
-                                boundary_cost)
+                                boundary_cost, overlap_wire)
         return min(rate) if rate else 0.0
     costs = stage_costs or [1.0] * len(alloc)
     if any(a <= 0 for a in alloc):
@@ -362,7 +381,7 @@ def pipeline_throughput(alloc, peer_speed=1.0,
     n_stages = len(alloc)
     return min(
         a * peer_speed / max(_span_cost((s, s + 1), costs, boundary_cost,
-                                        n_stages), 1e-12)
+                                        n_stages, overlap_wire), 1e-12)
         for s, (a, c) in enumerate(zip(alloc, costs)))
 
 

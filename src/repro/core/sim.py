@@ -10,6 +10,10 @@ generators that ``yield`` commands:
     yield res.acquire()      — exclusive resource (a GPU, a link); pair with
     res.release()
     yield Spawn(gen)         — start a child process
+    yield link.transfer(dur, nbytes)
+                             — await an in-flight transfer: the bytes
+                             occupy the LINK for ``dur``, not the
+                             issuing process or any compute queue
 
 A fired :class:`Event` may carry a value or an exception (peer failures
 propagate into whoever awaits them — that is how trainers observe faults).
@@ -92,6 +96,52 @@ class Resource:
             self.busy = False
 
 
+class Link:
+    """In-flight transfer primitive: one direction of a peer's NIC.
+
+    A ``transfer`` occupies the LINK for its duration — never the
+    issuing process or a compute queue — so boundary tensors ride the
+    wire while the peer computes the next microbatch (the async tick's
+    overlap lever).  Transfers serialize FIFO on the link's bandwidth:
+    a transfer issued while another is on the wire starts when the link
+    frees up.  The returned :class:`Event` fires when the bytes have
+    landed; callers that need the payload await it, callers that only
+    produce it keep going.
+    """
+
+    def __init__(self, sim: "Sim"):
+        self.sim = sim
+        self._free_at = 0.0          # virtual time the link drains
+        self.busy_time = 0.0         # cumulative occupied seconds
+        self.bytes_total = 0.0       # cumulative bytes put on the wire
+        self.inflight = 0            # transfers currently on the wire
+
+    def transfer(self, duration: float, nbytes: float = 0.0) -> Event:
+        ev = Event(self.sim)
+        begin = max(self.sim.now, self._free_at)
+        end = begin + duration
+        self._free_at = end
+        self.busy_time += duration
+        self.bytes_total += nbytes
+        self.inflight += 1
+        self.sim.spawn(self._complete(ev, end - self.sim.now))
+        return ev
+
+    def occupy(self, duration: float, nbytes: float = 0.0) -> None:
+        """Account occupancy without a completion event — the far side
+        of a point-to-point transfer (the receiving link owns the
+        event; the sending link is just busy for the window)."""
+        begin = max(self.sim.now, self._free_at)
+        self._free_at = begin + duration
+        self.busy_time += duration
+        self.bytes_total += nbytes
+
+    def _complete(self, ev: Event, dt: float):
+        yield Sleep(dt)
+        self.inflight -= 1
+        ev.fire()
+
+
 class Sim:
     def __init__(self):
         self.now = 0.0
@@ -114,6 +164,9 @@ class Sim:
 
     def resource(self) -> Resource:
         return Resource(self)
+
+    def link(self) -> Link:
+        return Link(self)
 
     # -------------------------------------------------------- stepping
     def _step_process(self, gen: Generator, value: Any,

@@ -59,6 +59,27 @@ def _as_span(stage: "int | range") -> range:
 
 @dataclasses.dataclass
 class SwarmConfig:
+    """Swarm-level knobs (the architecture lives in ``ArchConfig``).
+
+    The async tick is controlled by two fields:
+
+    * ``overlap`` — boundary tensors ride the peers' NIC links as
+      in-flight transfers (priced end-to-end at the sending/receiving
+      pair's bottleneck) instead of two blocking serial sleeps, and
+      stage math goes through the executors' dispatch/collect pair.
+      Pure timing: the training trajectory is unchanged (bitwise under
+      deterministic routing — the equivalence suite asserts it).
+    * ``staleness`` — ATOM-style bounded staleness for the All-Reduce
+      window: the optimizer step's numerics are applied at the barrier
+      instant while the communication window runs *concurrently* with
+      the next round's compute; at most ``staleness`` windows may be in
+      flight before the next barrier blocks on the oldest.  Any value
+      > 0 wraps the optimizer in ``delayed_parameter_updates`` (DPU,
+      paper §3.2: fold step t's grads while t+1 computes), so the
+      trajectory equals the sequential DPU(delay=1) reference; 0 keeps
+      today's fully synchronous barrier bitwise.  ``dpu=True`` is the
+      historical spelling of ``staleness=1``.
+    """
     n_stages: int = 3
     microbatch_size: int = 1
     seq_len: int = 128
@@ -79,6 +100,10 @@ class SwarmConfig:
     compress: "bool | str | None" = None
     quant_block: int = 64
     dpu: bool = False
+    # async tick (see class docstring): in-flight boundary transfers +
+    # dispatch/collect execution, and the bounded-staleness All-Reduce
+    overlap: bool = False
+    staleness: int = 0
     max_steps: Optional[int] = None
     allreduce_bw: float = 50e6           # bytes/s effective per peer
     trainer_max_retries: int = 50        # per-attempt routing retries
@@ -115,6 +140,12 @@ class SwarmConfig:
         if self.codec != "auto" and self.codec not in codecs.MODES:
             raise ValueError(f"unknown codec {self.codec!r}; expected "
                              f"'auto' or one of {codecs.MODES}")
+        if self.staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got "
+                             f"{self.staleness}")
+        if self.dpu:
+            # historical spelling of the bounded-staleness knob
+            self.staleness = max(self.staleness, 1)
 
 
 class SwarmRunner:
@@ -127,7 +158,16 @@ class SwarmRunner:
                  record_accumulation: bool = False):
         self.cfg = cfg
         self.scfg = scfg
+        if scfg.staleness > 0:
+            # bounded staleness implies DPU: the step applies the grads
+            # banked one round ago while this round's fold rides the
+            # concurrent All-Reduce window (paper §3.2; ATOM).  Wrapping
+            # here keeps checkpoints, the reference init, and every
+            # export/adopt consistent with the wrapped state shape.
+            from repro.optim.dpu import delayed_parameter_updates
+            optimizer = delayed_parameter_updates(optimizer, delay=1)
         self.optimizer = optimizer
+        self.overlap = bool(scfg.overlap)
         self.numeric = numeric
         self.sim = Sim()
         self.dht = DHT(lambda: self.sim.now)
@@ -173,6 +213,7 @@ class SwarmRunner:
 
         # training progress
         self.stopped = False
+        self._t_stopped: Optional[float] = None   # virtual stop instant
         self._mb_counter = 0
         self._inflight = 0
         self._dispatch_paused = False
@@ -198,7 +239,14 @@ class SwarmRunner:
                                      # fused boundaries charge nothing)
             "ckpt_restores": [],     # (stage, restored-from step)
             "rollbacks": [],         # (step rolled back from, to)
+            # async-tick accounting (overlap mode): what the same edges
+            # would have cost serially vs what the in-flight transfers
+            # actually took; run() derives overlap_fraction/peer_idle_s
+            "wire_serial_s": 0.0,
+            "wire_inflight_s": 0.0,
+            "inflight_bytes": 0.0,
         }
+        self._ar_pending: list = []  # unfinished All-Reduce windows
         self._samples_done_total = 0
         self._flops_per_sample_total = 0.0
         self._default_ds = None      # built once, on first use
@@ -241,8 +289,8 @@ class SwarmRunner:
         peers go back through the runner's shared executors."""
         if peer.executor is None:
             return None
-        from repro.runtime import MeshExecutor
-        if isinstance(peer.executor, MeshExecutor):
+        from repro.runtime import MeshExecutor, MeshSpanExecutor
+        if isinstance(peer.executor, (MeshExecutor, MeshSpanExecutor)):
             return peer.executor.for_span(span)
         return self._span_executor(span)
 
@@ -451,6 +499,18 @@ class SwarmRunner:
         this per hop edge — span-fused boundaries never do)."""
         self.metrics["wire_bytes"] += nbytes
 
+    def count_inflight_wire(self, serial_s: float, actual_s: float,
+                            nbytes: float):
+        """One in-flight edge landed (overlap mode): ``serial_s`` is what
+        the blocking send+recv pair would have cost, ``actual_s`` what
+        the trainer really waited.  Clamped per edge: a wait beyond the
+        serial estimate is FIFO queueing on a contended link (the sync
+        path priced NICs as infinitely parallel), not negative overlap,
+        so it must not cancel savings other edges genuinely hid."""
+        self.metrics["wire_serial_s"] += serial_s
+        self.metrics["wire_inflight_s"] += min(actual_s, serial_s)
+        self.metrics["inflight_bytes"] += nbytes
+
     # ================================================== gradient sync
     def accumulate(self, peer: Peer, gp: Optional[Tree], mb: Microbatch,
                    loss: Optional[float], stage: Optional[int] = None
@@ -493,6 +553,9 @@ class SwarmRunner:
         full global batch accumulated at every stage.  Lost indices are
         re-issued by ``next_microbatch`` (via the ledger) concurrently —
         there is no separate recompute budget to over- or under-open."""
+        if self.scfg.staleness > 0:
+            yield from self._sync_loop_async()
+            return
         while not self.stopped:
             # barrier: every stage holds every index AND nothing is in
             # flight (an in-flight re-issue may still run stale thunks
@@ -509,6 +572,46 @@ class SwarmRunner:
             if (self.scfg.max_steps is not None
                     and self.step >= self.scfg.max_steps):
                 self.stopped = True
+                self._t_stopped = self.sim.now
+
+    def _sync_loop_async(self):
+        """Bounded-staleness barrier (ATOM-style; ``scfg.staleness`` > 0):
+        the step's numerics apply ATOMICALLY at the barrier instant
+        (identical gradients and install order to the sync path, so the
+        trajectory equals the sequential DPU reference), while the
+        All-Reduce *time* rides a concurrent window off the critical
+        path — the next round's compute starts immediately.  At most
+        ``staleness`` windows may be unfinished before the next barrier
+        blocks on the oldest; dispatch never pauses (no yields between
+        barrier detection and round reopen)."""
+        last_barrier = 0.0
+        while not self.stopped:
+            if not self.ledger.complete() or self._inflight > 0:
+                yield Sleep(0.2)
+                continue
+            self._ar_pending = [ev for ev in self._ar_pending
+                                if not ev.fired]
+            while len(self._ar_pending) >= self.scfg.staleness:
+                yield self._ar_pending[0].wait()
+                self._ar_pending = [ev for ev in self._ar_pending
+                                    if not ev.fired]
+            total = self._all_reduce_and_step_now()
+            # step_time = inter-barrier interval: with the window off
+            # the critical path this is the number to compare to sync
+            self.metrics["step_time"].append(self.sim.now - last_barrier)
+            last_barrier = self.sim.now
+            ev = self.sim.event()
+            self._ar_pending.append(ev)
+            self.sim.spawn(self._ar_window(total, ev))
+            self._open_round()
+            if (self.scfg.max_steps is not None
+                    and self.step >= self.scfg.max_steps):
+                self.stopped = True
+                self._t_stopped = self.sim.now
+
+    def _ar_window(self, duration: float, ev):
+        yield Sleep(duration)
+        ev.fire()
 
     def _log_releases(self, lost: list[tuple[int, int]], peer_id: str):
         if self.record_accumulation:
@@ -525,6 +628,41 @@ class SwarmRunner:
         state adoptions defer until the window closes (see ``_migrate``
         / ``_download_state``).  A span peer is a member of every
         covered stage's group, with per-stage grads/tokens/install."""
+        plan = self._ar_plan()
+        for s, group, ar_time, new_params, new_opt in plan:
+            yield Sleep(ar_time)
+            self._ar_install(s, group, new_params, new_opt)
+        self.step += 1
+        self._maybe_checkpoint()
+
+    def _all_reduce_and_step_now(self) -> float:
+        """Async-barrier variant: identical numerics, applied atomically
+        at the barrier instant (no yields at all); returns the total
+        All-Reduce time for the concurrent window."""
+        plan = self._ar_plan()
+        total = 0.0
+        for s, group, ar_time, new_params, new_opt in plan:
+            total += ar_time
+            self._ar_install(s, group, new_params, new_opt)
+        self.step += 1
+        self._maybe_checkpoint()
+        return total
+
+    def _ar_install(self, s: int, group: list, new_params, new_opt):
+        for p in group:
+            if not p.alive:      # died inside the ring: state is dead
+                continue
+            if self.numeric:
+                # install + re-place on the peer's backend, bump the
+                # version, zero the accumulator — per covered stage
+                p.executor.adopt_step(p.state, new_params, new_opt,
+                                      stage=s)
+            else:
+                p.state.stage_view(s).zero_grads()
+
+    def _ar_plan(self):
+        """Gradient averaging + optimizer step per stage, computed with
+        NO yields — shared by the sync and bounded-staleness barriers."""
         if self.record_accumulation:
             self.ledger_log.append(("step", self.step, -1, -1, 0, ""))
         plan = []
@@ -565,20 +703,7 @@ class SwarmRunner:
                 if s == self.n_stages - 1 and total_tokens:
                     self.metrics["loss"].append(loss_sum / total_tokens)
             plan.append((s, group, ar_time, new_params, new_opt))
-        for s, group, ar_time, new_params, new_opt in plan:
-            yield Sleep(ar_time)
-            for p in group:
-                if not p.alive:      # died inside the ring: state is dead
-                    continue
-                if self.numeric:
-                    # install + re-place on the peer's backend, bump the
-                    # version, zero the accumulator — per covered stage
-                    p.executor.adopt_step(p.state, new_params, new_opt,
-                                          stage=s)
-                else:
-                    p.state.stage_view(s).zero_grads()
-        self.step += 1
-        self._maybe_checkpoint()
+        return plan
 
     # ================================================== rebalancing
     def _rebalance_loop(self):
@@ -993,14 +1118,10 @@ class SwarmRunner:
                 q = sum(p.queue_size() for p in group)
                 loads.append((q + 1) / max(len(group), 1e-9))
             span = _as_span(int(np.argmax(loads)))
-        # preemptible instances coming back reuse their peer object — but
-        # only a backend that can serve the join span (a dead mesh slice
-        # cannot come back as a fused span peer: MeshExecutor.for_span
-        # refuses width > 1, so a span join gets a fresh peer instead)
-        from repro.runtime import MeshExecutor
-        dead = [p for p in self.peers.values() if not p.alive
-                and not (len(span) > 1
-                         and isinstance(p.executor, MeshExecutor))]
+        # preemptible instances coming back reuse their peer object (a
+        # revived mesh slice can now serve any span: MeshExecutor
+        # .for_span(width > 1) builds a MeshSpanExecutor)
+        dead = [p for p in self.peers.values() if not p.alive]
         if dead:
             peer = dead[0]
             # a revived peer keeps its backend (a mesh slice coming back
@@ -1026,6 +1147,22 @@ class SwarmRunner:
             # _sync_loop reads scfg.max_steps each iteration via self.scfg
         self.sim.run(until=until)
         self.stopped = True
+        # derived async-tick metrics (all-zero / empty-ratio in sync
+        # runs): per-peer executor idle time and how much of the serial
+        # wire cost the in-flight transfers hid.  Idle intervals close
+        # at the instant training STOPPED, not at `until` — a max_steps
+        # run drains the virtual clock to the horizon afterwards, and
+        # that dead time is not executor idleness.
+        t_end = min(self.sim.now, self._t_stopped
+                    if self._t_stopped is not None else self.sim.now)
+        m = self.metrics
+        m["peer_idle_s"] = {pid: p.total_idle(t_end)
+                            for pid, p in self.peers.items()}
+        # clamp: an all-span swarm has no peer-to-peer edge to hide, so
+        # inflight == serial up to float noise — report 0, not -1e-15
+        m["overlap_fraction"] = max(0.0, (
+            1.0 - m["wire_inflight_s"] / m["wire_serial_s"]
+            if m["wire_serial_s"] > 0 else 0.0))
         return self.metrics
 
     def throughput(self, window: float = None) -> float:

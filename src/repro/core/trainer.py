@@ -100,6 +100,11 @@ class Trainer:
         swarm = self.swarm
         S = swarm.n_stages
         numeric = swarm.numeric
+        # async tick: boundary tensors ride the peers' NIC links
+        # (in-flight, priced end-to-end at the pair's bottleneck) instead
+        # of two blocking Sleeps, and stage math goes through the
+        # executors' dispatch/collect pair.  The sync path is untouched.
+        overlap = bool(getattr(swarm, "overlap", False))
         hops: list[_Hop] = []
 
         # ---------------- forward (hop chain over spans)
@@ -132,7 +137,20 @@ class Trainer:
                 mb.n_tokens * 4.0
             t0 = self.sim.now
             try:
-                yield Sleep(peer.profile.recv_time(nbytes))
+                if overlap:
+                    # one in-flight transfer prices the whole edge at the
+                    # pair's bottleneck (vs the serial send + recv pair);
+                    # the sender's uplink is occupied, never its queue
+                    prev = hops[-1].peer if hops else None
+                    serial = peer.profile.recv_time(nbytes) + (
+                        prev.profile.send_time(nbytes)
+                        if prev is not None else 0.0)
+                    tw = self.sim.now
+                    yield peer.recv(nbytes, frm=prev).wait()
+                    swarm.count_inflight_wire(
+                        serial, self.sim.now - tw, nbytes)
+                else:
+                    yield Sleep(peer.profile.recv_time(nbytes))
                 if s > 0:        # a real host boundary crossing
                     swarm.count_wire_bytes(nbytes)
                 inp = x
@@ -142,7 +160,19 @@ class Trainer:
                     # wire tensor that crosses to the next hop (codec
                     # round trips, mesh host-gathers — all backend-owned;
                     # fused boundaries never surface here)
-                    if covers_last:
+                    if overlap:
+                        # dispatch/collect: the jit is issued the moment
+                        # the thunk runs; collect() blocks on the futures
+                        if covers_last:
+                            thunk = (lambda _p=peer, _i=inp:
+                                     _p.executor.dispatch_fwd(
+                                         _p.state, _i, mb.labels)())
+                        else:
+                            thunk = (lambda _p=peer, _i=inp:
+                                     _p.executor.wire_fwd(
+                                         _p.executor.dispatch_fwd(
+                                             _p.state, _i)()))
+                    elif covers_last:
                         thunk = (lambda _p=peer, _i=inp:
                                  _p.executor.run_fwd(_p.state, _i,
                                                      mb.labels))
@@ -155,8 +185,15 @@ class Trainer:
                 ct = swarm.compute_time(peer, "fwd", s, mb)
                 y = yield peer.submit("fwd", ct, thunk).wait()
                 # response travels back / onward
-                yield Sleep(peer.profile.send_time(
-                    self._boundary_bytes(mb) if not covers_last else 64.0))
+                if overlap:
+                    if covers_last:     # the scalar loss back to us
+                        yield peer.send(64.0).wait()
+                    # else: the next hop's recv prices this edge once,
+                    # end-to-end — nothing to wait on here
+                else:
+                    yield Sleep(peer.profile.send_time(
+                        self._boundary_bytes(mb)
+                        if not covers_last else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 hops.append(_Hop(peer, span, inp))
                 x = y
@@ -171,6 +208,7 @@ class Trainer:
         # ---------------- backward (reverse hop chain, re-routable)
         loss_sum = float(x) if numeric else 0.0
         dy = None
+        bwd_prev: Optional[Peer] = None   # who produced the dy in hand
         h = len(hops) - 1
         retries = 0
         while h >= 0:
@@ -199,11 +237,36 @@ class Trainer:
             nbytes = self._boundary_bytes(mb)
             t0 = self.sim.now
             try:
-                yield Sleep(peer.profile.recv_time(nbytes))
+                if overlap:
+                    serial = peer.profile.recv_time(nbytes) + (
+                        bwd_prev.profile.send_time(nbytes)
+                        if bwd_prev is not None else 0.0)
+                    tw = self.sim.now
+                    yield peer.recv(nbytes, frm=bwd_prev).wait()
+                    swarm.count_inflight_wire(
+                        serial, self.sim.now - tw, nbytes)
+                else:
+                    yield Sleep(peer.profile.recv_time(nbytes))
                 if not covers_last:      # a cotangent really crossed
                     swarm.count_wire_bytes(nbytes)
                 if numeric:
-                    if covers_last:
+                    if overlap:
+                        if covers_last:
+                            def thunk(_p=peer, _i=hop.inp):
+                                collect = _p.executor.dispatch_bwd(
+                                    _p.state, _i, labels=mb.labels)
+                                loss, gx, gp = collect()
+                                self.swarm.accumulate(_p, gp, mb,
+                                                      float(loss))
+                                return _p.executor.wire_bwd(gx)
+                        else:
+                            def thunk(_p=peer, _i=hop.inp, _dy=dy):
+                                collect = _p.executor.dispatch_bwd(
+                                    _p.state, _i, dy=_dy)
+                                _, gx, gp = collect()
+                                self.swarm.accumulate(_p, gp, mb, None)
+                                return _p.executor.wire_bwd(gx)
+                    elif covers_last:
                         def thunk(_p=peer, _i=hop.inp):
                             loss, gx, gp = _p.executor.run_bwd(
                                 _p.state, _i, labels=mb.labels)
@@ -226,10 +289,16 @@ class Trainer:
                         return None
                 ct = swarm.compute_time(peer, "bwd", hop.span.start, mb)
                 gx = yield peer.submit("bwd", ct, thunk).wait()
-                yield Sleep(peer.profile.send_time(
-                    nbytes if hop.span.start > 0 else 64.0))
+                if overlap:
+                    if hop.span.start == 0:   # grads landed: tiny ack
+                        yield peer.send(64.0).wait()
+                    # else: the next hop's recv prices this edge
+                else:
+                    yield Sleep(peer.profile.send_time(
+                        nbytes if hop.span.start > 0 else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 dy = gx
+                bwd_prev = peer
                 h -= 1
                 retries = 0
             except PeerFailure:

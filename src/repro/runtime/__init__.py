@@ -12,10 +12,13 @@ Layering (see README "Architecture"):
         ├── MeshExecutor      — the same stage step sharded over a device
         │                       mesh via repro.dist sharding rules
         │                       (data-parallel within the peer)
-        └── PipelineExecutor  — a contiguous SPAN of stages [lo, hi)
-                                fused into one jit (square-cube: strong
-                                peers hold more of the model); intra-span
-                                boundaries never cross the host
+        ├── PipelineExecutor  — a contiguous SPAN of stages [lo, hi)
+        │                       fused into one jit (square-cube: strong
+        │                       peers hold more of the model); intra-span
+        │                       boundaries never cross the host
+        └── MeshSpanExecutor  — span fusion × mesh backing: the fused
+                                span step sharded over a device mesh,
+                                intra-span boundaries device-to-device
 """
 from repro.runtime.base import StageExecutor, StageState, host_snapshot
 from repro.runtime.stage_model import (SpanProgram, StageProgram,
@@ -25,14 +28,15 @@ from repro.runtime.stage_model import (SpanProgram, StageProgram,
 from repro.runtime.numeric import (NumericExecutor, build_numeric_executors,
                                    compile_stats, get_span_program,
                                    get_stage_programs, reset_compile_stats)
-from repro.runtime.mesh import MeshExecutor
+from repro.runtime.mesh import MeshExecutor, MeshSpanExecutor
 from repro.runtime.pipeline import PipelineExecutor
 
 __all__ = [
     "StageExecutor", "StageState", "host_snapshot",
     "StageProgram", "SpanProgram", "build_stage_programs",
     "build_span_program", "init_stage_params",
-    "NumericExecutor", "MeshExecutor", "PipelineExecutor",
+    "NumericExecutor", "MeshExecutor", "MeshSpanExecutor",
+    "PipelineExecutor",
     "build_numeric_executors", "get_stage_programs", "get_span_program",
     "compile_stats", "reset_compile_stats",
 ]

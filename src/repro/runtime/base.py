@@ -41,7 +41,7 @@ all its peers resumes from the latest completed step instead of step 0
 """
 from __future__ import annotations
 
-from typing import Any, Hashable, Iterable, Optional, Protocol, \
+from typing import Any, Callable, Hashable, Iterable, Optional, Protocol, \
     runtime_checkable
 
 import jax
@@ -246,6 +246,30 @@ class StageExecutor(Protocol):
         return a dict keyed by *global stage id* so the scheduler can
         fold each covered stage independently (the ledger may admit a
         subset)."""
+        ...
+
+    # ------------------------------------------------- dispatch / collect
+    def dispatch_fwd(self, state: StageState, inp: Tree,
+                     labels: Optional[jax.Array] = None
+                     ) -> Callable[[], Tree]:
+        """Issue the span forward NOW and return a zero-arg *collect*
+        thunk for its result.  The async tick's executor-side lever: on
+        real hardware JAX dispatches the computation and returns before
+        it finishes, so the peer can start microbatch ``k+1`` (or put
+        ``k``'s boundary on the wire) while ``k`` still runs; calling
+        the thunk blocks until the result is materialized.  Semantically
+        ``collect()`` must equal ``run_fwd(state, inp, labels)`` —
+        backends where dispatch is synchronous just close over the
+        finished value."""
+        ...
+
+    def dispatch_bwd(self, state: StageState, inp: Tree,
+                     dy: Optional[Tree] = None,
+                     labels: Optional[jax.Array] = None
+                     ) -> Callable[[], tuple[Optional[float],
+                                             Optional[Tree], Tree]]:
+        """Issue the span backward NOW; the returned thunk yields
+        ``(loss, gx, gp)`` exactly as ``run_bwd`` would."""
         ...
 
     # --------------------------------------------------------- wire codec

@@ -36,6 +36,7 @@ from repro.dist.constrain import resolve_spec
 from repro.dist.sharding import ShardingRules, DEFAULT_RULES, \
     stage_param_shardings
 from repro.models.config import ArchConfig
+from repro.models import params as P
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
     install_snapshot, single_stage, slot_export, slot_install, \
     wire_bwd_codec, wire_fwd_codec
@@ -160,13 +161,13 @@ class MeshExecutor:
                             self.mesh, self.compress_mode,
                             self.quant_block, self.rules, self.batch_axis)
 
-    def for_span(self, span: range) -> "MeshExecutor":
-        if len(span) != 1:
-            raise NotImplementedError(
-                "mesh-backed span serving is pending the async/DPU "
-                "overlap work (ROADMAP) — fuse spans on the "
-                "PipelineExecutor backend instead")
-        return self.for_stage(span.start)
+    def for_span(self, span: range):
+        if len(span) == 1:
+            return self.for_stage(span.start)
+        return MeshSpanExecutor(self.cfg, self.n_stages, self.seq_len,
+                                (span.start, span.stop), self.mesh,
+                                self.compress_mode, self.quant_block,
+                                self.rules, self.batch_axis)
 
     def dp_shards(self, batch: int) -> int:
         """Actual data-parallel split of a ``batch``-sized microbatch —
@@ -198,6 +199,20 @@ class MeshExecutor:
             return loss, gx, gp
         gx, gp = self._bwd_j(state.params, inp, self._place_batch(dy))
         return None, gx, gp
+
+    # ------------------------------------------------- dispatch / collect
+    def dispatch_fwd(self, state: StageState, inp: Tree,
+                     labels: Optional[jax.Array] = None):
+        # the sharded jit dispatches asynchronously across the mesh;
+        # collect hands over the in-flight futures
+        y = self.run_fwd(state, inp, labels)
+        return lambda: y
+
+    def dispatch_bwd(self, state: StageState, inp: Tree,
+                     dy: Optional[Tree] = None,
+                     labels: Optional[jax.Array] = None):
+        out = self.run_bwd(state, inp, dy, labels)
+        return lambda: out
 
     # --------------------------------------------------------- wire codec
     def wire_fwd(self, y: Tree) -> Tree:
@@ -267,3 +282,266 @@ class MeshExecutor:
                   stage: Optional[int] = None) -> None:
         single_stage(self, stage)
         state.drop_slot(name, key)
+
+
+class MeshSpanExecutor:
+    """Stages ``[lo, hi)`` fused in ONE jit, sharded over a device mesh.
+
+    Combines :class:`~repro.runtime.pipeline.PipelineExecutor`'s span
+    fusion with :class:`MeshExecutor`'s placement: intra-span boundaries
+    stay device-to-device *inside* the sharded jit (no host round-trip
+    between covered stages), while state remains per-stage-keyed — each
+    covered stage keeps mesh-placed params/opt/accumulator of exactly
+    the single-stage shape, so All-Reduce groups, checkpoint cuts, and
+    span ↔ single hand-offs interoperate unchanged (the span
+    snapshot-interop tests run against this backend too)."""
+
+    def __init__(self, cfg: ArchConfig, n_stages: int, seq_len: int,
+                 span: tuple[int, int], mesh: jax.sharding.Mesh,
+                 compress: Optional[str] = None, quant_block: int = 64,
+                 rules: Optional[ShardingRules] = None,
+                 batch_axis: str = "data"):
+        lo, hi = span
+        if not (0 <= lo < hi <= n_stages):
+            raise ValueError(f"span [{lo}, {hi}) outside [0, {n_stages})")
+        self.cfg = cfg
+        self.n_stages = n_stages
+        self.seq_len = seq_len
+        self.span = (lo, hi)
+        self.stage = lo                       # entry stage
+        self.mesh = mesh
+        self.rules = rules or DEFAULT_RULES
+        self.batch_axis = batch_axis
+        self.compress_mode = codecs.resolve_mode(cfg, compress)
+        self.quant_block = quant_block
+        self.device_count = int(np.prod(
+            [mesh.shape[a] for a in mesh.axis_names]))
+        # the same fused program object PipelineExecutor runs — mesh
+        # span peers are bitwise siblings of single-device span peers
+        self.prog = numeric_rt.get_span_program(
+            cfg, n_stages, seq_len, (lo, hi), self.compress_mode)
+        self.fwd_flops_per_token = self.prog.fwd_flops_per_token
+        self.bwd_flops_per_token = self.prog.bwd_flops_per_token
+        self.param_shardings = {
+            s: stage_param_shardings(self.prog.specs[s], mesh, self.rules)
+            for s in self.stages}
+        self._repl = jax.sharding.NamedSharding(
+            mesh, jax.sharding.PartitionSpec())
+        self._treedefs = {s: jax.tree.structure(self.param_shardings[s])
+                          for s in self.stages}
+        self._fwd_j, self._bwd_j = self._get_jits()
+
+    @property
+    def stages(self) -> range:
+        return range(*self.span)
+
+    # ------------------------------------------------------------ helpers
+    def _get_jits(self):
+        key = ((self.cfg, self.n_stages, self.seq_len, self.compress_mode),
+               self.span, _mesh_fingerprint(self.mesh))
+        with _LOCK:
+            hit = _MESH_JITS.get(key)
+        if hit is not None:
+            return hit
+        tag = (self.cfg.name, self.n_stages, self.seq_len,
+               self.compress_mode)
+
+        def hook(span_id, kind, shapes):
+            numeric_rt.record_trace(tag + (span_id, "mesh", kind, shapes))
+
+        jits = (_traced(self.prog.fwd_fn, hook, self.span, "fwd"),
+                _traced(self.prog.bwd_fn, hook, self.span, "bwd"))
+        with _LOCK:
+            jits = _MESH_JITS.setdefault(key, jits)
+        return jits
+
+    def _batch_sharding(self, x) -> jax.sharding.NamedSharding:
+        x = np.asarray(x) if not hasattr(x, "shape") else x
+        axes = [self.batch_axis] + [None] * (x.ndim - 1)
+        return jax.sharding.NamedSharding(
+            self.mesh, resolve_spec(axes, x.shape, self.mesh))
+
+    def _place_batch(self, x):
+        if x is None:
+            return None
+        return jax.device_put(jnp.asarray(x), self._batch_sharding(x))
+
+    def _place_params(self, params: Tree, stage: int) -> Tree:
+        return jax.tree.map(
+            lambda x, sh: jax.device_put(jnp.asarray(x), sh),
+            params, self.param_shardings[stage])
+
+    def _place_opt(self, opt: Tree, stage: int) -> Tree:
+        if opt is None:
+            return None
+
+        def place(sub):
+            if jax.tree.structure(sub) == self._treedefs[stage]:
+                return self._place_params(sub, stage)
+            if isinstance(sub, dict):
+                return {k: place(v) for k, v in sub.items()}
+            return jax.device_put(jnp.asarray(sub), self._repl)
+
+        return place(opt)
+
+    def _params_tuple(self, state: StageState) -> tuple:
+        return tuple(state.per_stage[s].params for s in self.stages)
+
+    def _covers_last(self) -> bool:
+        return self.span[1] == self.n_stages
+
+    def _require(self, stage: Optional[int]) -> int:
+        if stage is None:
+            raise ValueError(
+                f"span executor [{self.span[0]}, {self.span[1]}) needs an "
+                "explicit covered stage for per-stage state operations")
+        if stage not in self.stages:
+            raise ValueError(f"stage {stage} outside span {self.span}")
+        return stage
+
+    # ---------------------------------------------------------- lifecycle
+    def init_state(self, key: jax.Array) -> StageState:
+        state = StageState(per_stage={})
+        keys = jax.random.split(key, len(self.stages))
+        for k, s in zip(keys, self.stages):
+            sub = StageState(params=self._place_params(
+                P.init(k, self.prog.specs[s]), s))
+            sub.reset_progress()
+            state.per_stage[s] = sub
+        return state
+
+    def for_span(self, span: range):
+        if (span.start, span.stop) == self.span:
+            return self
+        if len(span) == 1:
+            return MeshExecutor(self.cfg, self.n_stages, self.seq_len,
+                                span.start, self.mesh, self.compress_mode,
+                                self.quant_block, self.rules,
+                                self.batch_axis)
+        return MeshSpanExecutor(self.cfg, self.n_stages, self.seq_len,
+                                (span.start, span.stop), self.mesh,
+                                self.compress_mode, self.quant_block,
+                                self.rules, self.batch_axis)
+
+    def for_stage(self, stage: int):
+        return self.for_span(range(stage, stage + 1))
+
+    def dp_shards(self, batch: int) -> int:
+        n = int(self.mesh.shape.get(self.batch_axis, 1))
+        return n if n > 1 and batch % n == 0 else 1
+
+    def session_program(self, total_len: int):
+        raise NotImplementedError(
+            "mesh-backed serving is pending the sharded-decode work "
+            "(ROADMAP) — serve spans on the numeric/pipeline backends")
+
+    # ---------------------------------------------------------- execution
+    def run_fwd(self, state: StageState, inp: Tree,
+                labels: Optional[jax.Array] = None) -> Tree:
+        ps = self._params_tuple(state)
+        inp = self._place_batch(inp)
+        if self._covers_last():
+            return self._fwd_j(ps, inp, self._place_batch(labels))
+        return self._fwd_j(ps, inp)
+
+    def run_bwd(self, state: StageState, inp: Tree,
+                dy: Optional[Tree] = None,
+                labels: Optional[jax.Array] = None):
+        ps = self._params_tuple(state)
+        inp = self._place_batch(inp)
+        if self._covers_last():
+            loss, gx, gp = self._bwd_j(ps, inp, self._place_batch(labels))
+        else:
+            loss = None
+            gx, gp = self._bwd_j(ps, inp, self._place_batch(dy))
+        gp = {s: g for s, g in zip(self.stages, gp)}
+        return loss, gx, gp
+
+    # ------------------------------------------------- dispatch / collect
+    def dispatch_fwd(self, state: StageState, inp: Tree,
+                     labels: Optional[jax.Array] = None):
+        y = self.run_fwd(state, inp, labels)
+        return lambda: y
+
+    def dispatch_bwd(self, state: StageState, inp: Tree,
+                     dy: Optional[Tree] = None,
+                     labels: Optional[jax.Array] = None):
+        out = self.run_bwd(state, inp, dy, labels)
+        return lambda: out
+
+    # --------------------------------------------------------- wire codec
+    def wire_fwd(self, y: Tree) -> Tree:
+        return jax.device_get(wire_fwd_codec(self, y))
+
+    def wire_bwd(self, gx: Tree) -> Tree:
+        gx = wire_bwd_codec(self, gx)
+        return None if gx is None else jax.device_get(gx)
+
+    # -------------------------------------------------------- accumulation
+    def accumulate(self, state: StageState, gp: Optional[Tree],
+                   loss: Optional[float], n_tokens: int,
+                   stage: Optional[int] = None) -> None:
+        s = self._require(stage)
+        fold_into(state.per_stage[s], gp, loss, n_tokens)
+
+    def export_grads(self, state: StageState,
+                     stage: Optional[int] = None) -> Tree:
+        return jax.device_get(
+            state.per_stage[self._require(stage)].grad_acc)
+
+    def export_state(self, state: StageState,
+                     stage: Optional[int] = None):
+        sub = state.per_stage[self._require(stage)]
+        return jax.device_get(sub.params), jax.device_get(sub.opt)
+
+    def adopt_step(self, state: StageState, new_params: Tree,
+                   new_opt: Tree, stage: Optional[int] = None) -> None:
+        s = self._require(stage)
+        sub = state.per_stage[s]
+        sub.params = self._place_params(new_params, s)
+        sub.opt = self._place_opt(new_opt, s)
+        sub.version += 1
+        sub.reset_progress()
+
+    # ---------------------------------------------------- state transfer
+    def snapshot(self, state: StageState, stage: Optional[int] = None,
+                 slots=()) -> Tree:
+        if stage is None:
+            return {"per_stage": {
+                s: host_snapshot(state.per_stage[s], slots=slots)
+                for s in self.stages}}
+        return host_snapshot(state.per_stage[self._require(stage)],
+                             slots=slots)
+
+    def restore(self, state: StageState, snap: Tree,
+                stage: Optional[int] = None, slots=()) -> None:
+        if state.per_stage is None:
+            state.per_stage = {}
+        if stage is None:
+            for s, sub_snap in snap["per_stage"].items():
+                self.restore(state, sub_snap, stage=int(s), slots=slots)
+            return
+        s = self._require(stage)
+        sub = state.per_stage.setdefault(s, StageState())
+        placed = dict(snap)
+        placed["params"] = self._place_params(snap["params"], s)
+        placed["opt"] = self._place_opt(snap.get("opt"), s)
+        install_snapshot(sub, placed, slots=slots, place=lambda t: t)
+
+    # ------------------------------------------------------ keyed slots
+    def export_slot(self, state: StageState, name: str, key,
+                    stage: Optional[int] = None) -> Tree:
+        return slot_export(state.per_stage[self._require(stage)], name, key)
+
+    def install_slot(self, state: StageState, name: str, key, value: Tree,
+                     stage: Optional[int] = None) -> None:
+        slot_install(state.per_stage[self._require(stage)], name, key,
+                     value)
+
+    def drop_slot(self, state: StageState, name: str, key=None,
+                  stage: Optional[int] = None) -> None:
+        if stage is None:
+            for sub in state.views():
+                sub.drop_slot(name, key)
+            return
+        state.per_stage[self._require(stage)].drop_slot(name, key)

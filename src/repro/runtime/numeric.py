@@ -205,6 +205,21 @@ class NumericExecutor:
         gx, gp = self.prog.bwd(state.params, inp, dy)
         return None, gx, gp
 
+    # ------------------------------------------------- dispatch / collect
+    def dispatch_fwd(self, state: StageState, inp: Tree,
+                     labels: Optional[jax.Array] = None):
+        # jax dispatches asynchronously: run_fwd returns device futures
+        # with the work already in flight, so issuing now and collecting
+        # later is a genuine overlap on real hardware
+        y = self.run_fwd(state, inp, labels)
+        return lambda: y
+
+    def dispatch_bwd(self, state: StageState, inp: Tree,
+                     dy: Optional[Tree] = None,
+                     labels: Optional[jax.Array] = None):
+        out = self.run_bwd(state, inp, dy, labels)
+        return lambda: out
+
     # --------------------------------------------------------- wire codec
     def wire_fwd(self, y: Tree) -> Tree:
         return wire_fwd_codec(self, y)

@@ -151,6 +151,20 @@ class PipelineExecutor:
         gp = {s: g for s, g in zip(self.stages, gp)}
         return loss, gx, gp
 
+    # ------------------------------------------------- dispatch / collect
+    def dispatch_fwd(self, state: StageState, inp: Tree,
+                     labels: Optional[jax.Array] = None):
+        # the fused span jit dispatches asynchronously; collect hands
+        # over the in-flight futures
+        y = self.run_fwd(state, inp, labels)
+        return lambda: y
+
+    def dispatch_bwd(self, state: StageState, inp: Tree,
+                     dy: Optional[Tree] = None,
+                     labels: Optional[jax.Array] = None):
+        out = self.run_bwd(state, inp, dy, labels)
+        return lambda: out
+
     # --------------------------------------------------------- wire codec
     def wire_fwd(self, y: Tree) -> Tree:
         return wire_fwd_codec(self, y)          # span-edge only
