@@ -1,12 +1,18 @@
 """Paper Table 9 / App. K: time- and cost-to-solution on reliable vs
 preemptible fleets (public on-demand/spot price sheet, mid-2021 as in the
-paper)."""
+paper) — plus the StagePlan pricing audit: per-kind stage FLOPs must sum
+to the whole-model figure, and the expert-sharded MoE boundary price must
+equal the actual routed dispatch-buffer bytes."""
 from __future__ import annotations
 
 import dataclasses
 
+import jax.numpy as jnp
+
 from repro.core import SwarmRunner, SwarmConfig, T4, V100
-from repro.models.config import ArchConfig
+from repro.models import flops as F
+from repro.models.config import ArchConfig, MoEConfig, SSMConfig
+from repro.models.stage_plan import get_stage_plan
 from repro.optim import adamw
 
 PRICES = {  # $/h, on-demand vs preemptible (paper-era public cloud)
@@ -39,9 +45,59 @@ def _fleet_throughput(n, profile, preemptible):
     return r.throughput()
 
 
+HETERO = ArchConfig(name="cost-hetero", family="dense", n_layers=4,
+                    d_model=1024, n_heads=16, n_kv_heads=16, d_ff=4096,
+                    vocab_size=30000,
+                    block_pattern=("attn", "moe", "mamba", "mlstm"),
+                    moe=MoEConfig(num_experts=8, top_k=2,
+                                  d_ff_expert=2048, expert_sharded=True),
+                    ssm=SSMConfig())
+COST_SEQ, COST_MB = 512, 8
+
+
+def _stage_flops_audit():
+    """Per-kind stage rates off the plan — one stage per kind here, so
+    each row IS one kind's price; their sum must reproduce the
+    whole-model forward FLOPs/token exactly."""
+    plan = get_stage_plan(HETERO, 4)
+    per_stage = [plan.stage_flops(s, COST_SEQ) for s in range(4)]
+    total = F.forward_flops_per_token(HETERO, COST_SEQ)
+    assert abs(sum(per_stage) - total) <= 1e-6 * total, (
+        f"per-kind stage flops drifted from the whole model: "
+        f"{sum(per_stage)} vs {total}")
+    for s, fpt in enumerate(per_stage):
+        kinds = "+".join(k for k, _ in plan.stages[s].runs)
+        print(f"cost/stage_flops/{s}_{kinds},0,"
+              f"fwd_gflops_per_token={fpt / 1e9:.3f}")
+    print(f"cost/stage_flops/total,0,sum={sum(per_stage) / 1e9:.3f}G "
+          f"whole_model={total / 1e9:.3f}G")
+
+
+def _moe_wire_audit():
+    """The boundary entering the expert-sharded MoE stage must price
+    exactly the routed dispatch buffer a real all-to-all ships: top_k
+    bf16 copies of every token's hidden state."""
+    plan = get_stage_plan(HETERO, 4)
+    T = COST_MB * COST_SEQ
+    dispatch = jnp.zeros((T * HETERO.moe.top_k, HETERO.d_model),
+                         dtype=jnp.bfloat16)
+    measured = float(dispatch.nbytes)
+    priced = plan.boundary_bytes(0, COST_MB, COST_SEQ)   # attn -> moe
+    assert priced == measured, (
+        f"expert-sharded MoE boundary price {priced} != routed "
+        f"dispatch-buffer bytes {measured}")
+    uniform = plan.boundary_bytes(1, COST_MB, COST_SEQ)  # moe -> mamba
+    assert uniform == measured / HETERO.moe.top_k
+    print(f"cost/moe_wire,0,routed={measured / 1e6:.2f}MB "
+          f"(top_k={HETERO.moe.top_k}) uniform={uniform / 1e6:.2f}MB "
+          f"priced==measured")
+
+
 def run(csv=True):
     print("# time/cost to solution (paper Table 9)")
     print("name,us_per_call,derived")
+    _stage_flops_audit()
+    _moe_wire_audit()
     for tag, n, prof, pre, paper in (
             ("8xV100_reliable", 8, V100, False,
              PAPER_TABLE9["8xV100 reliable"]),

@@ -20,7 +20,11 @@ Three headline invariants:
 * **async tick** — the same workload with in-flight boundary transfers
   and a bounded-staleness All-Reduce window (``overlap=True``,
   ``staleness=1``) is at least as fast as the blocking tick, with a
-  nonzero fraction of wire time hidden behind compute.
+  nonzero fraction of wire time hidden behind compute;
+* **heterogeneous stages** — a mixed attention+SSM 4-stage swarm
+  (``StagePlan``-driven per-kind stage runs) compiles one jit per
+  (stage, kind, shapes) with zero re-traces on a second runner, and its
+  throughput / wire bytes land in the JSON record under ``"hetero"``.
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ import os
 import time
 
 from repro.core import SwarmRunner, SwarmConfig
-from repro.models.config import ArchConfig
+from repro.models.config import ArchConfig, SSMConfig
 from repro.optim import adamw
 from repro.runtime import PipelineExecutor, compile_stats, \
     reset_compile_stats
@@ -45,6 +49,12 @@ CFG = ArchConfig(name="bench-swarm-tiny", family="dense", n_layers=4,
 CFG_CODEC = CFG.with_overrides(name="bench-swarm-tiny-codec",
                                boundary_compression="bottleneck",
                                bottleneck_dim=16)
+# mixed-kind pipeline: one layer per stage -> attn, attn, mamba, mamba
+N_STAGES_HETERO = 4
+CFG_HETERO = CFG.with_overrides(
+    name="bench-swarm-hetero",
+    block_pattern=("attn", "attn", "mamba", "mamba"),
+    ssm=SSMConfig(state_dim=8, chunk=16))
 
 
 def _scfg(codec, **kw) -> SwarmConfig:
@@ -92,6 +102,22 @@ def _run_codec(seed: int, span: bool) -> tuple[SwarmRunner, float]:
     return r, time.perf_counter() - t0
 
 
+def _run_hetero(seed: int) -> tuple[SwarmRunner, float]:
+    """Mixed attention+SSM pipeline, one layer per stage over 4 stages
+    (plan runs: attn | attn | mamba | mamba), 2 peers per stage."""
+    r = SwarmRunner(CFG_HETERO,
+                    SwarmConfig(n_stages=N_STAGES_HETERO,
+                                microbatch_size=2, seq_len=32,
+                                global_batch=8, n_trainers=3,
+                                rebalance_period=0.0, codec="none",
+                                max_steps=STEPS),
+                    adamw(lr=1e-2), numeric=True, seed=seed)
+    r.build(peers_per_stage=PEERS_PER_STAGE)
+    t0 = time.perf_counter()
+    r.run(until=1e6)
+    return r, time.perf_counter() - t0
+
+
 def _span_trace_keys(stats: dict) -> dict:
     """per_key entries belonging to fused span programs (their stage slot
     is a (lo, hi) tuple rather than an int)."""
@@ -121,6 +147,13 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     span_keys = _span_trace_keys(span_stats)
     rs_span2, _ = _run_codec(seed=1, span=True)   # warm span cache
     span_stats2 = compile_stats()
+
+    # ---- heterogeneous stage kinds (StagePlan-driven per-kind runs)
+    reset_compile_stats()
+    rh, wall_h = _run_hetero(seed=0)
+    hetero_first = compile_stats()
+    _run_hetero(seed=1)                  # same shapes: cache hits only
+    hetero_second = compile_stats()
 
     peers = PEERS_PER_STAGE * N_STAGES
     naive = peers * N_STAGES                 # per-peer re-trace baseline
@@ -173,6 +206,21 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
             "span_compiles_after_second_runner":
                 sum(_span_trace_keys(span_stats2).values()),
         },
+        # mixed attention+SSM 4-stage swarm (the StagePlan workload):
+        "hetero": {
+            "model": CFG_HETERO.name,
+            "stages": N_STAGES_HETERO,
+            "block_pattern": list(CFG_HETERO.block_kinds),
+            "throughput_samples_per_s_sim": rh.throughput(),
+            "loss": rh.metrics["loss"],
+            "wire_bytes": rh.metrics["wire_bytes"],
+            "compiles_first_run": hetero_first["traces"],
+            "compiles_after_second_run": hetero_second["traces"],
+            "per_key": {" ".join(map(str, k)): v
+                        for k, v in sorted(
+                            hetero_first["per_key"].items())},
+            "wall_s": wall_h,
+        },
     }
     # write the record FIRST: a regression must still leave the artifact
     # behind for diagnosis (CI uploads it with `if: always()`)
@@ -223,10 +271,26 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
           f"{asy['sync_throughput_sim']:.2f}/s sync; overlap_fraction="
           f"{asy['overlap_fraction']:.2f} "
           f"inflight={asy['inflight_bytes'] / 1e6:.1f}MB staleness=1")
+    # ---- hetero invariants: one jit per (stage, kind, shapes), zero
+    # re-traces for the second same-shape mixed-kind runner
+    het = report["hetero"]
+    assert all(v == 1 for v in hetero_first["per_key"].values()), (
+        f"mixed-kind stage re-traced within one run: "
+        f"{hetero_first['per_key']}")
+    assert het["compiles_after_second_run"] == \
+        het["compiles_first_run"], (
+        "second mixed-kind runner re-traced: "
+        f"{het['compiles_after_second_run']} vs "
+        f"{het['compiles_first_run']}")
+
     print(f"swarm/span,0,wire_bytes {sp['span_wire_bytes']:.0f} vs "
           f"{sp['single_wire_bytes']:.0f} single; span compiles "
           f"{sum(span_keys.values())} (1 per (span,kind)); loss equal "
           f"at 2e-4")
+    print(f"swarm/hetero,0,sim={het['throughput_samples_per_s_sim']:.2f}/s "
+          f"pattern={'|'.join(het['block_pattern'])} "
+          f"wire={het['wire_bytes'] / 1e6:.1f}MB "
+          f"compiles={het['compiles_first_run']} second_run_new=0")
     print(f"swarm/json,0,{out_path}")
     return report
 

@@ -112,20 +112,34 @@ def spans_route(n_stages: int,
     return n_stages == 0
 
 
+def _edge_cost(boundary_cost, b: int) -> float:
+    """Cost of crossing boundary ``b`` (between stages b and b+1).
+    ``boundary_cost`` may be a uniform scalar (historical) or a
+    per-boundary sequence of length ``n_stages - 1`` — e.g. the stage
+    plan's ``boundary_costs``, where a whisper boundary carries encoder
+    state + token ids and an expert-sharded MoE boundary pays top_k
+    routed token copies."""
+    if isinstance(boundary_cost, (list, tuple)):
+        return float(boundary_cost[b])
+    return float(boundary_cost)
+
+
 def _span_cost(span: tuple[int, int], costs: list[float],
-               boundary_cost: float, n_stages: int,
+               boundary_cost, n_stages: int,
                overlap_wire: bool = False) -> float:
     """Per-microbatch service cost of one peer running ``span`` fused:
-    the covered stages' compute plus ``boundary_cost`` per *host* edge —
-    fused intra-span boundaries are free, which is exactly the saved
-    wire bytes the span backend realizes.  ``overlap_wire`` prices the
-    async tick: boundary transfers ride the NIC concurrently with the
-    next microbatch's compute, so the steady-state cost is the MAX of
-    compute and wire (the busier of the two pipelines), not their sum —
-    never more than the serial price, equal when either side is zero."""
+    the covered stages' compute plus the boundary cost per *host* edge
+    (scalar or per-boundary, see :func:`_edge_cost`) — fused intra-span
+    boundaries are free, which is exactly the saved wire bytes the span
+    backend realizes.  ``overlap_wire`` prices the async tick: boundary
+    transfers ride the NIC concurrently with the next microbatch's
+    compute, so the steady-state cost is the MAX of compute and wire
+    (the busier of the two pipelines), not their sum — never more than
+    the serial price, equal when either side is zero."""
     lo, hi = span
-    edges = (1 if lo > 0 else 0) + (1 if hi < n_stages else 0)
-    compute, wire = sum(costs[lo:hi]), boundary_cost * edges
+    wire = (_edge_cost(boundary_cost, lo - 1) if lo > 0 else 0.0) \
+        + (_edge_cost(boundary_cost, hi - 1) if hi < n_stages else 0.0)
+    compute = sum(costs[lo:hi])
     if overlap_wire:
         return max(compute, wire)
     return compute + wire
@@ -314,9 +328,13 @@ def serve_assignment(n_prefill: int, n_decode: int, n_stages: int,
         else [1.0] * n_prefill
     assert len(dv) == n_decode and len(pv) == n_prefill
 
+    floor = sum(costs)                 # per-hop latency dominates decode
+    decode_bc = ([max(float(b), floor) for b in boundary_cost]
+                 if isinstance(boundary_cost, (list, tuple))
+                 else max(float(boundary_cost), floor))
     decode = [tuple(sp) for sp in optimal_assignment(
         n_decode, n_stages, costs, speeds=dv, spans=True,
-        boundary_cost=max(boundary_cost, sum(costs)))]
+        boundary_cost=decode_bc)]
     if n_prefill == 0:
         return {"prefill": [], "decode": decode}
 
@@ -387,7 +405,8 @@ def pipeline_throughput(alloc, peer_speed=1.0,
 
 def plan_span_change(dht, n_stages: int,
                      spans: dict[Hashable, tuple[int, int]],
-                     imbalance: float = 1.25
+                     imbalance: float = 1.25,
+                     boundary_costs: Optional[Sequence[float]] = None
                      ) -> Optional[SpanChange]:
     """Span-aware Alg.-2 step, from the DHT load snapshot.
 
@@ -403,6 +422,12 @@ def plan_span_change(dht, n_stages: int,
       peers, deleting one host boundary crossing for its traffic at no
       coverage risk.  (A hot pipe with nothing to split proposes
       nothing: growing it would only slow the bottleneck.)
+
+    ``boundary_costs`` (per-boundary wire prices, e.g. the stage plan's
+    ``boundary_costs``) ranks merge candidates by the NET wire saving of
+    the fused boundary — absorbing the stage behind an expensive edge
+    (a routed-MoE or whisper boundary) wins over a cheap one; without it
+    the historical least-loaded-first order applies.
 
     Never proposes a change that would strand a stage — or break span
     *routability* (:func:`spans_route`): coverage alone is too weak,
@@ -441,12 +466,28 @@ def plan_span_change(dht, n_stages: int,
         return None
 
     # balanced: grow toward fewer host boundaries
+    def edge(b: int) -> float:
+        if boundary_costs is None or not 0 <= b < n_stages - 1:
+            return 0.0
+        return float(boundary_costs[b])
+
     growers = sorted(spans, key=lambda pid: (queue_of(pid, spans[pid][0]),
                                              str(pid)))
+    cands = []
     for pid in growers:
         lo, hi = spans[pid]
         for t, new in ((hi, (lo, hi + 1)), (lo - 1, (lo - 1, hi))):
             if 0 <= t < n_stages and covers(t, but=pid) >= 2 \
                     and routes_after(pid, new):
-                return SpanChange(pid, (lo, hi), new)
-    return None
+                # growing up fuses boundary hi-1 but exposes boundary
+                # hi; growing down fuses lo-1 but exposes lo-2
+                saved = (edge(hi - 1) - edge(hi) if t == hi
+                         else edge(lo - 1) - edge(lo - 2))
+                cands.append((saved, pid, (lo, hi), new))
+    if not cands:
+        return None
+    if boundary_costs is not None:
+        cands.sort(key=lambda c: -c[0])        # stable: ties keep the
+        # least-loaded-first order from the grower scan above
+    _, pid, old, new = cands[0]
+    return SpanChange(pid, old, new)

@@ -46,6 +46,7 @@ from repro.core import rebalance as rb
 from repro.core.faults import TraceEvent
 from repro.models.config import ArchConfig
 from repro.models import flops as F
+from repro.models.stage_plan import StagePlan, get_stage_plan
 from repro.optim.adamw import Optimizer
 from repro.runtime import StageExecutor, StageProgram, \
     build_numeric_executors, init_stage_params
@@ -79,6 +80,14 @@ class SwarmConfig:
       trajectory equals the sequential DPU(delay=1) reference; 0 keeps
       today's fully synchronous barrier bitwise.  ``dpu=True`` is the
       historical spelling of ``staleness=1``.
+
+    Cost-model pricing is plan-driven: the runner computes a
+    ``repro.models.stage_plan.StagePlan`` once from ``(ArchConfig,
+    n_stages)`` and prices per-stage compute (``stage_flops`` — per
+    kind, head on the owning stage) and per-boundary wire bytes
+    (``boundary_bytes`` — whisper composite payloads, expert-sharded
+    MoE top_k routing) from it; ``rebalance_period``-driven span merges
+    rank candidate boundaries by those per-edge prices.
     """
     n_stages: int = 3
     microbatch_size: int = 1
@@ -172,6 +181,16 @@ class SwarmRunner:
         self.sim = Sim()
         self.dht = DHT(lambda: self.sim.now)
         self.n_stages = scfg.n_stages
+        # the canonical per-stage structure: kind runs, per-stage flops,
+        # per-boundary wire pricing.  Timing-only runs over splits the
+        # plan rejects (e.g. indivisible layer counts) fall back to the
+        # legacy uniform pricing (plan=None); numeric construction below
+        # would raise on such splits anyway.
+        try:
+            self.plan: Optional[StagePlan] = get_stage_plan(
+                cfg, scfg.n_stages)
+        except ValueError:
+            self.plan = None
         self.compress_mode = codecs.resolve_mode(
             cfg, None if scfg.codec == "auto" else scfg.codec)
         self.quant_block = scfg.quant_block
@@ -471,26 +490,40 @@ class SwarmRunner:
             speedup = max(1, ex.dp_shards(mb.size))
             return peer.profile.compute_time(fpt * mb.n_tokens) / speedup
         # timing-only: analytic per-stage flops summed over the hop's
-        # covered stages
+        # covered stages, priced per kind by the stage plan
         stages = peer.stages if stage in peer.stages \
             else range(stage, stage + 1)
-        ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
-        per = self.cfg.n_layers // self.n_stages
-        fpt = 0.0
-        for s in stages:
-            kinds = self.cfg.block_kinds[s * per:(s + 1) * per]
-            fpt += sum(F.per_token_layer_flops(self.cfg, k, ctx)
-                       for k in kinds)
-            if s == self.n_stages - 1:
-                fpt += 2 * self.cfg.d_model * self.cfg.vocab_size
+        if self.plan is not None:
+            fpt = sum(self.plan.stage_flops(s, self.scfg.seq_len)
+                      for s in stages)
+        else:                      # legacy fallback: uniform even split
+            ctx = F._ctx_for(self.cfg, self.scfg.seq_len, causal_avg=True)
+            per = self.cfg.n_layers // self.n_stages
+            fpt = 0.0
+            for s in stages:
+                kinds = self.cfg.block_kinds[s * per:(s + 1) * per]
+                fpt += sum(F.per_token_layer_flops(self.cfg, k, ctx)
+                           for k in kinds)
+                if s == self.n_stages - 1:
+                    fpt += 2 * self.cfg.d_model * self.cfg.vocab_size
         if kind == "bwd":
             fpt *= 3.0
         return peer.profile.compute_time(fpt * mb.n_tokens)
 
-    def boundary_nbytes(self, mb: Microbatch) -> float:
+    def boundary_nbytes(self, mb: Microbatch,
+                        boundary: Optional[int] = None) -> float:
         # one mode string end-to-end: the sim charges exactly the bytes the
         # active codec puts on the wire (flops.boundary_bytes is the same
-        # formula bench_compression measures against the real tensors)
+        # formula bench_compression measures against the real tensors).
+        # With a boundary index the plan prices THAT boundary: uniform
+        # hidden-state pricing for dense LM stacks (identical to the
+        # legacy formula), but whisper boundaries add the encoder-state
+        # + token payload and expert-sharded MoE boundaries pay the
+        # per-token-routed top_k factor.
+        if (self.plan is not None and boundary is not None
+                and 0 <= boundary < self.n_stages - 1):
+            return self.plan.boundary_bytes(
+                boundary, mb.size, self.scfg.seq_len, self.compress_mode)
         return F.boundary_bytes(
             self.cfg, mb.size, self.scfg.seq_len, self.compress_mode)
 
@@ -735,7 +768,14 @@ class SwarmRunner:
             spans = {p.id: (p.stages.start, p.stages.stop)
                      for p in self.peers.values()
                      if p.alive and p.serving}
-            ch = rb.plan_span_change(self.dht, self.n_stages, spans)
+            # per-boundary wire prices from the stage plan: merges fuse
+            # the most expensive edge first (routed-MoE / whisper
+            # boundaries beat uniform hidden-state ones)
+            bcosts = (self.plan.boundary_costs(
+                self.scfg.microbatch_size, self.scfg.seq_len,
+                self.compress_mode) if self.plan is not None else None)
+            ch = rb.plan_span_change(self.dht, self.n_stages, spans,
+                                     boundary_costs=bcosts)
             if ch is not None:
                 yield from self._resize_span(self.peers[ch.peer],
                                              range(*ch.new_span))

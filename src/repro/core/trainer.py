@@ -90,8 +90,16 @@ class Trainer:
             return None
         return peer
 
-    def _boundary_bytes(self, mb: Microbatch) -> float:
-        return self.swarm.boundary_nbytes(mb)
+    def _boundary_bytes(self, mb: Microbatch,
+                        boundary: Optional[int] = None) -> float:
+        """Wire bytes for one edge.  ``boundary`` indexes the pipeline
+        boundary actually crossed (between stages b and b+1) so the
+        swarm's stage plan can price it per kind — a whisper boundary
+        carries encoder state + token ids besides the hidden states; an
+        expert-sharded MoE boundary pays per routed token copy.  None
+        (or an out-of-range index, e.g. the last hop's loss-side edge)
+        falls back to the uniform hidden-state pricing."""
+        return self.swarm.boundary_nbytes(mb, boundary)
 
     # ------------------------------------------------------------ core
     def run_microbatch(self, mb: Microbatch):
@@ -133,7 +141,7 @@ class Trainer:
                 continue
             span = peer.stages
             covers_last = span.stop == S
-            nbytes = self._boundary_bytes(mb) if s > 0 else \
+            nbytes = self._boundary_bytes(mb, s - 1) if s > 0 else \
                 mb.n_tokens * 4.0
             t0 = self.sim.now
             try:
@@ -192,7 +200,7 @@ class Trainer:
                     # end-to-end — nothing to wait on here
                 else:
                     yield Sleep(peer.profile.send_time(
-                        self._boundary_bytes(mb)
+                        self._boundary_bytes(mb, span.stop - 1)
                         if not covers_last else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 hops.append(_Hop(peer, span, inp))
@@ -234,7 +242,9 @@ class Trainer:
                 yield Sleep(1.0)
                 continue
             covers_last = hop.span.stop == S
-            nbytes = self._boundary_bytes(mb)
+            # the cotangent in hand crossed the boundary at the hop's
+            # top edge (out-of-range for the last hop: uniform fallback)
+            nbytes = self._boundary_bytes(mb, hop.span.stop - 1)
             t0 = self.sim.now
             try:
                 if overlap:
@@ -295,7 +305,8 @@ class Trainer:
                     # else: the next hop's recv prices this edge
                 else:
                     yield Sleep(peer.profile.send_time(
-                        nbytes if hop.span.start > 0 else 64.0))
+                        self._boundary_bytes(mb, hop.span.start - 1)
+                        if hop.span.start > 0 else 64.0))
                 self.wiring.observe(peer.id, self.sim.now - t0)
                 dy = gx
                 bwd_prev = peer

@@ -49,6 +49,7 @@ from repro.dist.constrain import constrain
 from repro.models import model as model_lib
 from repro.models.blocks import REGISTRY
 from repro.models.config import ArchConfig
+from repro.models.stage_plan import StagePlan, get_stage_plan
 from repro.optim.adamw import Optimizer
 
 Tree = Any
@@ -83,20 +84,16 @@ def stage_periodic(cfg: ArchConfig, n_stages: int) -> bool:
         return False
     if cfg.family == "audio" or cfg.encoder_layers:
         return False
-    if cfg.share_groups:
-        return cfg.share_groups % n_stages == 0
-    if cfg.n_layers % n_stages:
+    try:
+        return get_stage_plan(cfg, n_stages).periodic
+    except ValueError:       # stack cannot split at this stage count
         return False
-    per = cfg.n_layers // n_stages
-    return cfg.block_kinds == cfg.block_kinds[:per] * n_stages
 
 
 def _period_runs(cfg: ArchConfig, n_stages: int) -> list[tuple[str, int]]:
-    """(kind, count) runs of ONE stage's slice of the layer pattern."""
-    if cfg.share_groups:
-        return [(cfg.block_kinds[0], cfg.share_groups // n_stages)]
-    per = cfg.n_layers // n_stages
-    return model_lib.segments(cfg.block_kinds[:per])
+    """(kind, count) runs of ONE stage's slice of the layer pattern
+    (periodic stacks: every stage's runs equal stage 0's)."""
+    return list(get_stage_plan(cfg, n_stages).stages[0].runs)
 
 
 def restack(per_stage: list) -> jax.Array:
@@ -193,9 +190,8 @@ def make_block_core(cfg: ArchConfig, runs: list[tuple[str, int]],
 
 def _make_stage_fn(cfg: ArchConfig, n_stages: int, remat: bool):
     """One (periodic) stage's program for the vmapped shifting buffer."""
-    reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
-    return make_block_core(cfg, _period_runs(cfg, n_stages), reps,
-                           remat=remat)
+    spec = get_stage_plan(cfg, n_stages).stages[0]
+    return make_block_core(cfg, list(spec.runs), spec.reps, remat=remat)
 
 
 def _resolve_codec(cfg: ArchConfig, n_stages: int,
@@ -375,6 +371,81 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
     return train_step
 
 
+def _plan_stage_blocks(cfg: ArchConfig, plan: StagePlan,
+                       blocks: Tree) -> list[list[Tree]]:
+    """Per-stage ``[tree-per-run]`` lists sliced from the global layer
+    stacks — the non-periodic twin of :func:`_stage_blocks`.  Every
+    plan run is a contiguous same-kind layer range, so it sits inside
+    exactly one maximal global run: a static differentiable slice."""
+    g_runs = model_lib.segments(cfg.block_kinds)
+    starts = [0]
+    for _, c in g_runs:
+        starts.append(starts[-1] + c)
+    per = cfg.n_layers // plan.n_stages
+    out: list[list[Tree]] = []
+    for s, spec in enumerate(plan.stages):
+        off = s * per
+        run_trees = []
+        for _, c in spec.runs:
+            ri = max(i for i in range(len(g_runs)) if starts[i] <= off)
+            lo = off - starts[ri]
+            run_trees.append(jax.tree.map(
+                lambda a, _lo=lo, _c=c: a[_lo:_lo + _c], blocks[ri]))
+            off += c
+        out.append(run_trees)
+    return out
+
+
+def _make_whisper_reference_loss_fn(cfg: ArchConfig, n_stages: int,
+                                    n_microbatches: int, comp: str):
+    """Sequential staged whisper reference: encoder pod, then the
+    decoder slice chain, with the tree-aware int8 boundary crossings the
+    elastic path applies (boundary 0 quantizes the encoder output;
+    interior boundaries quantize hidden + encoder state; token ids ride
+    uncompressed).  ``batch["tokens"]`` is the composite
+    ``{"audio", "tok"}`` payload the swarm feeds stage 0."""
+    from repro.models import whisper as W
+    from repro.train import steps as steps_lib   # lazy: steps imports models
+    if comp in codecs.LEARNED:
+        raise NotImplementedError(
+            "learned boundary codecs are unsupported for encoder-decoder "
+            "stacks (tree-valued boundaries)")
+    M = n_microbatches
+    per = cfg.n_layers // (n_stages - 1)
+
+    def cross(x):
+        return quant8.compress_boundary(x) if comp == "int8" else x
+
+    def loss_fn(params: Tree, batch: Tree):
+        audio, tok = batch["tokens"]["audio"], batch["tokens"]["tok"]
+        labels = batch["labels"]
+        B, S = tok.shape
+        if B % M:
+            raise ValueError(f"batch {B} not divisible by {M} microbatches")
+        mb = B // M
+        ces = []
+        for m in range(M):
+            au = audio.reshape(M, mb, *audio.shape[1:])[m]
+            tk = tok.reshape(M, mb, S)[m]
+            lab = labels.reshape(M, mb, S)[m]
+            enc = cross(W.encode(cfg, params, au))        # boundary 0
+            x = W.embed_tokens(cfg, params["embed"], tk)
+            for s in range(1, n_stages):
+                lo = (s - 1) * per
+                blocks_s = jax.tree.map(
+                    lambda a, _lo=lo: a[_lo:_lo + per],
+                    params["dec_blocks"])
+                x = W.dec_scan(cfg, blocks_s, x, enc, jnp.arange(S))
+                if s < n_stages - 1:   # interior boundary: whole tree
+                    x, enc = cross(x), cross(enc)
+            logits = model_lib.head(cfg, params, x, batch_axes=("data",))
+            ces.append(steps_lib.cross_entropy(logits, lab))
+        ce = jnp.mean(jnp.stack(ces))
+        return ce, ce
+
+    return loss_fn
+
+
 def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
                            n_microbatches: int, *,
                            compress: Optional[str] = None):
@@ -383,12 +454,26 @@ def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
     codec applied between consecutive stages — but with no vmap, no buffer
     shift and no bubble.  This is the equivalence oracle the codec tests
     compare :func:`make_pipeline_train_step` against (and the math the
-    elastic path in ``repro.core`` executes peer-by-peer)."""
-    if not stage_periodic(cfg, n_stages):
-        raise ValueError(f"{cfg.name}: layer stack is not periodic at "
-                         f"{n_stages} stages (see stage_periodic)")
+    elastic path in ``repro.core`` executes peer-by-peer).
+
+    Periodic stacks run the vmappable stage fn per stage (bit-identical
+    to the historical behavior).  Non-periodic mixed-kind stacks and
+    encoder-decoder stacks run their plan-driven stage chain — those
+    have no GSPMD twin (``make_pipeline_train_step`` still requires
+    periodicity) but serve as the elastic path's oracle."""
+    try:
+        plan = get_stage_plan(cfg, n_stages)
+    except ValueError as e:
+        raise ValueError(
+            f"{cfg.name}: layer stack cannot split at {n_stages} stages "
+            f"({e})") from e
     comp = _resolve_codec(cfg, n_stages, compress)
-    stage_fn = _make_stage_fn(cfg, n_stages, remat=False)
+    if plan.is_encdec:
+        return _make_whisper_reference_loss_fn(cfg, n_stages,
+                                               n_microbatches, comp)
+    periodic = plan.periodic
+    stage_fn = _make_stage_fn(cfg, n_stages, remat=False) if periodic \
+        else None
     M = n_microbatches
 
     from repro.train import steps as steps_lib   # lazy: steps imports models
@@ -399,7 +484,12 @@ def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
         if B % M:
             raise ValueError(f"batch {B} not divisible by {M} microbatches")
         mb = B // M
-        stage_blocks = _stage_blocks(cfg, params["blocks"], n_stages)
+        if periodic:
+            stage_blocks = _stage_blocks(cfg, params["blocks"], n_stages)
+        else:
+            plan_blocks = _plan_stage_blocks(cfg, plan, params["blocks"])
+            cores = [make_block_core(cfg, list(spec.runs), spec.reps)
+                     for spec in plan.stages]
         bparams = (_boundary_params(params, comp, n_stages)
                    if comp in codecs.LEARNED else None)
         ces, auxs = [], []
@@ -414,9 +504,12 @@ def make_reference_loss_fn(cfg: ArchConfig, n_stages: int,
             x = model_lib.embed(cfg, params, tok, batch_axes=("data",))
             aux = jnp.zeros((), jnp.float32)
             for s in range(n_stages):
-                blocks_s = [jax.tree.map(lambda a: a[s], t)
-                            for t in stage_blocks]
-                x, aux = stage_fn(blocks_s, x, aux, pos)
+                if periodic:
+                    blocks_s = [jax.tree.map(lambda a: a[s], t)
+                                for t in stage_blocks]
+                    x, aux = stage_fn(blocks_s, x, aux, pos)
+                else:
+                    x, aux = cores[s](plan_blocks[s], x, aux, pos)
                 if s < n_stages - 1:
                     x = boundary_crossing(cfg, comp, bparams, s, x)
             logits = model_lib.head(cfg, params, x, batch_axes=("data",))

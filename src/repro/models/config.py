@@ -9,6 +9,15 @@ import jax.numpy as jnp
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
+    """Routed-experts config.
+
+    ``expert_sharded`` opts a swarm pipeline into treating MoE stages
+    as expert-sharded: the ``StagePlan`` then prices boundaries that
+    *enter* such a stage per-token-routed (``top_k`` copies of every
+    token cross the wire to the expert shards) instead of one uniform
+    hidden-state transfer.  Off by default — dense-replica MoE stages
+    keep the uniform pricing.
+    """
     num_experts: int = 0              # routed experts
     num_shared: int = 0               # always-on shared experts (DeepSeek)
     top_k: int = 1
@@ -16,6 +25,7 @@ class MoEConfig:
     capacity_factor: float = 1.25
     router_jitter: float = 0.0
     aux_loss_coef: float = 0.01
+    expert_sharded: bool = False      # expert-parallel stage placement
 
 
 @dataclasses.dataclass(frozen=True)
@@ -39,6 +49,18 @@ class SSMConfig:
 
 @dataclasses.dataclass(frozen=True)
 class ArchConfig:
+    """Unified architecture config.
+
+    Stage-plan inputs: ``block_kinds`` (derived from ``family`` or an
+    explicit ``block_pattern``), ``share_groups``, and
+    ``encoder_layers`` fully determine the per-stage structure a swarm
+    pipeline runs — ``repro.models.stage_plan.make_stage_plan(cfg,
+    n_stages)`` turns them into per-stage kind runs, boundary payload
+    pricing, and aux-state slot ownership.  Mixed ``block_kinds`` with
+    ``share_groups`` set is rejected (sharing across kinds is
+    undefined); encoder-decoder configs plan stage 0 as the encoder pod
+    and split decoder layers over the remaining stages.
+    """
     name: str
     family: str                      # dense | moe | ssm | hybrid | audio | vlm
     n_layers: int

@@ -81,9 +81,30 @@ def _slstm_flops(cfg: ArchConfig) -> float:
     return 2 * d * 4 * d + 2 * H * hd * 4 * hd + 2 * d * d + 20 * d
 
 
-def per_token_layer_flops(cfg: ArchConfig, kind: str, ctx: float) -> float:
+def cross_attn_flops(cfg: ArchConfig, enc_ctx: float) -> float:
+    """Per decoder token: cross-attention scores/values over ``enc_ctx``
+    encoder frames plus the q/o projections."""
+    return (2 * 2 * enc_ctx * cfg.n_heads * cfg.hd
+            + 4 * cfg.d_model * cfg.n_heads * cfg.hd)
+
+
+def per_token_layer_flops(cfg: ArchConfig, kind: str, ctx: float,
+                          enc_ctx: Optional[float] = None) -> float:
     """Forward FLOPs for one token through one block of ``kind`` with
-    attention context ``ctx`` (= kv length actually attended)."""
+    attention context ``ctx`` (= kv length actually attended).
+
+    Whisper kinds: ``whisper_enc`` is a non-causal encoder block priced
+    per encoder frame (pass ``ctx`` = encoder frames); ``whisper_dec``
+    adds cross-attention over ``enc_ctx`` frames (defaults to
+    ``cfg.encoder_max_len``) to a causal decoder block.
+    """
+    if kind == "whisper_enc":
+        return _attn_proj_flops(cfg) + _attn_ctx_flops(cfg, ctx) \
+            + _ffn_flops(cfg)
+    if kind == "whisper_dec":
+        ec = float(cfg.encoder_max_len) if enc_ctx is None else enc_ctx
+        return _attn_proj_flops(cfg) + _attn_ctx_flops(cfg, ctx) \
+            + _ffn_flops(cfg) + cross_attn_flops(cfg, ec)
     if kind == "attn":
         return _attn_proj_flops(cfg) + _attn_ctx_flops(cfg, ctx) \
             + _ffn_flops(cfg)
@@ -119,12 +140,10 @@ def forward_flops_per_token(cfg: ArchConfig, seq: int) -> float:
     total = sum(per_token_layer_flops(cfg, k, ctx) for k in cfg.block_kinds)
     if cfg.encoder_layers:       # whisper: encoder runs over its own frames
         enc_ctx = min(seq, cfg.encoder_max_len)
-        total += cfg.encoder_layers * (
-            _attn_proj_flops(cfg) + _attn_ctx_flops(cfg, enc_ctx)
-            + _ffn_flops(cfg))
+        total += cfg.encoder_layers * per_token_layer_flops(
+            cfg, "whisper_enc", enc_ctx)
         # decoder cross-attention
-        total += cfg.n_layers * (2 * 2 * enc_ctx * cfg.n_heads * cfg.hd
-                                 + 4 * cfg.d_model * cfg.n_heads * cfg.hd)
+        total += cfg.n_layers * cross_attn_flops(cfg, enc_ctx)
     total += 2 * cfg.d_model * cfg.vocab_size    # lm head
     return total
 
@@ -133,9 +152,8 @@ def decode_flops_per_token(cfg: ArchConfig, kv_len: int) -> float:
     ctx = _ctx_for(cfg, kv_len, causal_avg=False)
     total = sum(per_token_layer_flops(cfg, k, ctx) for k in cfg.block_kinds)
     if cfg.encoder_layers:
-        total += cfg.n_layers * (2 * 2 * cfg.encoder_max_len
-                                 * cfg.n_heads * cfg.hd
-                                 + 4 * cfg.d_model * cfg.n_heads * cfg.hd)
+        total += cfg.n_layers * cross_attn_flops(
+            cfg, float(cfg.encoder_max_len))
     total += 2 * cfg.d_model * cfg.vocab_size
     return total
 
@@ -170,6 +188,28 @@ def boundary_bytes(cfg: ArchConfig, batch: int, seq: int,
     if compression == "int8":
         return float(quant8.compressed_nbytes(tokens * cfg.d_model))
     return 2.0 * tokens * codecs.wire_dim(cfg, compression)
+
+
+def wire_nbytes(n_elements: float, compression: str = "none") -> float:
+    """Wire bytes for ``n_elements`` hidden-state elements under a
+    codec — the per-leaf primitive behind ``StagePlan.boundary_bytes``
+    (2-byte bf16 elements; int8 adds per-block scales).  Learned codecs
+    reshape a specific tensor, so they are priced by ``boundary_bytes``
+    only."""
+    from repro.compression import quant8                # lazy
+    if compression == "int8":
+        return float(quant8.compressed_nbytes(int(n_elements)))
+    return 2.0 * n_elements
+
+
+def stage_flops_per_token(cfg: ArchConfig, n_stages: int, s: int,
+                          seq: int) -> float:
+    """Per-kind forward FLOPs/token for pipeline stage ``s`` under the
+    canonical ``StagePlan`` — summing over stages reproduces
+    ``forward_flops_per_token`` exactly (asserted by
+    ``benchmarks/bench_cost.py``)."""
+    from repro.models.stage_plan import get_stage_plan  # lazy: no cycle
+    return get_stage_plan(cfg, n_stages).stage_flops(s, seq)
 
 
 def active_params(cfg: ArchConfig) -> float:

@@ -34,6 +34,23 @@ def segments(pattern: tuple[str, ...]) -> list[tuple[str, int]]:
     return runs
 
 
+def _shared_kind(cfg: ArchConfig) -> str:
+    """The single block kind of an ALBERT-shared stack.  Sharing one
+    parameter group across structurally different blocks is undefined —
+    fail loudly instead of silently applying ``block_kinds[0]`` to the
+    whole stack."""
+    kinds = set(cfg.block_kinds)
+    if len(kinds) > 1:
+        raise ValueError(
+            f"{cfg.name}: share_groups={cfg.share_groups} requires "
+            f"uniform block_kinds, got {sorted(kinds)}")
+    return cfg.block_kinds[0]
+
+
+def _shared_runs(cfg: ArchConfig) -> list[tuple[str, int]]:
+    return [(_shared_kind(cfg), cfg.share_groups)]
+
+
 def stack_specs(tree: Tree, n: int) -> Tree:
     def s(p: ParamSpec) -> ParamSpec:
         return ParamSpec((n,) + p.shape, p.dtype, p.init,
@@ -50,8 +67,7 @@ def lm_specs(cfg: ArchConfig) -> Tree:
     if cfg.share_groups:
         per = cfg.n_layers // cfg.share_groups
         assert per * cfg.share_groups == cfg.n_layers
-        kind = cfg.block_kinds[0]
-        specs["blocks"] = [stack_specs(REGISTRY[kind][0](cfg),
+        specs["blocks"] = [stack_specs(REGISTRY[_shared_kind(cfg)][0](cfg),
                                        cfg.share_groups)]
     else:
         specs["blocks"] = [stack_specs(REGISTRY[k][0](cfg), n)
@@ -133,7 +149,7 @@ def lm_apply(cfg: ArchConfig, params: Tree, tokens: jax.Array,
     x = embed(cfg, params, tokens)
     aux = jnp.zeros((), jnp.float32)
 
-    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+    runs = (_shared_runs(cfg) if cfg.share_groups
             else segments(cfg.block_kinds))
     reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
 
@@ -179,7 +195,7 @@ def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
         positions = default_positions(cfg, B, S)
     x = embed(cfg, params, tokens)
 
-    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+    runs = (_shared_runs(cfg) if cfg.share_groups
             else segments(cfg.block_kinds))
     reps = cfg.n_layers // cfg.share_groups if cfg.share_groups else 1
     caches = []
@@ -213,7 +229,7 @@ def lm_prefill(cfg: ArchConfig, params: Tree, tokens: jax.Array,
 
 def lm_cache_specs(cfg: ArchConfig, batch: int, seq: int) -> Tree:
     if cfg.share_groups:
-        kind = cfg.block_kinds[0]
+        kind = _shared_kind(cfg)
         return [stack_specs(REGISTRY[kind][3](cfg, batch, seq), cfg.n_layers)]
     return [stack_specs(REGISTRY[k][3](cfg, batch, seq), n)
             for k, n in segments(cfg.block_kinds)]
@@ -231,7 +247,7 @@ def lm_decode_step(cfg: ArchConfig, params: Tree, token: jax.Array,
             positions = jnp.broadcast_to(pos, (B, 1))
     x = embed(cfg, params, token)
 
-    runs = ([(cfg.block_kinds[0], cfg.share_groups)] if cfg.share_groups
+    runs = (_shared_runs(cfg) if cfg.share_groups
             else segments(cfg.block_kinds))
     new_caches = []
     for (kind, _), seg_params, seg_cache in zip(runs, params["blocks"],

@@ -99,14 +99,20 @@ def encode(cfg: ArchConfig, params: Tree, audio_embed: jax.Array,
     return L.apply_norm(cfg, params["enc_norm"], x)
 
 
-def decode_train(cfg: ArchConfig, params: Tree, tokens: jax.Array,
-                 enc_out: jax.Array, remat: bool = True) -> jax.Array:
-    B, S = tokens.shape
-    d = cfg.d_model
-    x = params["embed"][tokens].astype(cfg.compute_jdtype)
-    x = x + sinusoid(S, d, x.dtype)
-    positions = jnp.arange(S)
+def embed_tokens(cfg: ArchConfig, embed: jax.Array,
+                 tokens: jax.Array) -> jax.Array:
+    """Decoder token embedding + sinusoidal positions."""
+    S = tokens.shape[1]
+    x = embed[tokens].astype(cfg.compute_jdtype)
+    return x + sinusoid(S, cfg.d_model, x.dtype)
 
+
+def dec_scan(cfg: ArchConfig, dec_blocks: Tree, x: jax.Array,
+             enc_out: jax.Array, positions: jax.Array,
+             remat: bool = True) -> jax.Array:
+    """Scan a stacked slice of decoder blocks (self-attn + cross-attn
+    into ``enc_out`` + FFN).  The whole-model ``decode_train`` scans all
+    ``n_layers``; a pipeline stage scans only its own slice."""
     def body(x, p_l):
         h = L.apply_norm(cfg, p_l["ln1"], x)
         x = x + L.apply_attn(cfg, p_l["attn"], h, positions, causal=True)
@@ -118,7 +124,16 @@ def decode_train(cfg: ArchConfig, params: Tree, tokens: jax.Array,
 
     if remat:
         body = jax.checkpoint(body)
-    x, _ = jax.lax.scan(body, x, params["dec_blocks"])
+    x, _ = jax.lax.scan(body, x, dec_blocks)
+    return x
+
+
+def decode_train(cfg: ArchConfig, params: Tree, tokens: jax.Array,
+                 enc_out: jax.Array, remat: bool = True) -> jax.Array:
+    B, S = tokens.shape
+    x = embed_tokens(cfg, params["embed"], tokens)
+    x = dec_scan(cfg, params["dec_blocks"], x, enc_out, jnp.arange(S),
+                 remat)
     # shared head: final norm + vocab projection + the constrain no-op
     # path (identity off-mesh, so single-device tests need no mesh)
     return model_lib.head(cfg, params, x)

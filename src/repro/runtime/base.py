@@ -431,6 +431,17 @@ def single_stage(ex: StageExecutor, stage: Optional[int]) -> None:
             f"{type(ex).__name__} serves stage {ex.stage}, not {stage}")
 
 
+def _int8_roundtrip_tree(tree: Tree, quant_block: int) -> Tree:
+    """int8-round-trip every floating leaf of a wire payload, passing
+    integer leaves (e.g. the token ids riding a whisper boundary tree)
+    through untouched.  Plain activations are the single-leaf case."""
+    from repro.compression.quant8 import _roundtrip
+    return jax.tree.map(
+        lambda a: _roundtrip(a, quant_block)
+        if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a,
+        tree)
+
+
 def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
     """Shared ``wire_fwd`` codec step: int8 quantize-on-send on live
     span-edge boundaries.  Learned codecs already emitted the c-dim wire
@@ -438,8 +449,7 @@ def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
     last covered stage is the pipeline's last emits a loss, not a
     boundary — and fused (intra-span) boundaries never reach here."""
     if ex.compress_mode == "int8" and ex.stages.stop < ex.n_stages:
-        from repro.compression.quant8 import _roundtrip
-        return _roundtrip(y, ex.quant_block)
+        return _int8_roundtrip_tree(y, ex.quant_block)
     return y
 
 
@@ -449,6 +459,5 @@ def wire_bwd_codec(ex: StageExecutor, gx: Optional[Tree]
     cotangent (None when the span starts at stage 0 — nothing crosses
     back)."""
     if gx is not None and ex.compress_mode == "int8":
-        from repro.compression.quant8 import _roundtrip
-        return _roundtrip(gx, ex.quant_block)
+        return _int8_roundtrip_tree(gx, ex.quant_block)
     return gx

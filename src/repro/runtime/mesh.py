@@ -36,6 +36,7 @@ from repro.dist.constrain import resolve_spec
 from repro.dist.sharding import ShardingRules, DEFAULT_RULES, \
     stage_param_shardings
 from repro.models.config import ArchConfig
+from repro.models.stage_plan import get_stage_plan
 from repro.models import params as P
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
     install_snapshot, single_stage, slot_export, slot_install, \
@@ -68,6 +69,7 @@ class MeshExecutor:
         self.stage = stage
         self.n_stages = n_stages
         self.seq_len = seq_len
+        self.plan = get_stage_plan(cfg, n_stages)
         self.mesh = mesh
         self.rules = rules or DEFAULT_RULES
         self.batch_axis = batch_axis
@@ -309,6 +311,7 @@ class MeshSpanExecutor:
         self.seq_len = seq_len
         self.span = (lo, hi)
         self.stage = lo                       # entry stage
+        self.plan = get_stage_plan(cfg, n_stages)
         self.mesh = mesh
         self.rules = rules or DEFAULT_RULES
         self.batch_axis = batch_axis

@@ -1,7 +1,6 @@
 """NumericExecutor — single-device stage math behind a shared jit cache.
 
-Absorbs the ``StageProgram`` machinery (``repro.runtime.stage_model``,
-formerly ``repro.core.stage_model`` — a shim keeps the old import path)
+Absorbs the ``StageProgram`` machinery (``repro.runtime.stage_model``)
 behind a *process-wide* compile cache keyed on ``(arch config, stage
 count, sequence length, codec mode)``: every peer of a stage — across
 runners, across the churn tests' seed matrix, across benchmark repeats —
@@ -28,6 +27,7 @@ from repro.models.config import ArchConfig
 from repro.runtime.base import StageState, fold_into, host_snapshot, \
     install_snapshot, single_stage, slot_export, slot_install, \
     wire_bwd_codec, wire_fwd_codec
+from repro.models.stage_plan import get_stage_plan
 from repro.runtime.stage_model import (SpanProgram, StageProgram,
                                        build_span_program,
                                        build_stage_programs,
@@ -142,6 +142,7 @@ class NumericExecutor:
         self.prog = prog
         self.stage = prog.stage
         self.n_stages = prog.n_stages
+        self.plan = get_stage_plan(cfg, prog.n_stages)
         self.seq_len = seq_len              # lets for_span build fused kin
         self.compress_mode = compress_mode
         self.quant_block = quant_block

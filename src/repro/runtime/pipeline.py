@@ -65,6 +65,8 @@ class PipelineExecutor:
         self.seq_len = seq_len
         self.span = (lo, hi)
         self.stage = lo                       # entry stage
+        from repro.models.stage_plan import get_stage_plan
+        self.plan = get_stage_plan(cfg, n_stages)
         self.compress_mode = codecs.resolve_mode(cfg, compress)
         self.quant_block = quant_block
         self.prog = numeric_rt.get_span_program(

@@ -43,6 +43,7 @@ from repro.compression import codecs
 from repro.dist.constrain import constrain
 from repro.dist.pipeline import make_block_core, restack
 from repro.models.config import ArchConfig
+from repro.models.stage_plan import StagePlan, get_stage_plan
 from repro.models import params as P
 from repro.models import layers as L
 from repro.models import model as model_lib
@@ -106,26 +107,30 @@ def _traced(fn: Callable, hook: Optional[Callable], stage, kind: str
     return jax.jit(counted)
 
 
-def _stage_slice(cfg: ArchConfig, stage: int, n_stages: int):
-    per = cfg.n_layers // n_stages
-    lo, hi = stage * per, (stage + 1) * per
-    if cfg.share_groups:
-        # one shared parameter group per stage (paper §4.3: 3 stages x 16
-        # shared layers); reuse count = layers per stage
-        assert cfg.share_groups == n_stages, (
-            "share_groups must equal n_stages for the paper's model")
-        return cfg.block_kinds[lo:hi], True
-    return cfg.block_kinds[lo:hi], False
-
-
 def _stage_runs(cfg: ArchConfig, s: int, n_stages: int):
-    """(kinds, [per-run (kind, count)], reps) for one stage's layer slice."""
-    kinds, shared = _stage_slice(cfg, s, n_stages)
-    runs = model_lib.segments(kinds)
-    if shared:
-        runs = [(kinds[0], 1)]          # single shared group
-    reps = len(kinds) if shared else 1
-    return kinds, runs, reps
+    """(kinds, [per-run (kind, count)], reps) for one stage — read off
+    the canonical :class:`~repro.models.stage_plan.StagePlan` instead of
+    re-deriving it from ``cfg.block_kinds`` index math."""
+    spec = get_stage_plan(cfg, n_stages).stages[s]
+    return spec.kinds, list(spec.runs), spec.reps
+
+
+def _cast_like(dy: Tree, y: Tree) -> Tree:
+    """Cast a boundary cotangent tree to the forward output's dtypes
+    (leaf-wise — whisper boundaries are trees, LM boundaries a tensor)."""
+    return jax.tree.map(lambda t, yy: t.astype(yy.dtype), dy, y)
+
+
+# whisper boundary payloads are trees; these keys are integer leaves
+# (token ids) that ride the wire but never take gradients — stage fns
+# split them out so every vjp runs over floating inputs only.
+_INT_KEYS = ("tok",)
+
+
+def _split_payload(inp: Tree) -> tuple[Tree, Tree]:
+    floats = {k: v for k, v in inp.items() if k not in _INT_KEYS}
+    ints = {k: v for k, v in inp.items() if k in _INT_KEYS}
+    return floats, ints
 
 
 def _stage_specs(cfg: ArchConfig, s: int, n_stages: int, comp: str,
@@ -215,25 +220,225 @@ def _head_loss(cfg: ArchConfig, params: Tree, x, labels):
 
 def _stage_fwd_flops(cfg: ArchConfig, s: int, n_stages: int, seq_len: int,
                      comp: str, learned: bool) -> float:
-    kinds, _, _ = _stage_runs(cfg, s, n_stages)
     is_first, is_last = s == 0, s == n_stages - 1
-    ctx = F._ctx_for(cfg, seq_len, causal_avg=True)
-    layer_f = sum(F.per_token_layer_flops(cfg, k, ctx) for k in kinds)
-    head_f = 2 * cfg.d_model * cfg.vocab_size if is_last else 0.0
     codec_f = codecs.codec_flops_per_token(
         cfg, comp, sender=learned and not is_last,
         receiver=learned and not is_first)
-    return layer_f + head_f + codec_f
+    return get_stage_plan(cfg, n_stages).stage_flops(s, seq_len) + codec_f
+
+
+# --------------------------------------------------- encoder-decoder stages
+def _stage_specs_encdec(cfg: ArchConfig, s: int, n_stages: int) -> Tree:
+    """Whisper stage specs: stage 0 is the encoder pod, stages
+    ``1..n_stages-1`` split the decoder; stage 1 owns the token embed,
+    the last stage the final norm + head (plan ownership)."""
+    from repro.models import whisper as W
+    if s == 0:
+        return {"enc_blocks": model_lib.stack_specs(
+                    W.enc_block_specs(cfg), cfg.encoder_layers),
+                "enc_norm": L.norm_specs(cfg)}
+    per = cfg.n_layers // (n_stages - 1)
+    specs: Tree = {"dec_blocks": model_lib.stack_specs(
+        W.dec_block_specs(cfg), per)}
+    if s == 1:
+        specs["embed"] = P.ParamSpec(
+            (cfg.vocab_size, cfg.d_model), cfg.param_jdtype, "embed",
+            ("vocab", "embed"))
+    if s == n_stages - 1:
+        specs["final_norm"] = L.norm_specs(cfg)
+        specs["head"] = P.ParamSpec(
+            (cfg.d_model, cfg.vocab_size), cfg.param_jdtype, "normal",
+            ("embed", "vocab"))
+    return specs
+
+
+def _make_stage_core_encdec(cfg: ArchConfig, s: int, n_stages: int
+                            ) -> Callable:
+    """Stage ``s``'s float-to-float core: ``(params, floats, ints) ->
+    out_floats``.  Integer token ids ride the boundary tree untouched
+    (the wrappers below pass them around every vjp), so cross-attention
+    gradients flow stage-to-stage through purely floating cotangent
+    trees: boundary 0 ships ``{"enc"}``, interior boundaries
+    ``{"x", "enc"}`` — the encoder pod hand-off sits exactly at the
+    cross-attention boundary."""
+    from repro.models import whisper as W
+    is_enc, first_dec = s == 0, s == 1
+    is_last = s == n_stages - 1
+
+    def core(params: Tree, floats: Tree, ints: Tree) -> Tree:
+        if is_enc:
+            return {"enc": W.encode(cfg, params, floats["audio"])}
+        enc = floats["enc"].astype(cfg.compute_jdtype)
+        if first_dec:
+            x = W.embed_tokens(cfg, params["embed"], ints["tok"])
+        else:
+            x = floats["x"].astype(cfg.compute_jdtype)
+        x = W.dec_scan(cfg, params["dec_blocks"], x, enc,
+                       jnp.arange(x.shape[1]))
+        return {"x": x} if is_last else {"x": x, "enc": enc}
+
+    return core
+
+
+def _build_stage_programs_encdec(cfg: ArchConfig, n_stages: int,
+                                 seq_len: int,
+                                 trace_hook: Optional[Callable]
+                                 ) -> list[StageProgram]:
+    programs = []
+    for s in range(n_stages):
+        specs = _stage_specs_encdec(cfg, s, n_stages)
+        core = _make_stage_core_encdec(cfg, s, n_stages)
+        is_enc, is_last = s == 0, s == n_stages - 1
+
+        if is_last:
+            def fwd(params, inp, labels, _c=core):
+                floats, ints = _split_payload(inp)
+                return _head_loss(cfg, params,
+                                  _c(params, floats, ints)["x"], labels)
+
+            def bwd(params, inp, labels, _c=core):
+                floats, ints = _split_payload(inp)
+
+                def sl(p, f):
+                    return _head_loss(cfg, p, _c(p, f, ints)["x"], labels)
+                loss, (gp, gf) = jax.value_and_grad(sl, argnums=(0, 1))(
+                    params, floats)
+                return loss, gf, gp
+        elif is_enc:
+            def fwd(params, inp, _c=core):
+                floats, ints = _split_payload(inp)
+                return {**_c(params, floats, ints), **ints}
+
+            def bwd(params, inp, dy, _c=core):
+                floats, ints = _split_payload(inp)
+                dy_f, _ = _split_payload(dy)
+                y, pullback = jax.vjp(lambda p: _c(p, floats, ints), params)
+                (gp,) = pullback(_cast_like(dy_f, y))
+                return None, gp
+        else:
+            def fwd(params, inp, _c=core):
+                floats, ints = _split_payload(inp)
+                return {**_c(params, floats, ints), **ints}
+
+            def bwd(params, inp, dy, _c=core):
+                floats, ints = _split_payload(inp)
+                dy_f, _ = _split_payload(dy)
+                y, pullback = jax.vjp(
+                    lambda p, f: _c(p, f, ints), params, floats)
+                gp, gf = pullback(_cast_like(dy_f, y))
+                return gf, gp
+
+        fwd_f = _stage_fwd_flops(cfg, s, n_stages, seq_len, "none", False)
+        programs.append(StageProgram(
+            stage=s, n_stages=n_stages, specs=specs,
+            fwd=_traced(fwd, trace_hook, s, "fwd"),
+            bwd=_traced(bwd, trace_hook, s, "bwd"),
+            fwd_flops_per_token=fwd_f, bwd_flops_per_token=3.0 * fwd_f,
+            fwd_fn=fwd, bwd_fn=bwd))
+    return programs
+
+
+def _build_span_encdec(cfg: ArchConfig, n_stages: int, seq_len: int,
+                       span: tuple[int, int],
+                       trace_hook: Optional[Callable]) -> SpanProgram:
+    lo, hi = span
+    covers_last = hi == n_stages
+    plan = get_stage_plan(cfg, n_stages)
+    specs = {s: _stage_specs_encdec(cfg, s, n_stages)
+             for s in range(lo, hi)}
+    cores = {s: _make_stage_core_encdec(cfg, s, n_stages)
+             for s in range(lo, hi)}
+    fwd_f = sum(_stage_fwd_flops(cfg, s, n_stages, seq_len, "none", False)
+                for s in range(lo, hi))
+    # plan-driven fusion: contiguous structurally identical decoder
+    # stages scan as one group; the encoder/embed/head stages hand off
+    # sequentially at their kind boundaries
+    groups = [(s0 - lo, c) for s0, c in plan.fusion_groups(span)]
+
+    def span_core(ps, floats, ints):
+        cur = floats
+        for start, count in groups:
+            f = cores[lo + start]
+            if count >= 2:
+                members = [ps[i] for i in range(start, start + count)]
+                stacked = jax.tree.map(
+                    lambda *xs: restack(list(xs)), *members)
+                stacked = jax.tree.map(
+                    lambda a: constrain(a, "pod", *([None] * (a.ndim - 1))),
+                    stacked)
+
+                def body(c, p_s, _f=f):
+                    return _f(p_s, c, ints), None
+                cur, _ = jax.lax.scan(body, cur, stacked)
+            else:
+                cur = f(ps[start], cur, ints)
+        return cur
+
+    if covers_last:
+        def span_loss(ps, floats, ints, labels):
+            return _head_loss(cfg, ps[-1],
+                              span_core(ps, floats, ints)["x"], labels)
+
+        def fwd(ps, inp, labels):
+            floats, ints = _split_payload(inp)
+            return span_loss(ps, floats, ints, labels)
+
+        if lo == 0:
+            def bwd(ps, inp, labels):
+                floats, ints = _split_payload(inp)
+                loss, gp = jax.value_and_grad(span_loss)(
+                    ps, floats, ints, labels)
+                return loss, None, gp
+        else:
+            def bwd(ps, inp, labels):
+                floats, ints = _split_payload(inp)
+                loss, (gp, gf) = jax.value_and_grad(
+                    span_loss, argnums=(0, 1))(ps, floats, ints, labels)
+                return loss, gf, gp
+    else:
+        def fwd(ps, inp):
+            floats, ints = _split_payload(inp)
+            return {**span_core(ps, floats, ints), **ints}
+
+        if lo == 0:
+            def bwd(ps, inp, dy):
+                floats, ints = _split_payload(inp)
+                dy_f, _ = _split_payload(dy)
+                y, pullback = jax.vjp(
+                    lambda p: span_core(p, floats, ints), ps)
+                (gp,) = pullback(_cast_like(dy_f, y))
+                return None, gp
+        else:
+            def bwd(ps, inp, dy):
+                floats, ints = _split_payload(inp)
+                dy_f, _ = _split_payload(dy)
+                y, pullback = jax.vjp(
+                    lambda p, f: span_core(p, f, ints), ps, floats)
+                gp, gf = pullback(_cast_like(dy_f, y))
+                return gf, gp
+
+    return SpanProgram(
+        span=(lo, hi), n_stages=n_stages, specs=specs,
+        fwd=_traced(fwd, trace_hook, (lo, hi), "fwd"),
+        bwd=_traced(bwd, trace_hook, (lo, hi), "bwd"),
+        fwd_flops_per_token=fwd_f, bwd_flops_per_token=3.0 * fwd_f,
+        fwd_fn=fwd, bwd_fn=bwd)
 
 
 def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
                          compress: Optional[str] = None,
                          trace_hook: Optional[Callable] = None
                          ) -> list[StageProgram]:
-    assert cfg.n_layers % n_stages == 0
-    assert cfg.encoder_layers == 0, "enc-dec archs use pod-DP (DESIGN §5)"
+    get_stage_plan(cfg, n_stages)      # validates the split (ValueError)
     comp = codecs.resolve_mode(cfg, compress)
     learned = comp in codecs.LEARNED and n_stages > 1
+    if cfg.encoder_layers:
+        if learned:
+            raise NotImplementedError(
+                "learned boundary codecs are unsupported for "
+                "encoder-decoder stage programs (tree-valued boundaries)")
+        return _build_stage_programs_encdec(cfg, n_stages, seq_len,
+                                            trace_hook)
     programs = []
     for s in range(n_stages):
         specs = _stage_specs(cfg, s, n_stages, comp, learned)
@@ -287,11 +492,11 @@ def build_stage_programs(cfg: ArchConfig, n_stages: int, seq_len: int,
 def _span_fingerprint(cfg: ArchConfig, s: int, n_stages: int, comp: str,
                       learned: bool, specs_s: Tree):
     """Two covered stages may share one scan slot iff this matches: same
-    layer runs, same edge role, and bit-identical param-tree geometry."""
-    _, runs, reps = _stage_runs(cfg, s, n_stages)
+    plan structure (runs/reps/edge ownership) and bit-identical
+    param-tree geometry."""
+    spec = get_stage_plan(cfg, n_stages).stages[s]
     leaves, treedef = jax.tree.flatten(specs_s, is_leaf=P.is_spec)
-    return (tuple(runs), reps, s == 0, s == n_stages - 1,
-            treedef, tuple(leaves))
+    return spec.structural_key + (treedef, tuple(leaves))
 
 
 def _scan_groups(fingerprints: list) -> list[tuple[int, int]]:
@@ -329,10 +534,15 @@ def build_span_program(cfg: ArchConfig, n_stages: int, seq_len: int,
     lo, hi = span
     if not (0 <= lo < hi <= n_stages):
         raise ValueError(f"span [{lo}, {hi}) outside [0, {n_stages})")
-    assert cfg.n_layers % n_stages == 0
-    assert cfg.encoder_layers == 0, "enc-dec archs use pod-DP (DESIGN §5)"
+    get_stage_plan(cfg, n_stages)      # validates the split (ValueError)
     comp = codecs.resolve_mode(cfg, compress)
     learned = comp in codecs.LEARNED and n_stages > 1
+    if cfg.encoder_layers:
+        if learned:
+            raise NotImplementedError(
+                "learned boundary codecs are unsupported for "
+                "encoder-decoder span programs (tree-valued boundaries)")
+        return _build_span_encdec(cfg, n_stages, seq_len, span, trace_hook)
     covers_last = hi == n_stages
 
     specs: dict[int, Tree] = {}
@@ -412,6 +622,28 @@ def init_stage_params(programs: list[StageProgram], key: jax.Array
                       ) -> list[Tree]:
     keys = jax.random.split(key, len(programs))
     return [P.init(k, p.specs) for k, p in zip(keys, programs)]
+
+
+def split_whisper_params(cfg: ArchConfig, n_stages: int,
+                         params: Tree) -> list[Tree]:
+    """Slice a full whisper tree (``models.whisper.whisper_specs``
+    layout) into per-stage trees shaped like the enc-dec stage programs
+    — exact (every leaf a copy or slice), so the staged pipeline matches
+    ``whisper_apply`` bit-for-bit."""
+    per = cfg.n_layers // (n_stages - 1)
+    out: list[Tree] = [{"enc_blocks": params["enc_blocks"],
+                        "enc_norm": params["enc_norm"]}]
+    for s in range(1, n_stages):
+        lo = (s - 1) * per
+        st: Tree = {"dec_blocks": jax.tree.map(
+            lambda a, _lo=lo: a[_lo:_lo + per], params["dec_blocks"])}
+        if s == 1:
+            st["embed"] = params["embed"]
+        if s == n_stages - 1:
+            st["final_norm"] = params["final_norm"]
+            st["head"] = params["head"]
+        out.append(st)
+    return out
 
 
 def split_lm_params(cfg: ArchConfig, n_stages: int, params: Tree,

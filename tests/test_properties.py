@@ -9,7 +9,8 @@ from repro.compression.quant8 import blockwise_quantize, blockwise_dequantize
 from repro.models import rope as rope_lib
 from repro.models import layers as L
 from repro.core.faults import synth_preemptible_trace, active_counts
-from repro.core.rebalance import optimal_assignment, pipeline_throughput
+from repro.core.rebalance import optimal_assignment, pipeline_throughput, \
+    spans_route
 
 
 # ------------------------------------------------------------------ quant
@@ -140,6 +141,110 @@ def test_single_peer_span_serves_whole_pipeline(n_stages, boundary_cost):
                                 stage_costs=[1.0] * n_stages,
                                 boundary_cost=boundary_cost)
     assert fused == 1.0 / n_stages   # interior boundaries cost nothing
+
+
+# ------------------------------------------------------- stage plan
+_PLAN_KINDS = ["attn", "moe", "mla", "mla_moe", "mlstm", "slstm",
+               "mamba", "hymba"]
+
+
+def _plan_cfg(block_kinds):
+    from repro.models.config import (ArchConfig, MLAConfig, MoEConfig,
+                                     SSMConfig)
+    return ArchConfig(
+        name="plan-prop", family="dense", n_layers=len(block_kinds),
+        d_model=64, n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+        block_pattern=tuple(block_kinds),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=32),
+        mla=MLAConfig(kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+                      v_head_dim=16),
+        ssm=SSMConfig(state_dim=8, chunk=16))
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.data())
+def test_stage_plan_segmentation_roundtrips(n_stages, per, data):
+    """Random block_kinds: the plan's per-stage runs are exactly the
+    stage slice's maximal same-kind segments, and concatenating the
+    expanded runs over all stages reproduces the layer pattern — no
+    layer lost, duplicated, or re-kinded by planning.  Summed per-stage
+    flops reproduce the whole-model figure exactly (head included)."""
+    from repro.models.model import segments
+    from repro.models.stage_plan import make_stage_plan
+    from repro.models import flops as F
+    kinds = data.draw(st.lists(st.sampled_from(_PLAN_KINDS),
+                               min_size=n_stages * per,
+                               max_size=n_stages * per))
+    cfg = _plan_cfg(kinds)
+    plan = make_stage_plan(cfg, n_stages)
+    assert plan.n_stages == n_stages
+    flat = []
+    for s, spec in enumerate(plan.stages):
+        lo = s * per
+        assert list(spec.runs) == segments(tuple(kinds[lo:lo + per]))
+        for k, c in spec.runs:
+            flat += [k] * c
+        assert spec.owns_embed == (s == 0)
+        assert spec.owns_head == (s == n_stages - 1)
+    assert flat == list(kinds)
+    total = sum(plan.stage_flops(s, 64) for s in range(n_stages))
+    ref = F.forward_flops_per_token(cfg, 64)
+    assert abs(total - ref) <= 1e-9 * max(ref, 1.0)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.integers(2, 5), st.integers(1, 2), st.data())
+def test_stage_plan_fusion_never_crosses_kind_boundary(n_stages, per,
+                                                       data):
+    """fusion_groups tiles any span with contiguous groups of
+    structurally identical stages: a multi-stage scan group never mixes
+    two different stage structures (the span falls back to sequential
+    hand-off at kind boundaries)."""
+    from repro.models.stage_plan import make_stage_plan
+    kinds = data.draw(st.lists(st.sampled_from(_PLAN_KINDS),
+                               min_size=n_stages * per,
+                               max_size=n_stages * per))
+    lo = data.draw(st.integers(0, n_stages - 1))
+    hi = data.draw(st.integers(lo + 1, n_stages))
+    plan = make_stage_plan(_plan_cfg(kinds), n_stages)
+    groups = plan.fusion_groups((lo, hi))
+    # groups tile [lo, hi) in order
+    tiled = []
+    for start, count in groups:
+        assert count >= 1
+        tiled += list(range(start, start + count))
+    assert tiled == list(range(lo, hi))
+    for start, count in groups:
+        keys = {plan.stages[s].structural_key
+                for s in range(start, start + count)}
+        assert len(keys) == 1        # one structure per scan group
+    # maximality: adjacent groups really differ (no gratuitous splits)
+    for (s0, c0), (s1, _) in zip(groups, groups[1:]):
+        assert plan.stages[s0].structural_key != \
+            plan.stages[s1].structural_key
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 8), st.integers(2, 5), st.integers(1, 2),
+       st.data())
+def test_stage_plan_priced_assignments_route(n_peers, n_stages, per,
+                                             data):
+    """optimal_assignment driven by plan stage rates + per-boundary wire
+    prices still yields a routable span layout (spans_route), whatever
+    the kind mix — per-kind pricing must never break coverage."""
+    from repro.models.stage_plan import make_stage_plan
+    kinds = data.draw(st.lists(st.sampled_from(_PLAN_KINDS),
+                               min_size=n_stages * per,
+                               max_size=n_stages * per))
+    plan = make_stage_plan(_plan_cfg(kinds), n_stages)
+    costs = list(plan.stage_costs(64))
+    bcosts = list(plan.boundary_costs(1, 64, "int8"))
+    spans = optimal_assignment(n_peers, n_stages, costs,
+                               speeds=[1.0] * n_peers, spans=True,
+                               boundary_cost=bcosts)
+    assert spans_route(n_stages, [tuple(sp) for sp in spans])
+    assert pipeline_throughput(spans, [1.0] * n_peers, stage_costs=costs,
+                               boundary_cost=bcosts) > 0.0
 
 
 # ----------------------------------------------------- attention masks

@@ -3,7 +3,6 @@ prefill/decode disaggregated assignment, codec config normalization,
 and ServeRunner end-to-end (token-for-token vs the single-process
 reference, with and without span-peer churn)."""
 import dataclasses
-import sys
 import warnings
 
 import jax.numpy as jnp
@@ -172,15 +171,6 @@ class TestCodecNormalization:
         assert SwarmConfig(codec="auto").codec == "auto"
         with pytest.raises(ValueError):
             SwarmConfig(codec="zstd")
-
-
-def test_core_stage_model_shim_warns():
-    sys.modules.pop("repro.core.stage_model", None)
-    with pytest.warns(DeprecationWarning, match="repro.runtime"):
-        import repro.core.stage_model  # noqa: F401
-    from repro.core.stage_model import build_stage_programs
-    from repro.runtime import build_stage_programs as canonical
-    assert build_stage_programs is canonical
 
 
 # ----------------------------------------------------------- end-to-end
