@@ -1,0 +1,229 @@
+"""Per-kernel microbenchmarks: the Pallas hot path vs its jnp oracle.
+
+For each kernel on the training hot path (flash attention forward,
+rmsnorm, the blockwise-int8 wire round trip, and the fused
+boundary-codec crossing) this measures samples/s for both backends,
+records the analytic FLOPs / bytes moved, and derives roofline times
+from ``benchmarks.roofline``'s cost-model constants — so the per-kernel
+numbers and the whole-model roofline tables share one source of truth.
+
+``bytes_moved`` counts HBM traffic for the FUSED launch; for the fused
+boundary crossing ``bytes_twopass`` adds the intermediate wire tensor
+the unfused encode->quantize sequence writes and re-reads — the traffic
+the fusion removes.
+
+On CPU the Pallas numbers run under the interpreter (orders of
+magnitude slower — see ``repro.kernels.backend``); they are recorded
+for trend tracking, never asserted faster.  Emits machine-readable
+``artifacts/BENCH_kernels.json`` (CI uploads it with ``if: always()``).
+
+    PYTHONPATH=src python -m benchmarks.bench_kernels [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import roofline
+
+DTYPE_BYTES = 4                                 # benchmarks run f32
+
+
+def kernel_roofline(flops: float, bytes_moved: float) -> dict:
+    """Roofline terms from the shared cost-model constants."""
+    t_compute = flops / roofline.PEAK_FLOPS
+    t_memory = bytes_moved / roofline.HBM_BW
+    return {
+        "flops": flops,
+        "bytes": bytes_moved,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "intensity_flops_per_byte": flops / max(bytes_moved, 1.0),
+        "bound": "memory" if t_memory >= t_compute else "compute",
+    }
+
+
+def _time(fn, *args, iters: int = 5) -> float:
+    jax.block_until_ready(fn(*args))            # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _maxdiff(a, b) -> float:
+    return float(jnp.max(jnp.abs(jnp.asarray(a, jnp.float32)
+                                 - jnp.asarray(b, jnp.float32))))
+
+
+def _record(name, tokens, t_jnp, t_pallas, diff, flops, bytes_moved,
+            extra=None):
+    rec = {
+        "tokens": tokens,
+        "jnp_s_per_call": t_jnp,
+        "pallas_s_per_call": t_pallas,
+        "jnp_samples_per_s": tokens / t_jnp,
+        "pallas_samples_per_s": tokens / t_pallas,
+        "max_abs_diff": diff,
+        "roofline": kernel_roofline(flops, bytes_moved),
+    }
+    if extra:
+        rec.update(extra)
+    return rec
+
+
+# ------------------------------------------------------------- kernels
+def bench_flash(B, S, H, KV, hd, iters) -> dict:
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    from repro.models.flash import _flash_fwd_impl
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    scale = hd ** -0.5
+    jfn = jax.jit(lambda q, k, v: _flash_fwd_impl(
+        q, k, v, True, 0, 0, S, S, scale)[0])
+    pfn = lambda q, k, v: flash_attention_fwd(q, k, v, True, 0, scale)
+    t_j, t_p = _time(jfn, q, k, v, iters=iters), \
+        _time(pfn, q, k, v, iters=iters)
+    flops = 0.5 * 4.0 * B * H * S * S * hd        # causal: half the tiles
+    bts = DTYPE_BYTES * (q.size + k.size + v.size + B * S * H * hd)
+    return _record("flash_fwd", B * S, t_j, t_p,
+                   _maxdiff(jfn(q, k, v), pfn(q, k, v)), flops, bts,
+                   {"shape": [B, S, H, hd]})
+
+
+def bench_rmsnorm(B, S, d, iters) -> dict:
+    from repro.kernels.rmsnorm.kernel import rmsnorm
+    from repro.kernels.rmsnorm.ref import rmsnorm_ref
+    x = jax.random.normal(jax.random.PRNGKey(0), (B * S, d), jnp.float32)
+    scale = jnp.ones((d,), jnp.float32)
+    jfn = jax.jit(rmsnorm_ref)
+    pfn = rmsnorm
+    t_j, t_p = _time(jfn, x, scale, iters=iters), \
+        _time(pfn, x, scale, iters=iters)
+    flops = 4.0 * x.size
+    bts = DTYPE_BYTES * (2 * x.size + d)
+    return _record("rmsnorm", B * S, t_j, t_p,
+                   _maxdiff(jfn(x, scale), pfn(x, scale)), flops, bts,
+                   {"shape": [B * S, d]})
+
+
+def bench_int8_roundtrip(B, S, d, iters) -> dict:
+    from repro.compression.quant8 import _roundtrip, BLOCK
+    from repro.kernels.boundary.kernel import qdq_flat
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, d), jnp.float32)
+    jfn = jax.jit(lambda x: _roundtrip(x, BLOCK))
+    pfn = jax.jit(lambda x: qdq_flat(x, BLOCK))
+    t_j, t_p = _time(jfn, x, iters=iters), _time(pfn, x, iters=iters)
+    flops = 6.0 * x.size
+    bts = DTYPE_BYTES * 2 * x.size
+    return _record("int8_roundtrip", B * S, t_j, t_p,
+                   _maxdiff(jfn(x), pfn(x)), flops, bts,
+                   {"shape": [B, S, d], "block": BLOCK})
+
+
+def bench_boundary(mode, B, S, d, c, iters) -> dict:
+    """The fused crossing: encode(+QDQ) on the sender, dequantize+decode
+    on the receiver, vs the two-pass jnp sequence."""
+    from repro.kernels.boundary import kernel as K
+    from repro.kernels.boundary import ref as R
+    k = d // c if mode == "maxout" else 1
+    qb = R.wire_qblock(c)
+    x = jax.random.normal(jax.random.PRNGKey(0), (B, S, d), jnp.float32)
+    w_c = (jax.random.normal(jax.random.PRNGKey(1), (d, c)) * 0.2
+           if mode == "bottleneck" else None)
+    w_d = jax.random.normal(jax.random.PRNGKey(2), (c, d)) * 0.2
+    T = B * S
+
+    jenc = jax.jit(lambda x: R.encode_quantize_ref(x, w_c, mode, k, qb))
+    penc = jax.jit(lambda x: K.encode_quantize(x, w_c, mode, k, qb))
+    q, s = jenc(x)
+    jdec = jax.jit(lambda q, s: R.dequantize_decode_ref(
+        q, s, w_d, mode, qb))
+    pdec = jax.jit(lambda q, s: K.dequantize_decode(q, s, w_d, mode, qb))
+
+    t_je, t_pe = _time(jenc, x, iters=iters), _time(penc, x, iters=iters)
+    t_jd, t_pd = _time(jdec, q, s, iters=iters), \
+        _time(pdec, q, s, iters=iters)
+    qp, sp = penc(x)
+    diff = max(_maxdiff(q, qp), _maxdiff(s, sp),
+               _maxdiff(jdec(q, s), pdec(q, s)))
+
+    mm = 2.0 * T * d * c if mode == "bottleneck" else 0.0
+    flops = mm + 10.0 * T * d                       # matmul + norms + QDQ
+    wire = T * c + DTYPE_BYTES * T * (c // qb)      # codes + scales
+    w_bytes = DTYPE_BYTES * (d * c if mode == "bottleneck" else 0)
+    bytes_fused = DTYPE_BYTES * T * d + w_bytes + wire
+    # unfused: the float wire tensor is written then re-read by quantize
+    bytes_twopass = bytes_fused + 2 * DTYPE_BYTES * T * c
+    enc = _record(f"encode_quantize[{mode}]", T, t_je, t_pe, diff, flops,
+                  bytes_fused, {"shape": [B, S, d], "wire_dim": c,
+                                "qblock": qb,
+                                "bytes_twopass": bytes_twopass})
+    dec = _record(f"dequantize_decode[{mode}]", T, t_jd, t_pd, diff,
+                  2.0 * T * c * d + 6.0 * T * d,
+                  wire + DTYPE_BYTES * (c * d + T * d),
+                  {"shape": [B, S, d], "wire_dim": c})
+    return {"encode_quantize": enc, "dequantize_decode": dec}
+
+
+def run(csv=True, out_path: str = "artifacts/BENCH_kernels.json",
+        smoke: bool = False):
+    print("# kernel microbench: jnp oracle vs pallas "
+          f"(backend={jax.default_backend()})")
+    print("name,us_per_call,derived")
+    if smoke:
+        B, S, d, iters = 1, 32, 64, 1
+    else:
+        B, S, d, iters = 2, 128, 128, 3
+    report = {
+        "bench": "kernels",
+        "backend": jax.default_backend(),
+        "interpret": jax.default_backend() not in ("tpu", "gpu"),
+        "smoke": smoke,
+        "kernels": {
+            "flash_fwd": bench_flash(B, S, 4, 2, 32, iters),
+            "rmsnorm": bench_rmsnorm(B, S, d, iters),
+            "int8_roundtrip": bench_int8_roundtrip(B, S, d, iters),
+        },
+    }
+    for mode in ("bottleneck", "maxout"):
+        pair = bench_boundary(mode, B, S, d, d // 4, iters)
+        for kname, rec in pair.items():
+            report["kernels"][f"{kname}[{mode}]"] = rec
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    for name, rec in report["kernels"].items():
+        rl = rec["roofline"]
+        print(f"kernels/{name},{rec['pallas_s_per_call'] * 1e6:.0f},"
+              f"jnp={rec['jnp_samples_per_s']:.0f}/s "
+              f"pallas={rec['pallas_samples_per_s']:.0f}/s "
+              f"diff={rec['max_abs_diff']:.1e} bound={rl['bound']}")
+        assert rec["max_abs_diff"] < 1e-4, (
+            f"{name}: pallas diverged from jnp oracle by "
+            f"{rec['max_abs_diff']}")
+        # cross-check against the roofline cost model's constants
+        assert abs(rl["t_compute_s"] - rl["flops"] / roofline.PEAK_FLOPS) \
+            < 1e-18 and abs(rl["t_memory_s"]
+                            - rl["bytes"] / roofline.HBM_BW) < 1e-18
+    print(f"kernels/json,0,{out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny shapes, 1 iter (CI fast lane)")
+    ap.add_argument("--out", default="artifacts/BENCH_kernels.json")
+    args = ap.parse_args()
+    run(out_path=args.out, smoke=args.smoke)

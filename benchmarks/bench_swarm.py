@@ -21,6 +21,13 @@ Three headline invariants:
   and a bounded-staleness All-Reduce window (``overlap=True``,
   ``staleness=1``) is at least as fast as the blocking tick, with a
   nonzero fraction of wire time hidden behind compute;
+* **kernel-backed hot path** — the codec workload re-run with
+  ``cfg.kernels="pallas"`` (fused flash / rmsnorm / boundary-codec
+  kernels) reaches the SAME loss trajectory at no lower simulated
+  throughput with zero extra re-traces, and its per-kernel roofline
+  numbers agree with ``benchmarks.roofline``'s cost model; the fused
+  wire-quantized crossing (``cfg.wire_quant``) moves strictly fewer
+  boundary bytes;
 * **heterogeneous stages** — a mixed attention+SSM 4-stage swarm
   (``StagePlan``-driven per-kind stage runs) compiles one jit per
   (stage, kind, shapes) with zero re-traces on a second runner, and its
@@ -49,6 +56,13 @@ CFG = ArchConfig(name="bench-swarm-tiny", family="dense", n_layers=4,
 CFG_CODEC = CFG.with_overrides(name="bench-swarm-tiny-codec",
                                boundary_compression="bottleneck",
                                bottleneck_dim=16)
+# kernel-backed hot path: same codec workload with cfg.kernels="pallas"
+# (fused flash/rmsnorm/boundary kernels; equal-loss regression gate),
+# plus the fused wire-quantized crossing (cfg.wire_quant)
+CFG_PALLAS = CFG_CODEC.with_overrides(name="bench-swarm-tiny-pallas",
+                                      kernels="pallas")
+CFG_WIREQ = CFG_PALLAS.with_overrides(name="bench-swarm-tiny-wireq",
+                                      wire_quant=True)
 # mixed-kind pipeline: one layer per stage -> attn, attn, mamba, mamba
 N_STAGES_HETERO = 4
 CFG_HETERO = CFG.with_overrides(
@@ -100,6 +114,38 @@ def _run_codec(seed: int, span: bool) -> tuple[SwarmRunner, float]:
     t0 = time.perf_counter()
     r.run(until=1e6)
     return r, time.perf_counter() - t0
+
+
+def _run_kernels(cfg: ArchConfig, seed: int) -> tuple[SwarmRunner, float]:
+    """The CFG_CODEC workload with the Pallas hot path on (same seed and
+    sample order as the jnp run, so losses must track)."""
+    r = SwarmRunner(cfg, _scfg("bottleneck"), adamw(lr=1e-2),
+                    numeric=True, seed=seed)
+    r.build(peers_per_stage=PEERS_PER_STAGE)
+    t0 = time.perf_counter()
+    r.run(until=1e6)
+    return r, time.perf_counter() - t0
+
+
+def _kernel_rooflines() -> dict:
+    """Analytic roofline terms for the hot-path kernels at THIS bench's
+    shapes, derived via the same helper (and cost-model constants) as
+    ``benchmarks.bench_kernels`` — cross-checked against
+    ``benchmarks.roofline`` in the asserts below."""
+    from benchmarks.bench_kernels import kernel_roofline
+    B, S = 2, 32                                     # microbatch shape
+    d, hd, H = CFG.d_model, CFG.head_dim, CFG.n_heads
+    c = CFG_CODEC.bottleneck_dim
+    T = B * S
+    return {
+        "flash_fwd": kernel_roofline(
+            0.5 * 4.0 * B * H * S * S * hd,
+            4 * (3 * T * H * hd + T * H * hd)),
+        "rmsnorm": kernel_roofline(4.0 * T * d, 4 * (2 * T * d + d)),
+        "encode_quantize[bottleneck]": kernel_roofline(
+            2.0 * T * d * c + 10.0 * T * d,
+            4 * T * d + 4 * d * c + T * c + 4 * (T * c // 16)),
+    }
 
 
 def _run_hetero(seed: int) -> tuple[SwarmRunner, float]:
@@ -155,6 +201,14 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
     _run_hetero(seed=1)                  # same shapes: cache hits only
     hetero_second = compile_stats()
 
+    # ---- kernel-backed hot path (pallas vs jnp at equal loss)
+    reset_compile_stats()
+    rk, wall_k = _run_kernels(CFG_PALLAS, seed=0)
+    kernels_first = compile_stats()
+    _run_kernels(CFG_PALLAS, seed=1)     # same shapes: cache hits only
+    kernels_second = compile_stats()
+    rq, _ = _run_kernels(CFG_WIREQ, seed=0)   # fused wire-QDQ crossing
+
     peers = PEERS_PER_STAGE * N_STAGES
     naive = peers * N_STAGES                 # per-peer re-trace baseline
     steps = r1.metrics["step_time"]
@@ -205,6 +259,27 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
                               for k, v in sorted(span_keys.items())},
             "span_compiles_after_second_runner":
                 sum(_span_trace_keys(span_stats2).values()),
+        },
+        # kernel-backed hot path (ISSUE 9: pallas throughput >= jnp at
+        # equal loss, zero extra re-traces, roofline cross-check):
+        "kernels": {
+            "model": CFG_PALLAS.name,
+            "jnp_loss": rs_single.metrics["loss"],
+            "pallas_loss": rk.metrics["loss"],
+            "jnp_throughput_sim": rs_single.throughput(),
+            "pallas_throughput_sim": rk.throughput(),
+            "jnp_wire_bytes": rs_single.metrics["wire_bytes"],
+            "pallas_wire_bytes": rk.metrics["wire_bytes"],
+            "compiles_first_run": kernels_first["traces"],
+            "compiles_after_second_run": kernels_second["traces"],
+            "wall_s": wall_k,
+            "wire_quant": {
+                "model": CFG_WIREQ.name,
+                "loss": rq.metrics["loss"],
+                "wire_bytes": rq.metrics["wire_bytes"],
+                "throughput_sim": rq.throughput(),
+            },
+            "roofline": _kernel_rooflines(),
         },
         # mixed attention+SSM 4-stage swarm (the StagePlan workload):
         "hetero": {
@@ -283,6 +358,44 @@ def run(csv=True, out_path: str = "artifacts/BENCH_swarm.json"):
         f"{het['compiles_after_second_run']} vs "
         f"{het['compiles_first_run']}")
 
+    # ---- kernel-path invariants (ISSUE 9 acceptance bar): the pallas
+    # hot path must cost nothing — same loss trajectory (the kernels
+    # share every oracle's math), throughput at least the jnp path's
+    # (the analytic cost model prices the fused path no higher), zero
+    # re-traces for a second same-shape runner, and per-kernel roofline
+    # numbers that agree with benchmarks.roofline's cost model.
+    kn = report["kernels"]
+    assert len(kn["pallas_loss"]) == STEPS
+    for a, b in zip(kn["pallas_loss"], kn["jnp_loss"]):
+        assert abs(a - b) < 1e-4, (
+            f"pallas trajectory diverged from jnp at equal config: "
+            f"{a} vs {b}")
+    assert kn["pallas_throughput_sim"] >= kn["jnp_throughput_sim"], (
+        "pallas path slower than jnp in the cost model: "
+        f"{kn['pallas_throughput_sim']:.2f} vs "
+        f"{kn['jnp_throughput_sim']:.2f} samples/s")
+    assert kn["compiles_after_second_run"] == kn["compiles_first_run"], (
+        "second pallas runner re-traced: "
+        f"{kn['compiles_after_second_run']} vs "
+        f"{kn['compiles_first_run']}")
+    from benchmarks import roofline as _rl
+    for name, r in kn["roofline"].items():
+        assert abs(r["t_compute_s"] - r["flops"] / _rl.PEAK_FLOPS) < 1e-18
+        assert abs(r["t_memory_s"] - r["bytes"] / _rl.HBM_BW) < 1e-18, (
+            f"{name}: roofline terms disagree with benchmarks.roofline")
+    wq = kn["wire_quant"]
+    assert wq["wire_bytes"] < kn["jnp_wire_bytes"], (
+        "wire-quantized crossing moved no fewer bytes: "
+        f"{wq['wire_bytes']} vs {kn['jnp_wire_bytes']}")
+    assert wq["throughput_sim"] >= kn["jnp_throughput_sim"], (
+        "wire-quantized crossing cost throughput: "
+        f"{wq['throughput_sim']:.2f} vs "
+        f"{kn['jnp_throughput_sim']:.2f} samples/s")
+
+    print(f"swarm/kernels,0,pallas={kn['pallas_throughput_sim']:.2f}/s vs "
+          f"{kn['jnp_throughput_sim']:.2f}/s jnp; loss equal at 1e-4; "
+          f"second_run_new=0; wire_quant bytes "
+          f"{wq['wire_bytes']:.0f} vs {kn['jnp_wire_bytes']:.0f}")
     print(f"swarm/span,0,wire_bytes {sp['span_wire_bytes']:.0f} vs "
           f"{sp['single_wire_bytes']:.0f} single; span compiles "
           f"{sum(span_keys.values())} (1 per (span,kind)); loss equal "

@@ -69,8 +69,9 @@ def main() -> None:
     from benchmarks import (bench_square_cube, bench_throughput,
                             bench_rebalance, bench_scaling,
                             bench_compression, bench_cost, bench_swarm,
-                            bench_serve, roofline)
+                            bench_serve, bench_kernels, roofline)
     suites = {
+        "kernels": bench_kernels.run,             # pallas vs jnp per-kernel
         "square_cube": bench_square_cube.run,     # Fig.3 / Table 1
         "throughput": bench_throughput.run,       # Table 2
         "rebalance": bench_rebalance.run,         # Table 5 / Fig.5 / Fig.7

@@ -134,6 +134,56 @@ def decompress(cfg: ArchConfig, mode: str, p: Tree, z: jax.Array
     return z
 
 
+def wire_qblock(cfg: ArchConfig, compress: Optional[str] = None) -> int:
+    """Quantization block for the wire tensor under ``cfg.wire_quant`` —
+    the paper's 64, gcd-aligned down so it divides the wire width."""
+    from repro.kernels.boundary import ref as bref
+    return bref.wire_qblock(wire_dim(cfg, compress))
+
+
+def encode_wire(cfg: ArchConfig, mode: str, p: Tree,
+                x: jax.Array) -> jax.Array:
+    """Sending side of a boundary crossing, routed by ``cfg.kernels``:
+    the legacy two-pass jnp path when nothing is fused, else the fused
+    :mod:`repro.kernels.boundary` op (codec encode + optional blockwise
+    int8 wire QDQ in one launch; gradients identical by construction)."""
+    if mode not in LEARNED:
+        return x
+    pallas = cfg.kernels == "pallas"
+    if not pallas and not cfg.wire_quant:
+        return compress(cfg, mode, p, x)
+    from repro.kernels.boundary import ops as bops
+    w = (p or {}).get("w_c") if mode == "bottleneck" else None
+    k = maxout_k(cfg) if mode == "maxout" else 1
+    return bops.encode_wire(x, w, mode, k, wire_qblock(cfg, mode),
+                            cfg.wire_quant, pallas)
+
+
+def decode_wire(cfg: ArchConfig, mode: str, p: Tree,
+                z: jax.Array) -> jax.Array:
+    """Receiving side of a boundary crossing (mirror of
+    :func:`encode_wire`; the wire QDQ lives on the sending side only,
+    so each direction quantizes exactly once)."""
+    if mode not in LEARNED:
+        return z
+    if cfg.kernels != "pallas":
+        return decompress(cfg, mode, p, z)
+    from repro.kernels.boundary import ops as bops
+    return bops.decode_wire(z, p["w_d"], mode, True)
+
+
+def int8_boundary(cfg: ArchConfig, x: jax.Array) -> jax.Array:
+    """The parameter-free ``int8`` boundary mode, routed by
+    ``cfg.kernels``: quant8's two-launch quantize/dequantize pair, or
+    the fused single-launch Pallas round trip (same codes, same STE
+    backward)."""
+    from repro.compression import quant8
+    if cfg.kernels == "pallas":
+        from repro.kernels.boundary import ops as bops
+        return bops.int8_roundtrip(x, quant8.BLOCK, quant8.BLOCK, True)
+    return quant8.compress_boundary(x)
+
+
 def codec_flops_per_token(cfg: ArchConfig, mode: str, *, sender: bool,
                           receiver: bool) -> float:
     """Forward matmul FLOPs the codec adds to one stage, per token."""

@@ -88,6 +88,15 @@ class SwarmConfig:
     (``boundary_bytes`` — whisper composite payloads, expert-sharded
     MoE top_k routing) from it; ``rebalance_period``-driven span merges
     rank candidate boundaries by those per-edge prices.
+
+    Kernel backend: the hot path the peers execute is picked by the
+    *architecture* config — ``ArchConfig.kernels`` (``"jnp"`` default,
+    ``"pallas"`` for the fused flash/rmsnorm/boundary-codec kernels;
+    pure backend switch, identical trajectories) and
+    ``ArchConfig.wire_quant`` (blockwise-int8 QDQ of the learned
+    codec's wire, priced by ``boundary_bytes``); the swarm itself needs
+    no knob — runners with either backend share ledger, codec, and
+    wire-byte accounting.
     """
     n_stages: int = 3
     microbatch_size: int = 1

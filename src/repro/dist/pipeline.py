@@ -215,13 +215,16 @@ def boundary_crossing(cfg: ArchConfig, comp: str, bparams: Optional[Tree],
     the stage-stacked codec tree (``bparams`` leading dim = boundary
     index).  The codec-boundary core shared by the sequential reference
     and the span programs of ``repro.runtime.stage_model`` — on-device
-    when the boundary is fused inside a span, on the wire otherwise."""
+    when the boundary is fused inside a span, on the wire otherwise.
+    Routed through the ``cfg.kernels``-aware codec helpers, so under
+    ``"pallas"`` the encode(+QDQ) and dequantize+decode sides each
+    collapse to one fused kernel launch."""
     if comp == "int8":
-        return quant8.compress_boundary(x)
+        return codecs.int8_boundary(cfg, x)
     if comp in codecs.LEARNED:
         pb = jax.tree.map(lambda a: a[b], bparams)
-        return codecs.decompress(
-            cfg, comp, pb, codecs.compress(cfg, comp, pb, x))
+        return codecs.decode_wire(
+            cfg, comp, pb, codecs.encode_wire(cfg, comp, pb, x))
     return x
 
 
@@ -293,10 +296,11 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
             that dead slot is pure waste (and would double-compress under
             the learned codecs)."""
             if comp == "int8":
-                return jax.vmap(quant8.compress_boundary)(outs)
+                return jax.vmap(lambda x: codecs.int8_boundary(cfg, x))(
+                    outs)
             if comp in codecs.LEARNED:       # boundary b uses w_c[b]
                 return jax.vmap(
-                    lambda p, x: codecs.compress(cfg, comp, p, x))(
+                    lambda p, x: codecs.encode_wire(cfg, comp, p, x))(
                         bparams, outs)
             return outs
 
@@ -306,7 +310,7 @@ def make_pipeline_train_step(cfg: ArchConfig, optimizer: Optimizer,
             1`` decompresses boundary ``s-1`` with ``w_d[s-1]``."""
             if comp not in codecs.LEARNED:
                 return wire                  # none/int8: wire is d-dim
-            x = jax.vmap(lambda p, z: codecs.decompress(cfg, comp, p, z))(
+            x = jax.vmap(lambda p, z: codecs.decode_wire(cfg, comp, p, z))(
                 bparams, wire[1:])
             full = jnp.zeros(wire.shape[:-1] + (cfg.d_model,), wire.dtype)
             return full.at[1:].set(x)
@@ -414,7 +418,7 @@ def _make_whisper_reference_loss_fn(cfg: ArchConfig, n_stages: int,
     per = cfg.n_layers // (n_stages - 1)
 
     def cross(x):
-        return quant8.compress_boundary(x) if comp == "int8" else x
+        return codecs.int8_boundary(cfg, x) if comp == "int8" else x
 
     def loss_fn(params: Tree, batch: Tree):
         audio, tok = batch["tokens"]["audio"], batch["tokens"]["tok"]

@@ -1,0 +1,29 @@
+"""Backend policy for the Pallas kernels: when to run in interpret mode.
+
+Pallas kernels lower natively on TPU/GPU; everywhere else (the CPU CI
+runners, laptops) they must run under ``interpret=True`` — the Pallas
+interpreter executes the kernel body with plain jax ops, trading speed
+for portability.  Every kernel wrapper in ``repro.kernels`` takes
+``interpret=None`` and resolves it here at trace time, so the same call
+site compiles the real kernel on an accelerator and the interpreted one
+on CPU — nothing is *silently* interpreted on real hardware (the bug
+this module fixes: ``interpret=True`` unconditionally).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# Backends with a native Pallas lowering (Mosaic / Triton).
+_NATIVE_BACKENDS = ("tpu", "gpu")
+
+
+def default_interpret() -> bool:
+    """True iff the default jax backend has no native Pallas lowering."""
+    return jax.default_backend() not in _NATIVE_BACKENDS
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> auto-detect; an explicit bool is honored as-is."""
+    return default_interpret() if interpret is None else bool(interpret)

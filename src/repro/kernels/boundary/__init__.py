@@ -1,0 +1,4 @@
+# Fused boundary-codec crossing kernels: codec encode (w_c matmul or
+# maxout) + blockwise-int8 quantize in ONE Pallas kernel, and the mirror
+# dequantize + decode on the receiving side.  repro.compression.codecs
+# dispatches here under cfg.kernels == "pallas".

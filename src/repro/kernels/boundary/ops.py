@@ -1,0 +1,128 @@
+"""Autodiff-aware fused boundary-crossing ops.
+
+Each op pairs a forward (fused Pallas kernel under ``use_kernel=True``,
+the jnp oracle otherwise) with ONE shared jnp backward that pulls
+cotangents through :mod:`repro.kernels.boundary.ref` — so switching
+``cfg.kernels`` between ``"jnp"`` and ``"pallas"`` changes launch count,
+never gradients.
+
+Wire-quantization semantics mirror ``quant8.compress_boundary``: the
+QDQ is straight-through (rounding contributes no gradient), and under
+``quantized=True`` the *cotangent* is QDQ'd too — that is what actually
+crosses the wire in SWARM both directions (§4.3).  The backward QDQ
+lives on the sending side's :func:`encode_wire` only, so splitting a
+crossing across two peers (elastic path) or composing it in one program
+(GSPMD path) quantizes each direction exactly once.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.boundary import kernel as K
+from repro.kernels.boundary import ref as R
+
+QBLOCK = R.QBLOCK
+wire_qblock = R.wire_qblock
+
+
+# ------------------------------------------------------------ int8 wire
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def int8_roundtrip(x: jax.Array, block: int = QBLOCK,
+                   grad_block: int = QBLOCK,
+                   use_kernel: bool = True) -> jax.Array:
+    """Fused single-launch ``quant8.compress_boundary``: flat blockwise
+    int8 QDQ forward, QDQ'd cotangent backward (STE)."""
+    if jax.numpy.issubdtype(x.dtype, jax.numpy.integer):
+        return x
+    return K.qdq_flat(x, block) if use_kernel else _flat_ref(x, block)
+
+
+def _flat_ref(x, block):
+    from repro.compression.quant8 import _roundtrip
+    return _roundtrip(x, block)
+
+
+def _i8_fwd(x, block, grad_block, use_kernel):
+    return int8_roundtrip(x, block, grad_block, use_kernel), None
+
+
+def _i8_bwd(block, grad_block, use_kernel, _, g):
+    out = K.qdq_flat(g, grad_block) if use_kernel else _flat_ref(
+        g, grad_block)
+    return (out,)
+
+
+int8_roundtrip.defvjp(_i8_fwd, _i8_bwd)
+
+
+# ---------------------------------------------------------- learned wire
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4, 5, 6))
+def encode_wire(x: jax.Array, w: Optional[jax.Array], mode: str, k: int,
+                qb: int, quantized: bool, use_kernel: bool) -> jax.Array:
+    """Sending side of a boundary crossing: codec encode [..., d] ->
+    [..., c] with the wire QDQ fused in when ``quantized``.  ``w`` is
+    ``w_c`` for the bottleneck, ``None`` for maxout."""
+    if use_kernel:
+        return K.encode(x, w, mode, k, qb, quantized)
+    z = R.encode_ref(x, w, mode, k)
+    return R.qdq_ref(z, qb) if quantized else z
+
+
+def _enc_fwd(x, w, mode, k, qb, quantized, use_kernel):
+    return encode_wire(x, w, mode, k, qb, quantized, use_kernel), (x, w)
+
+
+def _enc_bwd(mode, k, qb, quantized, use_kernel, res, g):
+    x, w = res
+    if quantized:                 # the backward wire is quantized too
+        g = R.qdq_ref(g, qb)
+    _, vjp = jax.vjp(lambda x_, w_: R.encode_ref(x_, w_, mode, k), x, w)
+    return vjp(g)
+
+
+encode_wire.defvjp(_enc_fwd, _enc_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3))
+def decode_wire(z: jax.Array, w: jax.Array, mode: str,
+                use_kernel: bool) -> jax.Array:
+    """Receiving side: [..., c] wire -> [..., d].  No QDQ here — the
+    backward-direction wire quantization happens exactly once, at the
+    sender's :func:`encode_wire` VJP."""
+    if use_kernel:
+        return K.decode(z, w, mode)
+    return R.decode_ref(z, w, mode)
+
+
+def _dec_fwd(z, w, mode, use_kernel):
+    return decode_wire(z, w, mode, use_kernel), (z, w)
+
+
+def _dec_bwd(mode, use_kernel, res, g):
+    z, w = res
+    _, vjp = jax.vjp(lambda z_, w_: R.decode_ref(z_, w_, mode), z, w)
+    return vjp(g)
+
+
+decode_wire.defvjp(_dec_fwd, _dec_bwd)
+
+
+# ----------------------------------------------- true wire (codes) format
+def encode_quantize(x, w, mode, k, qb, use_kernel=True):
+    """Fused encode + quantize to the actual payload (int8 codes + f32
+    scales) — what a real transport would put on the wire."""
+    if use_kernel:
+        return K.encode_quantize(x, w, mode, k, qb)
+    return R.encode_quantize_ref(x, w, mode, k, qb)
+
+
+def dequantize_decode(q, s, w, mode, qb, dtype=None, use_kernel=True):
+    """Mirror fused dequantize + decode from wire codes + scales."""
+    import jax.numpy as jnp
+    dtype = jnp.float32 if dtype is None else dtype
+    if use_kernel:
+        return K.dequantize_decode(q, s, w, mode, qb, dtype)
+    return R.dequantize_decode_ref(q, s, w, mode, qb, dtype)

@@ -1,0 +1,97 @@
+"""jnp oracles for the fused boundary-codec crossing.
+
+These define the semantics the Pallas kernels must reproduce (property-
+tested in ``tests/test_pallas_path.py``) and double as the CPU fallback
+and the backward-pass recompute target — the fused ops' custom VJPs
+pull cotangents back through THESE functions on both backends, so
+``kernels="pallas"`` and ``kernels="jnp"`` produce identical gradients
+by construction.
+
+Wire quantization is *row-blocked*: the trailing (feature) dim of the
+wire tensor splits into blocks of ``wire_qblock(width)`` elements, each
+scaled by its absmax and rounded to int8 — the same Dettmers-2021 math
+as ``repro.compression.quant8``, but aligned to the wire rows so one
+kernel tile quantizes what it just encoded.  (The flat d-dim ``int8``
+boundary mode keeps quant8's layout exactly: its flat [n/block, block]
+view IS the row-blocked case with width == block.)
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.compression.bottleneck import _ln
+
+Tree = Any
+
+QBLOCK = 64          # default quantization granularity (paper-faithful)
+
+
+def wire_qblock(width: int, block: int = QBLOCK) -> int:
+    """Largest block <= ``block`` that divides the wire width — ``block``
+    itself when it divides, else gcd (e.g. c=16 -> one block per row)."""
+    if width % block == 0:
+        return block
+    return math.gcd(width, block)
+
+
+# ------------------------------------------------------------------- QDQ
+def qdq_ref(x: jax.Array, qb: int) -> jax.Array:
+    """Row-blocked int8 quantize-dequantize along the trailing dim
+    (``x.shape[-1] % qb == 0``); absmax scaling, clip to [-127, 127]."""
+    shape, dtype = x.shape, x.dtype
+    blocks = x.astype(jnp.float32).reshape(*shape[:-1], shape[-1] // qb, qb)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12) * 127.0),
+                 -127, 127)
+    return (q * scale / 127.0).reshape(shape).astype(dtype)
+
+
+# ------------------------------------------------------------ codec sides
+def encode_ref(x: jax.Array, w: Optional[jax.Array], mode: str,
+               k: int) -> jax.Array:
+    """Sending side: [..., d] -> [..., c] (bottleneck: ln -> @w_c -> ln;
+    maxout: ln -> max-pool over windows of ``k``)."""
+    if mode == "bottleneck":
+        return _ln(_ln(x) @ w.astype(x.dtype))
+    if mode == "maxout":
+        z = _ln(x)
+        m = z.shape[-1]
+        return z.reshape(*z.shape[:-1], m // k, k).max(-1)
+    raise ValueError(f"not a learned codec: {mode!r}")
+
+
+def decode_ref(z: jax.Array, w: jax.Array, mode: str) -> jax.Array:
+    """Receiving side: [..., c] -> [..., d]."""
+    if mode == "bottleneck":
+        return z @ w.astype(z.dtype)
+    if mode == "maxout":
+        return _ln(z) @ w.astype(z.dtype)
+    raise ValueError(f"not a learned codec: {mode!r}")
+
+
+# ----------------------------------------------- true wire (codes) format
+def encode_quantize_ref(x: jax.Array, w: Optional[jax.Array], mode: str,
+                        k: int, qb: int):
+    """Encode + quantize to the actual wire payload: (int8 codes
+    [..., c], f32 scales [..., c//qb])."""
+    z = encode_ref(x, w, mode, k).astype(jnp.float32)
+    blocks = z.reshape(*z.shape[:-1], z.shape[-1] // qb, qb)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12) * 127.0),
+                 -127, 127).astype(jnp.int8)
+    return q.reshape(z.shape), scale[..., 0]
+
+
+def dequantize_decode_ref(q: jax.Array, s: jax.Array, w: jax.Array,
+                          mode: str, qb: int,
+                          dtype=jnp.float32) -> jax.Array:
+    """Mirror of :func:`encode_quantize_ref`: codes + scales -> decoded
+    [..., d] hidden state."""
+    blocks = q.astype(jnp.float32).reshape(
+        *q.shape[:-1], q.shape[-1] // qb, qb)
+    z = (blocks * s[..., None] / 127.0).reshape(q.shape).astype(dtype)
+    return decode_ref(z, w, mode)

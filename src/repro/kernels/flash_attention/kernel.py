@@ -31,7 +31,8 @@ DEFAULT_BK = 512
 
 
 def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
-                      scale, causal, window, nk, bq, bk, sq, sk):
+                      scale, causal, window, nk, bq, bk, sq, sk,
+                      lse_ref=None):
     ki = pl.program_id(2)
     qi = pl.program_id(1)
 
@@ -72,14 +73,31 @@ def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc, *,
     def _finish():
         o_ref[0] = (acc_sc[...]
                     / jnp.maximum(l_sc[...], 1e-30)).astype(o_ref.dtype)
+        if lse_ref is not None:     # log-sum-exp residual for the backward
+            lse_ref[0] = (m_sc[...] + jnp.log(
+                jnp.maximum(l_sc[...], 1e-30)))[:, 0]
+
+
+def _flash_fwd_kernel_lse(q_ref, k_ref, v_ref, o_ref, lse_ref,
+                          m_sc, l_sc, acc_sc, **kw):
+    _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, m_sc, l_sc, acc_sc,
+                      lse_ref=lse_ref, **kw)
 
 
 @functools.partial(jax.jit,
-                   static_argnums=(3, 4, 5, 6, 7, 8))
+                   static_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_attention_fwd(q, k, v, causal=True, window=0, scale=None,
                         block_q: int = DEFAULT_BQ, block_k: int = DEFAULT_BK,
-                        interpret: bool = True):
-    """q [B,Sq,H,D], k/v [B,Sk,KV,Dv] -> [B,Sq,H,Dv]."""
+                        interpret=None, with_lse: bool = False):
+    """q [B,Sq,H,D], k/v [B,Sk,KV,Dv] -> [B,Sq,H,Dv].
+
+    ``interpret=None`` auto-detects the backend (interpret mode only off
+    TPU/GPU).  ``with_lse=True`` additionally returns the per-query
+    log-sum-exp ``[B, KV, G, Sq]`` — the residual the FlashAttention-2
+    backward (``repro.models.flash._flash_bwd``) recomputes tiles from.
+    """
+    from repro.kernels.backend import resolve_interpret
+    interpret = resolve_interpret(interpret)
     B, Sq, H, D = q.shape
     Sk, KV = k.shape[1], k.shape[2]
     Dv = v.shape[-1]
@@ -100,11 +118,20 @@ def flash_attention_fwd(q, k, v, causal=True, window=0, scale=None,
     kf = k.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pk, D)
     vf = v.transpose(0, 2, 1, 3).reshape(B * KV, Sk + pk, Dv)
 
+    body = _flash_fwd_kernel_lse if with_lse else _flash_fwd_kernel
     kernel = functools.partial(
-        _flash_fwd_kernel, scale=scale, causal=causal, window=window,
+        body, scale=scale, causal=causal, window=window,
         nk=nk, bq=bq, bk=bk, sq=Sq, sk=Sk)
 
-    out = pl.pallas_call(
+    out_specs = pl.BlockSpec((1, bq, Dv), lambda h, qi, ki: (h, qi, 0))
+    out_shape = jax.ShapeDtypeStruct((B * H, Sq + pq, Dv), v.dtype)
+    if with_lse:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, bq), lambda h, qi, ki: (h, qi))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B * H, Sq + pq), jnp.float32)]
+
+    res = pl.pallas_call(
         kernel,
         grid=(B * H, nq, nk),
         in_specs=[
@@ -114,8 +141,8 @@ def flash_attention_fwd(q, k, v, causal=True, window=0, scale=None,
             pl.BlockSpec((1, bk, Dv),
                          lambda h, qi, ki, _G=G: (h // _G, ki, 0)),
         ],
-        out_specs=pl.BlockSpec((1, bq, Dv), lambda h, qi, ki: (h, qi, 0)),
-        out_shape=jax.ShapeDtypeStruct((B * H, Sq + pq, Dv), v.dtype),
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),     # running max m
             pltpu.VMEM((bq, 1), jnp.float32),     # running denom l
@@ -123,5 +150,11 @@ def flash_attention_fwd(q, k, v, causal=True, window=0, scale=None,
         ],
         interpret=interpret,
     )(qf, kf, vf)
-    out = out.reshape(B, H, Sq + pq, Dv).transpose(0, 2, 1, 3)
-    return out[:, :Sq]
+    out = res[0] if with_lse else res
+    out = out.reshape(B, H, Sq + pq, Dv).transpose(0, 2, 1, 3)[:, :Sq]
+    if not with_lse:
+        return out
+    # [B*H, Sq] -> [B, KV, G, Sq]: H splits as (KV, G) with h = kv*G + g,
+    # matching the jnp oracle's lse layout (models.flash._flash_fwd_impl)
+    lse = res[1].reshape(B, KV, G, Sq + pq)[..., :Sq]
+    return out, lse

@@ -1,15 +1,24 @@
-"""jit'd public wrappers: arbitrary-shape blockwise int8 round trip."""
+"""jit'd public wrappers: arbitrary-shape blockwise int8 round trip.
+
+``interpret=None`` (the default) auto-detects the backend — the kernel
+lowers natively on TPU/GPU and runs under the Pallas interpreter
+elsewhere (``repro.kernels.backend``), so nothing is silently
+interpreted on real hardware.
+"""
 from __future__ import annotations
+
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.backend import resolve_interpret
 from repro.kernels.quant8 import kernel as K
 from repro.kernels.quant8 import ref as R
 
 
 def quantize(x: jax.Array, block: int = 64, *, use_kernel: bool = True,
-             interpret: bool = True):
+             interpret: Optional[bool] = None):
     """Any-shape x -> (codes [nb, block] int8, scales [nb,1] f32, meta)."""
     shape, dtype = x.shape, x.dtype
     flat = x.reshape(-1)
@@ -17,17 +26,18 @@ def quantize(x: jax.Array, block: int = 64, *, use_kernel: bool = True,
     if pad:
         flat = jnp.pad(flat, (0, pad))
     if use_kernel:
-        q, s = K.quantize(flat, block, interpret)
+        q, s = K.quantize(flat, block, resolve_interpret(interpret))
     else:
         q, s = R.quantize_ref(flat, block)
     return q, s, (shape, dtype, pad)
 
 
 def dequantize(q, s, meta, *, use_kernel: bool = True,
-               interpret: bool = True):
+               interpret: Optional[bool] = None):
     shape, dtype, pad = meta
     if use_kernel:
-        flat = K.dequantize(q, s, dtype, interpret).reshape(-1)
+        flat = K.dequantize(q, s, dtype,
+                            resolve_interpret(interpret)).reshape(-1)
     else:
         flat = R.dequantize_ref(q, s, dtype).reshape(-1)
     if pad:
@@ -36,7 +46,7 @@ def dequantize(q, s, meta, *, use_kernel: bool = True,
 
 
 def roundtrip(x: jax.Array, block: int = 64, *, use_kernel: bool = True,
-              interpret: bool = True) -> jax.Array:
+              interpret: Optional[bool] = None) -> jax.Array:
     q, s, meta = quantize(x, block, use_kernel=use_kernel,
                           interpret=interpret)
     return dequantize(q, s, meta, use_kernel=use_kernel,

@@ -25,8 +25,11 @@ def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps):
 
 @functools.partial(jax.jit, static_argnums=(2, 3))
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
-            interpret: bool = True) -> jax.Array:
-    """x [..., d] -> rmsnorm(x) * scale."""
+            interpret=None) -> jax.Array:
+    """x [..., d] -> rmsnorm(x) * scale.  ``interpret=None`` auto-detects
+    the backend (interpret mode only off TPU/GPU)."""
+    from repro.kernels.backend import resolve_interpret
+    interpret = resolve_interpret(interpret)
     shape = x.shape
     d = shape[-1]
     rows = x.size // d

@@ -60,6 +60,15 @@ class ArchConfig:
     ``share_groups`` set is rejected (sharing across kinds is
     undefined); encoder-decoder configs plan stage 0 as the encoder pod
     and split decoder layers over the remaining stages.
+
+    ``kernels`` selects the hot-path backend for every execution path
+    that reads this config (the four runtime executors, the GSPMD
+    pipeline, and the single-process step): ``"jnp"`` is the oracle
+    math, ``"pallas"`` the fused kernels in ``repro.kernels`` — a pure
+    backend switch, identical numerics within float tolerance.
+    ``wire_quant`` additionally int8-quantizes the learned codec's wire
+    tensor (a *semantic* switch: it changes what crosses the boundary,
+    identically on both backends).
     """
     name: str
     family: str                      # dense | moe | ssm | hybrid | audio | vlm
@@ -105,6 +114,21 @@ class ArchConfig:
     pipeline_stages: int = 0         # declared pipeline depth: >1 attaches
                                      # the stage-stacked learned-codec params
                                      # to model_specs (one pair per boundary)
+    kernels: str = "jnp"             # hot-path backend: "jnp" (default) runs
+                                     # the pure-jnp reference math; "pallas"
+                                     # routes flash attention, rmsnorm and
+                                     # the boundary codec through the fused
+                                     # repro.kernels Pallas kernels (same
+                                     # math, auto-interpreted off TPU/GPU —
+                                     # see repro.kernels.backend)
+    wire_quant: bool = False         # blockwise-int8 quantize the LEARNED
+                                     # codec's c-dim wire tensor in both
+                                     # directions (activations fwd,
+                                     # cotangents bwd, straight-through
+                                     # across rounding) — the paper's §4.3
+                                     # quantize-on-send applied on top of
+                                     # bottleneck/maxout; no-op for
+                                     # none/int8 boundary modes
     # --- max positions for serving ---
     max_seq_len: int = 1 << 20
 

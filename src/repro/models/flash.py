@@ -179,10 +179,42 @@ def _flash_bwd(causal, window, q_offset, cq, ck, scale, res, do):
 _flash.defvjp(_flash_fwd, _flash_bwd)
 
 
+# --------------------------------------------------------- pallas backend
+# Same custom-VJP pairing with the Pallas TPU kernel as the forward: the
+# kernel emits (out, lse) in one fused pass, and the backward REUSES the
+# chunked jnp ``_flash_bwd`` above (oracle-identical gradients by
+# construction — ``tests/test_flash_vjp.py`` covers that backward).  The
+# kernel's block-position arithmetic hard-codes ``q_offset = Sk - Sq``
+# (0 for training/prefill), so :func:`flash_attention` only routes here
+# when that holds — anything else falls back to the jnp path.
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _flash_pallas(q, k, v, causal, window, q_offset, cq, ck, scale):
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    return flash_attention_fwd(q, k, v, causal, window, scale,
+                               cq, ck, None, False)
+
+
+def _flash_pallas_fwd(q, k, v, causal, window, q_offset, cq, ck, scale):
+    from repro.kernels.flash_attention.kernel import flash_attention_fwd
+    out, lse = flash_attention_fwd(q, k, v, causal, window, scale,
+                                   cq, ck, None, True)
+    return out, (q, k, v, out, lse)
+
+
+_flash_pallas.defvjp(_flash_pallas_fwd, _flash_bwd)
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                     q_offset=0, chunk_q=512, chunk_k=1024,
-                    scale: Optional[float] = None):
-    """Drop-in for chunked_attention with a memory-correct backward."""
+                    scale: Optional[float] = None, impl: str = "jnp"):
+    """Drop-in for chunked_attention with a memory-correct backward.
+
+    ``impl="pallas"`` (``cfg.kernels``) runs the fused Pallas forward
+    kernel with the same chunked backward; it requires ``q_offset ==
+    Sk - Sq`` (the kernel's implicit alignment) and no soft-capping —
+    other calls silently use the jnp path, so decode/softcap callers
+    need no special-casing.
+    """
     from repro.models.probe import probe_enabled
     B, Sq, H, Dq = q.shape
     Sk = k.shape[1]
@@ -195,4 +227,7 @@ def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
         return chunked_attention(q, k, v, causal=causal, window=window,
                                  softcap=softcap, q_offset=q_offset,
                                  chunk_q=cq, chunk_k=ck, scale=scale)
+    if impl == "pallas" and q_offset == Sk - Sq:
+        return _flash_pallas(q, k, v, causal, window, q_offset, cq, ck,
+                             scale)
     return _flash(q, k, v, causal, window, q_offset, cq, ck, scale)

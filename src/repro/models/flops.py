@@ -182,12 +182,20 @@ def boundary_bytes(cfg: ArchConfig, batch: int, seq: int,
     * ``bottleneck``  2 * T * c,       c = ``cfg.bottleneck_dim`` (0 => d/2)
     * ``maxout``      2 * T * (d / k), k = ``cfg.maxout_k`` (0 => derived —
                       see ``repro.compression.codecs.maxout_k``)
+
+    Under ``cfg.wire_quant`` the learned codecs' c-dim wire additionally
+    crosses as int8 codes + f32 per-block scales (block =
+    ``codecs.wire_qblock``): T*c + 4 * T * (c / qb) bytes.
     """
     from repro.compression import codecs, quant8   # lazy: keep module light
     tokens = batch * seq
     if compression == "int8":
         return float(quant8.compressed_nbytes(tokens * cfg.d_model))
-    return 2.0 * tokens * codecs.wire_dim(cfg, compression)
+    c = codecs.wire_dim(cfg, compression)
+    if compression in codecs.LEARNED and cfg.wire_quant:
+        qb = codecs.wire_qblock(cfg, compression)
+        return float(tokens * c + 4.0 * tokens * (c // qb))
+    return 2.0 * tokens * c
 
 
 def wire_nbytes(n_elements: float, compression: str = "none") -> float:

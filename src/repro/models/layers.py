@@ -26,13 +26,19 @@ def norm_specs(cfg: ArchConfig, d: Optional[int] = None) -> Tree:
 
 def apply_norm(cfg: ArchConfig, p: Tree, x: jax.Array) -> jax.Array:
     dt = x.dtype
-    x = x.astype(jnp.float32)
     if cfg.norm == "layernorm":
+        x = x.astype(jnp.float32)
         mu = x.mean(-1, keepdims=True)
         var = ((x - mu) ** 2).mean(-1, keepdims=True)
         y = (x - mu) * jax.lax.rsqrt(var + 1e-6)
         return (y * p["scale"].astype(jnp.float32)
                 + p["bias"].astype(jnp.float32)).astype(dt)
+    if cfg.kernels == "pallas":
+        # fused Pallas forward (one pass instead of the unfused f32
+        # round trip) + analytic backward; layernorm stays jnp
+        from repro.kernels.rmsnorm.ops import rmsnorm_train
+        return rmsnorm_train(x, p["scale"])
+    x = x.astype(jnp.float32)
     var = (x ** 2).mean(-1, keepdims=True)
     y = x * jax.lax.rsqrt(var + 1e-6)
     # gemma-style (1 + scale) keeps init at identity; standard rmsnorm when
@@ -117,7 +123,7 @@ def apply_attn(cfg: ArchConfig, p: Tree, x: jax.Array, positions: jax.Array,
         causal=cfg.causal if causal is None else causal,
         window=cfg.sliding_window if window is None else window,
         softcap=cfg.attn_logit_softcap,
-        chunk_q=chunk_q, chunk_k=chunk_k)
+        chunk_q=chunk_q, chunk_k=chunk_k, impl=cfg.kernels)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(x.dtype))
     if return_kv:
         return y, (k, v)

@@ -431,15 +431,27 @@ def single_stage(ex: StageExecutor, stage: Optional[int]) -> None:
             f"{type(ex).__name__} serves stage {ex.stage}, not {stage}")
 
 
-def _int8_roundtrip_tree(tree: Tree, quant_block: int) -> Tree:
+def _int8_roundtrip_tree(tree: Tree, quant_block: int,
+                         use_kernel: bool = False) -> Tree:
     """int8-round-trip every floating leaf of a wire payload, passing
     integer leaves (e.g. the token ids riding a whisper boundary tree)
-    through untouched.  Plain activations are the single-leaf case."""
-    from repro.compression.quant8 import _roundtrip
+    through untouched.  Plain activations are the single-leaf case.
+    ``use_kernel`` routes through the fused single-launch Pallas round
+    trip (same codes)."""
+    if use_kernel:
+        from repro.kernels.boundary.ops import int8_roundtrip
+        rt = lambda a: int8_roundtrip(a, quant_block, quant_block, True)
+    else:
+        from repro.compression.quant8 import _roundtrip
+        rt = lambda a: _roundtrip(a, quant_block)
     return jax.tree.map(
-        lambda a: _roundtrip(a, quant_block)
+        lambda a: rt(a)
         if jnp.issubdtype(jnp.asarray(a).dtype, jnp.floating) else a,
         tree)
+
+
+def _wire_use_kernel(ex: StageExecutor) -> bool:
+    return getattr(getattr(ex, "cfg", None), "kernels", "jnp") == "pallas"
 
 
 def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
@@ -449,7 +461,7 @@ def wire_fwd_codec(ex: StageExecutor, y: Tree) -> Tree:
     last covered stage is the pipeline's last emits a loss, not a
     boundary — and fused (intra-span) boundaries never reach here."""
     if ex.compress_mode == "int8" and ex.stages.stop < ex.n_stages:
-        return _int8_roundtrip_tree(y, ex.quant_block)
+        return _int8_roundtrip_tree(y, ex.quant_block, _wire_use_kernel(ex))
     return y
 
 
@@ -459,5 +471,6 @@ def wire_bwd_codec(ex: StageExecutor, gx: Optional[Tree]
     cotangent (None when the span starts at stage 0 — nothing crosses
     back)."""
     if gx is not None and ex.compress_mode == "int8":
-        return _int8_roundtrip_tree(gx, ex.quant_block)
+        return _int8_roundtrip_tree(gx, ex.quant_block,
+                                    _wire_use_kernel(ex))
     return gx

@@ -184,13 +184,14 @@ def _make_stage_fwd(cfg: ArchConfig, s: int, n_stages: int, comp: str,
         else:
             x = inp.astype(cfg.compute_jdtype)
             if learned:          # wire tensor arrives c-dim: restore
-                x = codecs.decompress(cfg, comp,
-                                      params.get("boundary"), x)
+                x = codecs.decode_wire(cfg, comp,
+                                       params.get("boundary"), x)
         positions = jnp.arange(x.shape[1])
         x, _aux = core(params["blocks"], x,
                        jnp.zeros((), jnp.float32), positions)
         if learned and not is_last:    # emit the c-dim wire tensor
-            x = codecs.compress(cfg, comp, params.get("boundary"), x)
+            # (fused encode + wire QDQ under cfg.kernels / cfg.wire_quant)
+            x = codecs.encode_wire(cfg, comp, params.get("boundary"), x)
         return x
 
     return stage_fwd
