@@ -1,0 +1,307 @@
+"""Control-plane scale benchmark (ISSUE 10): replay a preemptible-fleet
+trace through the planner + wiring at 400-1000 simulated peers.
+
+Three sections, one machine-readable record
+(``artifacts/BENCH_control.json``, uploaded by CI with ``if:
+always()``):
+
+* **planner ms/decision** — ``optimal_assignment(spans=True)``,
+  ``plan_span_change`` and ``plan_migration`` timed at 1000 peers x 48
+  stages on 13B-class stage-plan pricing, against the RECORDED pre-fix
+  baselines (measured at commit 08e5cfa on this workload, before the
+  ControlSnapshot/heap restructure).  The acceptance bar: <= 50 ms per
+  decision, with the recorded baseline >= 10x slower than the matching
+  unit (one full rebalance round — a single snapshot capture plus both
+  Alg.-2 decisions — for the two DHT-reading planners, since the
+  pre-fix implementations each re-read the DHT internally).
+* **throughput retention** — a timing-mode ``SwarmRunner`` fleet
+  replaying a zone-correlated mass-preemption trace
+  (``synth_preemptible_trace(regions=...)``) vs the same fleet steady:
+  retention >= 0.7x, with the snapshot-driven rebalance round and the
+  region-aware (LinkTable) boundary pricing live.
+* **stale-peer leaks** — after the churny replay plus one wiring
+  refresh, ZERO wiring entries (``_stages_of`` / ``ema`` / queue heaps)
+  may reference expired peers, and the per-stage heaps must be
+  compacted to O(live servers), not O(#requests).
+
+    PYTHONPATH=src python -m benchmarks.bench_control [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import SwarmConfig, SwarmRunner, T4, V100, A100
+from repro.core import rebalance as rb
+from repro.core.dht import DHT
+from repro.core.faults import synth_preemptible_trace
+from repro.core.square_cube import default_wan_table
+from repro.models.stage_plan import get_stage_plan
+from repro.optim import adamw
+from repro.configs import swarm1b
+
+# 13B-class dry-run pricing: the paper's swarm-1b stack (48 layers,
+# d=4096 — "compute-equivalent to a 13B model" with its 3x sharing)
+# densified so any stage count dividing 48 plans cleanly.
+MODEL = swarm1b.CONFIG.with_overrides(name="swarm13b-ctl", share_groups=0)
+SEQ = 512
+REGIONS = ("us-east", "us-west", "eu", "ap")
+
+# Pre-fix planner times on THIS workload (1000 peers x 48 stages,
+# swarm-13B stage plan, heterogeneous T4/V100/A100 speeds), measured at
+# commit 08e5cfa — the planners before the per-round ControlSnapshot,
+# the O(1)-coverage/span-multiset candidate scan, and the chunk-rate
+# heap.  Kept as constants so every CI run re-proves the >= 10x bar
+# without re-running a 99-second baseline.  The pre-fix Alg.-2 planners
+# each re-read the DHT internally, so the honest unit of comparison for
+# them is one full rebalance round: a single snapshot capture plus both
+# decisions, against plan_span_change (226.3 ms) + plan_migration
+# (26.0 ms) run back to back.
+BASELINE_MS = {
+    "optimal_assignment": 99095.5,
+    "rebalance_round": 252.3,
+}
+DECISION_BUDGET_MS = 50.0
+
+
+def _fleet_speeds(n: int) -> list[float]:
+    """Heterogeneous preemptible fleet: mostly T4s with V100/A100
+    stragglers-in-reverse (paper §4.3 runs on preemptible T4s; the
+    planner must still place a mixed pool)."""
+    profs = [T4, T4, T4, V100, A100]
+    return [profs[i % len(profs)].flops_per_s / T4.flops_per_s
+            for i in range(n)]
+
+
+def _plan_pricing(n_stages: int):
+    """(stage costs, per-edge bytes) in seconds-per-microbatch units
+    from the 13B stage plan: fwd+bwd compute on a T4 reference, wire
+    priced per boundary."""
+    plan = get_stage_plan(MODEL, n_stages)
+    costs = [3.0 * f * SEQ / T4.flops_per_s
+             for f in plan.stage_costs(SEQ)]
+    bbytes = [plan.boundary_bytes(b, 1, SEQ, "int8")
+              for b in range(n_stages - 1)]
+    return costs, bbytes
+
+
+def _stage_regions(n_stages: int) -> list[str]:
+    """A deliberately bad static placement — contiguous region blocks,
+    so interior boundaries include slow WAN pairs the planner should
+    fuse across."""
+    per = max(1, n_stages // len(REGIONS))
+    return [REGIONS[min(s // per, len(REGIONS) - 1)]
+            for s in range(n_stages)]
+
+
+def bench_planner(n_peers: int, n_stages: int, smoke: bool) -> dict:
+    speeds = _fleet_speeds(n_peers)
+    costs, bbytes = _plan_pricing(n_stages)
+    links = default_wan_table()
+    regions = _stage_regions(n_stages)
+    bcosts = links.edge_costs(bbytes, regions)
+
+    t0 = time.perf_counter()
+    assign = rb.optimal_assignment(n_peers, n_stages, costs,
+                                   speeds=speeds, spans=True,
+                                   boundary_cost=bcosts)
+    ms_assign = (time.perf_counter() - t0) * 1e3
+    assert rb.spans_route(n_stages, assign)
+
+    # region-aware vs region-blind placement, both priced by the REAL
+    # (region-priced) edge costs: optimizing the true objective must
+    # not lose to the uniform-scalar legacy pricing
+    naive = rb.optimal_assignment(
+        n_peers, n_stages, costs, speeds=speeds, spans=True,
+        boundary_cost=float(np.mean(bcosts)))
+    thr_aware = rb.pipeline_throughput(assign, speeds, stage_costs=costs,
+                                       boundary_cost=bcosts)
+    thr_naive = rb.pipeline_throughput(naive, speeds, stage_costs=costs,
+                                       boundary_cost=bcosts)
+
+    # a populated control plane: every peer announces a queue size under
+    # its span's stages, then one snapshot drives both Alg.-2 decisions
+    dht = DHT(lambda: 0.0)
+    rng = np.random.default_rng(0)
+    spans = {f"p{i}": tuple(assign[i]) for i in range(n_peers)}
+    pps: dict[int, list] = {s: [] for s in range(n_stages)}
+    for i, (lo, hi) in enumerate(assign):
+        for s in range(lo, hi):
+            dht.store(dht.load_key(s), f"p{i}",
+                      float(rng.uniform(0.0, 10.0)), ttl=1e9)
+        if hi - lo == 1:
+            pps[lo].append(f"p{i}")
+
+    t0 = time.perf_counter()
+    snap = rb.ControlSnapshot.capture(dht, n_stages)
+    ms_capture = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    rb.plan_migration(snap, n_stages, pps)
+    ms_mig = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    rb.plan_span_change(snap, n_stages, spans, boundary_costs=bcosts)
+    ms_span = (time.perf_counter() - t0) * 1e3
+
+    # one round = one capture shared by both Alg.-2 decisions; the
+    # per-decision figures below charge the shared capture to each, the
+    # round figure charges it once (the baseline planners re-read the
+    # DHT themselves, so the round is the apples-to-apples unit)
+    ms = {"optimal_assignment": ms_assign,
+          "plan_span_change": ms_span + ms_capture,
+          "plan_migration": ms_mig + ms_capture,
+          "rebalance_round": ms_capture + ms_mig + ms_span}
+    out = {
+        "n_peers": n_peers, "n_stages": n_stages, "model": MODEL.name,
+        "ms_per_decision": ms,
+        "snapshot_capture_ms": ms_capture,
+        "baseline_ms": BASELINE_MS,
+        "speedup_vs_baseline": {k: BASELINE_MS[k] / max(ms[k], 1e-9)
+                                for k in BASELINE_MS},
+        "region_aware": {"thr_aware": thr_aware, "thr_naive": thr_naive,
+                         "ratio": thr_aware / max(thr_naive, 1e-12)},
+    }
+    for name, v in ms.items():
+        print(f"planner_{name},ms,{v:.2f}")
+        assert v <= DECISION_BUDGET_MS, (
+            f"{name} took {v:.1f} ms at {n_peers} peers x {n_stages} "
+            f"stages (budget {DECISION_BUDGET_MS} ms)")
+        if not smoke and name in BASELINE_MS:
+            # the recorded baselines were measured at exactly this scale
+            assert BASELINE_MS[name] >= 10.0 * v, (
+                f"{name}: recorded pre-fix baseline "
+                f"{BASELINE_MS[name]:.1f} ms is not >= 10x the measured "
+                f"{v:.1f} ms")
+    assert thr_aware >= 0.999 * thr_naive, (
+        f"region-aware placement lost to region-blind under the true "
+        f"edge prices: {thr_aware:.4f} < {thr_naive:.4f}")
+    return out
+
+
+def _replay_runner(n0: int, n_stages: int, horizon: float,
+                   seed: int = 0) -> SwarmRunner:
+    links = default_wan_table()
+    scfg = SwarmConfig(n_stages=n_stages, microbatch_size=1, seq_len=SEQ,
+                       global_batch=max(2 * n0, 64), n_trainers=n0,
+                       rebalance_period=300.0, codec="int8", spans=True,
+                       link_table=links)
+    profs = [T4, T4, T4, V100, A100]
+    r = SwarmRunner(MODEL, scfg, adamw(), numeric=False, seed=seed,
+                    profile_fn=lambda i: profs[i % len(profs)],
+                    region_fn=lambda i: REGIONS[i % len(REGIONS)])
+    r.build(peers_per_stage=n0 // n_stages)
+    return r
+
+
+def bench_replay(n0: int, n_stages: int, horizon: float) -> tuple[dict,
+                                                                  dict]:
+    steady = _replay_runner(n0, n_stages, horizon)
+    steady.run(until=horizon)
+    thr_steady = steady.throughput()
+
+    churn = _replay_runner(n0, n_stages, horizon)
+    # zone-correlated spot reclaims: elevated mass-preemption pressure,
+    # every mass event emptying capacity from ONE region
+    trace = synth_preemptible_trace(
+        horizon_s=horizon, target_peers=n0,
+        mean_lifetime_s=2.0 * 3600.0, mass_preemption_rate_per_h=1.0,
+        mass_fraction=0.2, seed=7, regions=REGIONS)
+    churn.apply_trace(trace)
+    churn.run(until=horizon)
+    thr_churn = churn.throughput()
+    retention = thr_churn / max(thr_steady, 1e-12)
+
+    replay = {
+        "n0": n0, "n_stages": n_stages, "horizon_s": horizon,
+        "trace_events": len(trace),
+        "thr_steady_samples_per_s": thr_steady,
+        "thr_churn_samples_per_s": thr_churn,
+        "retention": retention,
+        "failures": churn.metrics["failures"],
+        "joins": churn.metrics["joins"],
+        "migrations": churn.metrics["migrations"],
+        "span_changes": churn.metrics["span_changes"],
+    }
+    print(f"replay_retention,ratio,{retention:.3f}")
+
+    # ---- stale-peer leak audit on the churned fleet -----------------
+    live = {pid for pid, p in churn.peers.items()
+            if p.alive and p.serving}
+    expired_entries = 0
+    max_heap = 0
+    for w in churn.wirings:
+        w.refresh_from_dht(churn.dht, churn.announced_stages())
+        expired_entries += sum(1 for pid in w._stages_of
+                               if pid not in live)
+        expired_entries += sum(1 for pid in w.ema if pid not in live)
+        for q in w.queues:
+            expired_entries += sum(1 for pid in q._entries
+                                   if pid not in live)
+            max_heap = max(max_heap, q.heap_size())
+    covered_slots = sum(len(p.stages) for pid, p in churn.peers.items()
+                        if pid in live)
+    leaks = {
+        "live_peers": len(live),
+        "dead_peers": len(churn.peers) - len(live),
+        "wiring_entries_expired": expired_entries,
+        "max_queue_heap_size": max_heap,
+        "dht_stage_records": churn.dht.n_records("stage/"),
+        "dht_load_records": churn.dht.n_records("load/"),
+        "covered_stage_slots": covered_slots,
+    }
+    assert expired_entries == 0, (
+        f"{expired_entries} wiring entries still reference expired "
+        f"peers after refresh — the eviction fix regressed")
+    assert max_heap <= 2 * len(live) + 16, (
+        f"a stage queue heap holds {max_heap} entries for {len(live)} "
+        f"live peers — compaction regressed")
+    assert leaks["dht_stage_records"] <= covered_slots, (
+        f"{leaks['dht_stage_records']} live stage records exceed the "
+        f"{covered_slots} covered slots of live peers — dead peers "
+        f"leaked announcements")
+    return replay, leaks
+
+
+def run(csv=True, out_path: str = "artifacts/BENCH_control.json",
+        smoke: bool = False) -> dict:
+    print("# control plane at preemptible-fleet scale (ISSUE 10)")
+    print("name,unit,value")
+    if smoke:
+        n_planner, s_planner = 200, 12
+        n0, s_replay, horizon = 24, 8, 1800.0
+    else:
+        n_planner, s_planner = 1000, 48
+        n0, s_replay, horizon = 400, 16, 3600.0
+
+    planner = bench_planner(n_planner, s_planner, smoke)
+    replay, leaks = bench_replay(n0, s_replay, horizon)
+
+    report = {"smoke": smoke, "planner": planner, "replay": replay,
+              "leaks": leaks}
+    # write the record FIRST: a regressed run must still leave the
+    # artifact behind for diagnosis (CI uploads it with `if: always()`)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+
+    assert replay["retention"] >= 0.7, (
+        f"throughput retention {replay['retention']:.3f} under the "
+        f"mass-preemption replay fell below 0.7x steady state")
+    print(f"# BENCH_control written to {out_path}")
+    return report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small fleet, short trace (CI fast lane)")
+    ap.add_argument("--out", default="artifacts/BENCH_control.json")
+    args = ap.parse_args()
+    run(out_path=args.out, smoke=args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -56,6 +56,11 @@ def _optimal_throughput(trace, n0: int, n_stages: int, horizon=HORIZON):
     t_mb = T4.compute_time((fpt * 3) * 512)     # fwd+bwd per sample
     rates = []
     for n in counts:
+        if n < n_stages:
+            # counts form raises below one peer per stage: a pool this
+            # depleted has zero weakest-link throughput
+            rates.append(0.0)
+            continue
         alloc = optimal_assignment(int(n), n_stages)
         rates.append(pipeline_throughput(alloc, 1.0 / t_mb / 4.0))
     return float(np.mean(rates)) * 4.0          # fwd+bwd both on peers

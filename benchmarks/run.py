@@ -69,7 +69,8 @@ def main() -> None:
     from benchmarks import (bench_square_cube, bench_throughput,
                             bench_rebalance, bench_scaling,
                             bench_compression, bench_cost, bench_swarm,
-                            bench_serve, bench_kernels, roofline)
+                            bench_serve, bench_control, bench_kernels,
+                            roofline)
     suites = {
         "kernels": bench_kernels.run,             # pallas vs jnp per-kernel
         "square_cube": bench_square_cube.run,     # Fig.3 / Table 1
@@ -82,6 +83,8 @@ def main() -> None:
                                                   # cache + BENCH_swarm.json
         "serve": bench_serve.run,                 # serving layer: tokens/s,
                                                   # p99, churn recovery
+        "control": bench_control.run,             # control plane at 1000-peer
+                                                  # scale + leak audit
     }
     failed = []
     for name, fn in suites.items():

@@ -11,7 +11,7 @@ list of (time_s, delta_peers) events, deterministic given the seed.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator
+from typing import Iterator, Optional, Sequence
 
 import numpy as np
 
@@ -20,6 +20,10 @@ import numpy as np
 class TraceEvent:
     time: float
     delta: int            # +k join, -k leave
+    #: cloud zone the event hits (None = region-agnostic, the historical
+    #: form).  Mass preemptions carry ONE region — spot reclaims are
+    #: zone-correlated, the capacity crunch empties a zone, not the fleet.
+    region: Optional[str] = None
 
 
 def synth_preemptible_trace(
@@ -29,8 +33,18 @@ def synth_preemptible_trace(
     mass_preemption_rate_per_h: float = 0.15,
     mass_fraction: float = 0.12,
     seed: int = 0,
+    regions: Optional[Sequence[str]] = None,
 ) -> list[TraceEvent]:
+    """``regions`` tags every event with a drawn zone (mass events hit a
+    single zone).  The extra draws happen ONLY when regions are
+    requested, so region-less traces stay byte-identical to the
+    historical rng stream for every seed."""
     rng = np.random.default_rng(seed)
+
+    def _region() -> Optional[str]:
+        if regions is None:
+            return None
+        return str(regions[int(rng.integers(len(regions)))])
     events: list[TraceEvent] = []
     n = target_peers
     t = 0.0
@@ -46,15 +60,15 @@ def synth_preemptible_trace(
             break
         u = rng.uniform() * total
         if u < leave_rate and n > 1:
-            events.append(TraceEvent(t, -1))
+            events.append(TraceEvent(t, -1, _region()))
             n -= 1
         elif u < leave_rate + join_rate:
-            events.append(TraceEvent(t, +1))
+            events.append(TraceEvent(t, +1, _region()))
             n += 1
         elif n > 4:
             k = max(1, int(n * mass_fraction * rng.uniform(0.5, 1.5)))
             k = min(k, n - 1)
-            events.append(TraceEvent(t, -k))
+            events.append(TraceEvent(t, -k, _region()))
             n -= k
     return events
 

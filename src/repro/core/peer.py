@@ -90,11 +90,16 @@ class Peer:
 
     def __init__(self, sim: Sim, profile: DeviceProfile,
                  stage: "int | range", *, name: Optional[str] = None,
-                 executor=None):
+                 executor=None, region: str = "local"):
         Peer._ids += 1
         self.id = name or f"peer{Peer._ids}"
         self.sim = sim
         self.profile = profile
+        # which cloud zone this instance lives in: boundary edges between
+        # peers in different regions are priced by the swarm's LinkTable
+        # (repro.core.square_cube), and zone-correlated spot reclaims
+        # take out peers region by region
+        self.region = region
         # how this peer runs its stages (repro.runtime.StageExecutor):
         # a NumericExecutor shared by the stage's peers, a MeshExecutor
         # backing this peer with a device mesh, a PipelineExecutor

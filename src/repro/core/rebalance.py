@@ -20,12 +20,25 @@ split/merge moves the runner executes via ``SwarmRunner._resize_span``.
 ``plan_migration`` is the pure decision function (unit-tested directly and
 reused by the TPU launcher's stage->pod rebalancing, DESIGN.md §3); the
 coroutines that execute the plans live in :mod:`repro.core.swarm`.
+
+Scale: one planning round is driven by a :class:`ControlSnapshot` — the
+per-stage load tables read from the DHT exactly ONCE per key — and the
+decision functions run in O(P·S + P log P) for P peers over S stages
+(incremental coverage / span-multiset maps instead of per-candidate DHT
+re-reads and layout rebuilds, a heap over chunk rates instead of
+re-deriving every stage's aggregate rate per surplus peer).  The paper's
+target fleet is ~1000 preemptible T4s (§4.3, App. I); at that scale the
+pre-snapshot planners were the hot path (tens of seconds per
+``optimal_assignment(spans=True)`` call — see
+``benchmarks/bench_control.py`` for the recorded baseline).
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
+import itertools
 import math
-from typing import Hashable, Optional, Sequence
+from typing import Hashable, Iterable, Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -46,13 +59,58 @@ class SpanChange:
     new_span: tuple[int, int]
 
 
+@dataclasses.dataclass(frozen=True)
+class ControlSnapshot:
+    """One planning round's frozen view of the control-plane DHT.
+
+    Captured with exactly ONE ``DHT.get`` per load key (S gets per
+    round) and shared by every decision function of the round —
+    pre-snapshot, ``plan_migration``/``plan_span_change`` re-read the
+    DHT per (peer, stage) candidate, which made a round O(P²·S) at
+    1000-peer fleets.  All planner entry points accept either a DHT or
+    a ControlSnapshot; the :class:`~repro.core.swarm.SwarmRunner`'s
+    rebalance loop captures one per round.
+    """
+    n_stages: int
+    #: per stage: {peer id -> announced queue size}
+    queues: tuple[dict, ...]
+    #: per stage: sum of announced queue sizes (Alg. 2 lines 7-18)
+    loads: tuple[float, ...]
+
+    @classmethod
+    def capture(cls, dht, n_stages: int) -> "ControlSnapshot":
+        # get_values is the single-pass {subkey: value} read; a span-
+        # fused 1000-peer fleet announces ~50k records per round, so the
+        # per-record cost here IS the capture cost
+        read = getattr(dht, "get_values", None)
+        if read is None:                         # DHT-alike without it
+            read = lambda key: {pid: r.value
+                                for pid, r in dht.get(key).items()}
+        queues = tuple(read(dht.load_key(s)) for s in range(n_stages))
+        return cls(n_stages, queues,
+                   tuple(float(sum(q.values())) for q in queues))
+
+    def queue_of(self, pid: Hashable, stage: int,
+                 default: float = 0.0) -> float:
+        return float(self.queues[stage].get(pid, default))
+
+
+def _as_snapshot(dht, n_stages: int) -> ControlSnapshot:
+    """Planner entry points take a DHT (historical contract, one capture
+    per call) or a pre-captured :class:`ControlSnapshot` (one capture
+    per ROUND, shared across decisions)."""
+    if isinstance(dht, ControlSnapshot):
+        if dht.n_stages != n_stages:
+            raise ValueError(f"snapshot captured for {dht.n_stages} "
+                             f"stages, planner asked about {n_stages}")
+        return dht
+    return ControlSnapshot.capture(dht, n_stages)
+
+
 def stage_loads(dht, n_stages: int) -> list[float]:
-    """Sum the per-peer queue sizes announced for every stage (lines 7-18)."""
-    loads = []
-    for s in range(n_stages):
-        recs = dht.get(dht.load_key(s))
-        loads.append(float(sum(r.value for r in recs.values())))
-    return loads
+    """Sum the per-peer queue sizes announced for every stage (lines 7-18).
+    ``dht`` may be a live DHT or a :class:`ControlSnapshot`."""
+    return list(_as_snapshot(dht, n_stages).loads)
 
 
 def plan_migration(dht, n_stages: int,
@@ -64,7 +122,8 @@ def plan_migration(dht, n_stages: int,
     Returns None when the swarm is already balanced or the min stage has a
     single peer.
     """
-    loads = stage_loads(dht, n_stages)
+    snap = _as_snapshot(dht, n_stages)
+    loads = snap.loads
     s_min = min(range(n_stages), key=lambda s: loads[s])
     s_max = max(range(n_stages), key=lambda s: loads[s])
     if s_min == s_max or loads[s_max] <= loads[s_min]:
@@ -73,11 +132,9 @@ def plan_migration(dht, n_stages: int,
     if len(donors) <= 1:
         return None
 
-    recs = dht.get(dht.load_key(s_min))
     q_min, peer_min = math.inf, None
     for peer in donors:
-        q = recs.get(peer)
-        qv = q.value if q is not None else math.inf
+        qv = snap.queue_of(peer, s_min, default=math.inf)
         if qv < q_min:
             q_min, peer_min = qv, peer
     if peer_min is None:
@@ -86,7 +143,7 @@ def plan_migration(dht, n_stages: int,
 
 
 def spans_route(n_stages: int,
-                spans: Sequence[tuple[int, int]]) -> bool:
+                spans: Iterable[tuple[int, int]]) -> bool:
     """Can a trainer tile ``[0, n_stages)`` out of these spans?
 
     Per-stage *coverage* is necessary but not sufficient: a hop enters a
@@ -95,7 +152,10 @@ def spans_route(n_stages: int,
     a 2-stage pipe and routes; ``{(0,2), (1,3)}`` covers all of a
     3-stage pipe but strands boundary 2 — no span starts there.)
     Every span-layout mutation must preserve this, or routing stalls
-    forever."""
+    forever.  Only the SET of spans matters, so any iterable of ``(lo,
+    hi)`` works — including a span-multiset dict's keys, which is how
+    :func:`plan_span_change` calls it at 1000-peer scale (O(U + S) on U
+    unique spans instead of O(P))."""
     starts: dict[int, set[int]] = {}
     for lo, hi in spans:
         starts.setdefault(lo, set()).add(hi)
@@ -152,16 +212,27 @@ def span_stage_rates(spans: Sequence[tuple[int, int]],
                      overlap_wire: bool = False) -> list[float]:
     """Aggregate service rate per stage under a span assignment: a peer
     of speed ``v`` serving span σ contributes ``v / cost(σ)`` to every
-    stage of σ (it pushes each microbatch through the whole span)."""
+    stage of σ (it pushes each microbatch through the whole span).
+
+    The span cost is memoized per unique ``(lo, hi)`` — planner output
+    reuses a handful of chunk shapes across hundreds of peers, so the
+    accumulation is O(P + U·S̄) rather than O(P·S̄) cost re-derivations
+    (and bitwise-identical to the unmemoized sum: same divisor, same
+    peer-order accumulation)."""
     costs = stage_costs or [1.0] * n_stages
     rate = [0.0] * n_stages
+    ccache: dict[tuple[int, int], float] = {}
     for span, v in zip(spans, speeds):
         if span is None:
             continue
-        c = _span_cost(tuple(span), costs, boundary_cost, n_stages,
-                       overlap_wire)
-        for s in range(span[0], span[1]):
-            rate[s] += v / max(c, 1e-12)
+        key = (span[0], span[1])
+        c = ccache.get(key)
+        if c is None:
+            c = ccache[key] = max(
+                _span_cost(key, costs, boundary_cost, n_stages,
+                           overlap_wire), 1e-12)
+        for s in range(key[0], key[1]):
+            rate[s] += v / c
     return rate
 
 
@@ -196,21 +267,93 @@ def _greedy_single_assignment(speeds: list[float], n_stages: int,
                               ) -> Optional[list[tuple[int, int]]]:
     """Best-effort width-1 placement (the span-free baseline): fastest
     peers first, each onto the currently weakest stage.  None when
-    ``n_peers < n_stages`` — no single-stage placement can cover."""
+    ``n_peers < n_stages`` — no single-stage placement can cover.
+
+    The weakest stage lives at the top of a heap keyed ``(rate, -cost,
+    stage)`` — the same lexicographic order the original O(P·S) argmin
+    scan used (uncovered stages always win, costlier stages break rate
+    ties, lowest index breaks exact ties), so placements are
+    bitwise-identical at O(P log S)."""
     if len(speeds) < n_stages:
         return None
     order = sorted(range(len(speeds)), key=lambda i: -speeds[i])
     spans: list[Optional[tuple[int, int]]] = [None] * len(speeds)
-    rate = [0.0] * n_stages
+    denom = [max(_span_cost((s, s + 1), costs, boundary_cost, n_stages,
+                            overlap_wire), 1e-12) for s in range(n_stages)]
+    heap = [(0.0, -costs[s], s) for s in range(n_stages)]
+    heapq.heapify(heap)
     for i in order:
-        # normalized by cost: the weakest link is min rate[s], and an
-        # uncovered stage (rate 0) always wins — coverage first
-        s = min(range(n_stages), key=lambda j: (rate[j], -costs[j]))
+        # only the top entry is ever updated, so every entry is current
+        rate, negc, s = heap[0]
         spans[i] = (s, s + 1)
-        rate[s] += speeds[i] / max(
-            _span_cost((s, s + 1), costs, boundary_cost, n_stages,
-                       overlap_wire), 1e-12)
+        heapq.heapreplace(heap, (rate + speeds[i] / denom[s], negc, s))
     return spans
+
+
+#: Fleets up to this size run the original exhaustive candidate search
+#: (every chunk count priced with a from-scratch ``span_stage_rates``
+#: per surplus peer) so the 4-8 peer fixtures' decisions stay
+#: bitwise-stable; larger fleets take :func:`_best_span_candidate_fast`,
+#: the heap-bounded scale path of ISSUE 10.
+_EXACT_PEER_LIMIT = 64
+
+
+def _best_span_candidate_fast(v: list[float], order: list[int],
+                              n_stages: int, costs: list[float],
+                              boundary_cost, max_span: Optional[int],
+                              overlap_wire: bool, single, thr):
+    """Heap-bounded span-candidate search for large fleets.
+
+    Two facts make this cheap.  Every candidate assigns whole *chunks*
+    of one contiguous partition, so all stages of a chunk share one
+    aggregate rate — the surplus-reinforcement step only needs a heap
+    over ``(chunk rate, chunk lo)`` (the exact tie-break the per-stage
+    argmin used, since the weakest stage is the lowest-indexed stage of
+    the weakest chunk), one ``heapreplace`` per surplus peer instead of
+    a from-scratch ``span_stage_rates``.  And a chunk count whose
+    fractional upper bound ``Σv / Σ chunk_cost`` cannot strictly beat
+    the incumbent throughput is skipped outright — min-rate is never
+    above the speed-mass / cost-mass ratio, and a tie would lose to the
+    earlier candidate anyway (``max`` keeps the first maximum).
+
+    O(S·(S + P' log S) + P log P) per call for P' surplus peers, vs the
+    original O(P²·S²): the 99-second ``optimal_assignment`` at 1000
+    peers × 48 stages (see benchmarks/bench_control.py) drops under the
+    50 ms round budget."""
+    n_peers = len(v)
+    total_v = sum(v)
+    best = single
+    best_thr = thr(single) if single is not None else -math.inf
+    for k in range(1, min(n_peers, n_stages) + 1):
+        chunks = _contiguous_partition(k, costs)
+        if max_span is not None and any(
+                hi - lo > max_span for lo, hi in chunks):
+            continue
+        ccost = [max(_span_cost(c, costs, boundary_cost, n_stages,
+                                overlap_wire), 1e-12) for c in chunks]
+        if total_v / sum(ccost) <= best_thr:
+            continue
+        by_cost = sorted(range(k), key=lambda c: -ccost[c])
+        assign: list[Optional[tuple[int, int]]] = [None] * n_peers
+        heap = []
+        for rank, c in enumerate(by_cost):
+            i = order[rank]
+            assign[i] = chunks[c]
+            heap.append((v[i] / ccost[c], chunks[c][0], c))
+        heapq.heapify(heap)
+        for i in order[k:]:                  # surplus: reinforce weakest
+            # only the top entry is ever updated -> all entries current
+            rate, lo_c, c = heap[0]
+            assign[i] = chunks[c]
+            heapq.heapreplace(heap, (rate + v[i] / ccost[c], lo_c, c))
+        cand_thr = heap[0][0]                # min chunk rate == min stage
+        if cand_thr > best_thr:
+            best_thr, best = cand_thr, assign
+    if best is None:
+        raise ValueError(
+            f"max_span={max_span} cannot cover {n_stages} stages with "
+            f"{n_peers} peers (need n_peers * max_span >= n_stages)")
+    return best
 
 
 def optimal_assignment(n_peers: int, n_stages: int,
@@ -224,6 +367,10 @@ def optimal_assignment(n_peers: int, n_stages: int,
 
     ``spans=False`` (default): peer *counts* per stage, proportional to
     per-stage compute cost, each stage >= 1 — the historical contract.
+    Raises ``ValueError`` when ``n_peers < n_stages``: one peer per
+    stage is the floor of this form, so a smaller fleet cannot cover
+    the pipeline (historically this silently returned an alloc summing
+    to ``n_stages`` — more peers than exist).
 
     ``spans=True``: one contiguous ``(lo, hi)`` span per peer.  Strong
     peers may hold several stages fused (square-cube, §3.1), pricing
@@ -232,9 +379,17 @@ def optimal_assignment(n_peers: int, n_stages: int,
     :func:`pipeline_throughput` is never below the span-free
     assignment's.  Guarantees full stage coverage for any ``n_peers >=
     1`` (a single peer serves the whole pipeline as one span).
-    ``max_span=1`` forces the width-1 baseline itself."""
+    ``max_span=1`` forces the width-1 baseline itself.  Fleets beyond
+    :data:`_EXACT_PEER_LIMIT` peers take the heap-bounded
+    :func:`_best_span_candidate_fast` path."""
     costs = list(stage_costs or [1.0] * n_stages)
     if not spans:
+        if n_peers < n_stages:
+            raise ValueError(
+                f"{n_peers} peers cannot cover {n_stages} stages one "
+                f"stage per peer (the counts form needs n_peers >= "
+                f"n_stages) — use spans=True, which fuses contiguous "
+                f"stages so any n_peers >= 1 covers the pipeline")
         total = sum(costs)
         alloc = [max(1, round(n_peers * c / total)) for c in costs]
         # fix rounding to sum exactly n_peers, never dropping below 1
@@ -266,6 +421,12 @@ def optimal_assignment(n_peers: int, n_stages: int,
                              f"with {n_peers} peers")
         return single
 
+    order = sorted(range(n_peers), key=lambda i: -v[i])
+    if n_peers > _EXACT_PEER_LIMIT:
+        return _best_span_candidate_fast(v, order, n_stages, costs,
+                                         boundary_cost, max_span,
+                                         overlap_wire, single, thr)
+
     candidates = [] if single is None else [single]
     # contiguous partitions into k chunks, fastest peers on the
     # costliest chunks, surplus peers reinforcing the weakest chunk
@@ -276,7 +437,6 @@ def optimal_assignment(n_peers: int, n_stages: int,
             continue
         by_cost = sorted(range(k), key=lambda c: -_span_cost(
             chunks[c], costs, boundary_cost, n_stages, overlap_wire))
-        order = sorted(range(n_peers), key=lambda i: -v[i])
         assign: list[Optional[tuple[int, int]]] = [None] * n_peers
         for rank, c in enumerate(by_cost):
             assign[order[rank]] = chunks[c]
@@ -433,22 +593,51 @@ def plan_span_change(dht, n_stages: int,
     *routability* (:func:`spans_route`): coverage alone is too weak,
     a layout like ``{(0,2), (1,2), (1,3)}`` covers every stage of a
     3-stage pipe yet no span starts at boundary 2, so every microbatch
-    would stall."""
-    loads = stage_loads(dht, n_stages)
+    would stall.
+
+    ``dht`` may be a live DHT or a per-round :class:`ControlSnapshot`;
+    the candidate scan itself is O(P·S̄ + C·(U + S)) for C candidate
+    moves over U unique spans — per-candidate work is an O(1) coverage
+    lookup (difference-array) and a span-multiset routability probe,
+    never a per-candidate DHT read or full-layout rebuild."""
+    snap = _as_snapshot(dht, n_stages)
+    loads = snap.loads
     s_max = max(range(n_stages), key=lambda s: loads[s])
     s_min = min(range(n_stages), key=lambda s: loads[s])
 
+    cover = [0] * (n_stages + 1)
+    span_count: dict[tuple[int, int], int] = {}
+    for lo, hi in spans.values():
+        cover[lo] += 1
+        cover[hi] -= 1
+        span_count[(lo, hi)] = span_count.get((lo, hi), 0) + 1
+    for s in range(n_stages):
+        cover[s + 1] += cover[s]
+    base_routes = spans_route(n_stages, span_count)
+
     def covers(stage: int, but: Hashable) -> int:
-        return sum(1 for pid, (lo, hi) in spans.items()
-                   if pid != but and lo <= stage < hi)
+        lo, hi = spans[but]
+        return cover[stage] - (1 if lo <= stage < hi else 0)
 
     def routes_after(pid: Hashable, new: tuple[int, int]) -> bool:
-        layout = [sp for q, sp in spans.items() if q != pid] + [new]
-        return spans_route(n_stages, layout)
+        old = spans[pid]
+        if base_routes and span_count.get(old, 0) >= 2:
+            # another peer keeps old's routing edge, and adding an edge
+            # never breaks reachability -> superset of a routing layout
+            return True
+        span_count[old] -= 1
+        if not span_count[old]:
+            del span_count[old]
+        span_count[new] = span_count.get(new, 0) + 1
+        ok = spans_route(n_stages, span_count)
+        span_count[new] -= 1
+        if not span_count[new]:
+            del span_count[new]
+        span_count[old] = span_count.get(old, 0) + 1
+        return ok
 
     def queue_of(pid: Hashable, stage: int) -> float:
-        rec = dht.get(dht.load_key(stage)).get(pid)
-        return rec.value if rec is not None else 0.0
+        return snap.queue_of(pid, stage)
 
     hot = loads[s_max] > imbalance * loads[s_min] + 0.05
     if hot:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional, Sequence
 
 from repro.models.config import ArchConfig
 from repro.models import flops as F
@@ -41,6 +42,87 @@ XXLARGE = LayerSpec("xxlarge", 4096, 16384, 32)
 GPT3 = LayerSpec("GPT-3", 12288, 49152, 96)
 OURS = LayerSpec("Ours", 4096, 16384, 32, layers_per_stage=3, quantize8=True)
 ALL_SPECS = [BASE, XXLARGE, GPT3, OURS]
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkSpec:
+    """One inter-region (or intra-region) link class: the §4.3
+    deployment spans preemptible zones whose pairwise bandwidth/latency
+    differ by an order of magnitude, so boundary pricing must be a
+    function of the REGION PAIR, not one fleet-wide constant."""
+    a: str
+    b: str
+    bandwidth_mbps: float
+    latency_s: float
+
+    def transfer_time(self, nbytes: float) -> float:
+        return self.latency_s + nbytes / (self.bandwidth_mbps * MBPS)
+
+
+class LinkTable:
+    """Symmetric region-pair -> :class:`LinkSpec` lookup.
+
+    Unlisted pairs fall back to ``intra_default`` (same region) or
+    ``cross_default`` (different regions) so a partial table still
+    prices every edge.  ``edge_costs`` is the planner entry point: it
+    turns per-boundary byte counts plus a per-stage region vector into
+    per-boundary *seconds*, which feed ``optimal_assignment`` /
+    ``plan_span_change`` as ``boundary_cost`` — an edge between stages
+    homed in regions linked by a slow WAN pair prices high, so the span
+    planners fuse across slow links first (the region-aware placement
+    of ISSUE 10)."""
+
+    def __init__(self, specs: "list[LinkSpec] | None" = None, *,
+                 intra_default: Optional[LinkSpec] = None,
+                 cross_default: Optional[LinkSpec] = None):
+        self._by_pair: dict[frozenset, LinkSpec] = {}
+        for sp in specs or []:
+            self._by_pair[frozenset((sp.a, sp.b))] = sp
+        self.intra_default = intra_default or LinkSpec(
+            "*", "*", bandwidth_mbps=800.0, latency_s=0.002)
+        self.cross_default = cross_default or LinkSpec(
+            "*", "*", bandwidth_mbps=100.0, latency_s=0.045)
+
+    def spec(self, a: str, b: str) -> LinkSpec:
+        sp = self._by_pair.get(frozenset((a, b)))
+        if sp is not None:
+            return sp
+        return self.intra_default if a == b else self.cross_default
+
+    def transfer_time(self, nbytes: float, a: str, b: str) -> float:
+        return self.spec(a, b).transfer_time(nbytes)
+
+    def edge_costs(self, nbytes_per_edge: "Sequence[float]",
+                   stage_regions: "Sequence[str]") -> list[float]:
+        """Per-boundary seconds for edge ``b`` between the regions
+        serving stages ``b`` and ``b+1``."""
+        if len(stage_regions) != len(nbytes_per_edge) + 1:
+            raise ValueError(
+                f"{len(stage_regions)} stage regions cannot price "
+                f"{len(nbytes_per_edge)} edges (need n_stages = "
+                f"n_edges + 1)")
+        return [self.transfer_time(nb, stage_regions[b],
+                                   stage_regions[b + 1])
+                for b, nb in enumerate(nbytes_per_edge)]
+
+
+def default_wan_table() -> LinkTable:
+    """A 4-region preemptible-fleet WAN model (App. I flavored):
+    fast in-zone links, a slower cross-country pair, and genuinely
+    bad trans-ocean pairs — the spread that makes region-aware span
+    fusion matter."""
+    regions = ("us-east", "us-west", "eu", "ap")
+    specs = [LinkSpec(r, r, bandwidth_mbps=800.0, latency_s=0.002)
+             for r in regions]
+    specs += [
+        LinkSpec("us-east", "us-west", 200.0, 0.030),
+        LinkSpec("us-east", "eu", 100.0, 0.045),
+        LinkSpec("us-west", "eu", 80.0, 0.070),
+        LinkSpec("us-east", "ap", 60.0, 0.080),
+        LinkSpec("us-west", "ap", 100.0, 0.060),
+        LinkSpec("eu", "ap", 50.0, 0.090),
+    ]
+    return LinkTable(specs)
 
 
 def layer_flops(spec: LayerSpec, seq: int, batch: int) -> float:

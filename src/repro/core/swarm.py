@@ -139,6 +139,12 @@ class SwarmConfig:
     # bottlenecked on one stage shrinks onto it, an underloaded peer
     # absorbs an adjacent well-covered stage (saving its host boundary)
     spans: bool = False
+    # inter-region cost model (repro.core.square_cube.LinkTable): when
+    # set, the rebalance loop prices each boundary over the link between
+    # the regions serving its two stages (seconds, not bytes), so span
+    # merges fuse across slow WAN pairs first.  Peers get regions from
+    # the runner's ``region_fn`` and zone-tagged trace events.
+    link_table: Optional[Any] = None
 
     def __post_init__(self):
         if self.compress is not None:
@@ -173,7 +179,8 @@ class SwarmRunner:
                  profile_fn: Optional[Callable[[int], DeviceProfile]] = None,
                  data_fn: Optional[Callable[[int], dict]] = None,
                  programs: Optional[list[StageProgram]] = None,
-                 record_accumulation: bool = False):
+                 record_accumulation: bool = False,
+                 region_fn: Optional[Callable[[int], str]] = None):
         self.cfg = cfg
         self.scfg = scfg
         if scfg.staleness > 0:
@@ -205,6 +212,9 @@ class SwarmRunner:
         self.quant_block = scfg.quant_block
         self.rng = np.random.default_rng(seed)
         self.profile_fn = profile_fn or (lambda i: T4)
+        # zone placement, like profile_fn keyed by join index; only
+        # meaningful with scfg.link_table (region-aware edge pricing)
+        self.region_fn = region_fn or (lambda i: "local")
         self.data_fn = data_fn
 
         # stage execution goes through the runtime layer: one executor
@@ -355,7 +365,8 @@ class SwarmRunner:
         else:
             executor = self._span_executor(span)
         peer = Peer(self.sim, profile or self.profile_fn(len(self.peers)),
-                    span, executor=executor)
+                    span, executor=executor,
+                    region=self.region_fn(len(self.peers)))
         self.peers[peer.id] = peer
         if self.numeric:
             # _resume_step == 0 pins the step-0 reference: stale entries
@@ -432,6 +443,21 @@ class SwarmRunner:
         return [p for p in self.peers.values()
                 if p.alive and p.serving and stage in p.stages
                 and p is not but]
+
+    def _stage_regions(self) -> list[str]:
+        """Dominant region per stage: the most common zone among the
+        live serving peers covering it (alphabetical tie-break; "local"
+        when nobody covers).  This is the per-stage region vector the
+        link table prices boundary edges with."""
+        regions = []
+        for s in range(self.n_stages):
+            counts: dict[str, int] = {}
+            for p in self._covering(s):
+                r = getattr(p, "region", "local")
+                counts[r] = counts.get(r, 0) + 1
+            regions.append(max(sorted(counts), key=counts.get)
+                           if counts else "local")
+        return regions
 
     # ================================================== data / dispatch
     def _open_round(self):
@@ -767,7 +793,12 @@ class SwarmRunner:
                        if p.alive and p.serving and p.stages ==
                        range(s, s + 1)]
                    for s in range(self.n_stages)}
-            mig = rb.plan_migration(self.dht, self.n_stages, pps)
+            # ONE frozen control-plane view per round: every decision
+            # below reads this capture (S DHT gets total), never the
+            # live DHT per candidate — the O(P²·S) -> O(P·S + P log P)
+            # restructure of ISSUE 10
+            snap = rb.ControlSnapshot.capture(self.dht, self.n_stages)
+            mig = rb.plan_migration(snap, self.n_stages, pps)
             if mig is not None:
                 yield from self._migrate(self.peers[mig.peer],
                                          mig.dst_stage)
@@ -779,11 +810,17 @@ class SwarmRunner:
                      if p.alive and p.serving}
             # per-boundary wire prices from the stage plan: merges fuse
             # the most expensive edge first (routed-MoE / whisper
-            # boundaries beat uniform hidden-state ones)
+            # boundaries beat uniform hidden-state ones).  With a link
+            # table the bytes become region-priced SECONDS — an edge
+            # straddling a slow WAN pair ranks highest, so the swarm
+            # fuses across slow links first.
             bcosts = (self.plan.boundary_costs(
                 self.scfg.microbatch_size, self.scfg.seq_len,
                 self.compress_mode) if self.plan is not None else None)
-            ch = rb.plan_span_change(self.dht, self.n_stages, spans,
+            if bcosts is not None and self.scfg.link_table is not None:
+                bcosts = self.scfg.link_table.edge_costs(
+                    list(bcosts), self._stage_regions())
+            ch = rb.plan_span_change(snap, self.n_stages, spans,
                                      boundary_costs=bcosts)
             if ch is not None:
                 yield from self._resize_span(self.peers[ch.peer],
@@ -1119,12 +1156,12 @@ class SwarmRunner:
                 return
             if ev.delta < 0:
                 for _ in range(-ev.delta):
-                    self._fail_random_peer()
+                    self._fail_random_peer(region=ev.region)
             else:
                 for _ in range(ev.delta):
-                    yield from self._join_new_peer()
+                    yield from self._join_new_peer(region=ev.region)
 
-    def _fail_random_peer(self):
+    def _fail_random_peer(self, region: Optional[str] = None):
         live = [p for p in self.peers.values() if p.alive]
 
         def covered(p: Peer) -> bool:
@@ -1139,6 +1176,11 @@ class SwarmRunner:
         # served
         candidates = [p for p in live
                       if covered(p) and self._routes_without(p, None)]
+        if region is not None:
+            # zone-correlated reclaim: the event only takes capacity
+            # from its zone — out-of-zone peers are never substituted
+            candidates = [p for p in candidates
+                          if getattr(p, "region", "local") == region]
         if not candidates:
             return
         self._fail_peer(candidates[self.rng.integers(len(candidates))])
@@ -1157,7 +1199,8 @@ class SwarmRunner:
             w.ban_server(victim.id)
         self._dht_forget(victim)
 
-    def _join_new_peer(self, span: Optional[range] = None):
+    def _join_new_peer(self, span: Optional[range] = None,
+                       region: Optional[str] = None):
         if span is None:
             # new peers join the most loaded stage (§3.2 "assigned to the
             # optimal pipeline stage by following the same protocol")
@@ -1178,10 +1221,15 @@ class SwarmRunner:
             peer.executor = (self._rebacked_executor(peer, span)
                              if peer.executor is not None
                              else self._span_executor(span))
+            if region is not None:
+                peer.region = region      # fresh capacity in the
+                # event's zone: the revived object is a new instance
             peer.revive(span)
         else:
             peer = Peer(self.sim, self.profile_fn(len(self.peers)), span,
-                        executor=self._span_executor(span))
+                        executor=self._span_executor(span),
+                        region=(region if region is not None
+                                else self.region_fn(len(self.peers))))
             self.peers[peer.id] = peer
         self.metrics["joins"] += 1
         ok = yield from self._complete_warm_join(peer, span)

@@ -35,36 +35,66 @@ class _Entry:
 
 
 class StagePriorityQueue:
-    """Lazy-deletion priority queue keyed by accumulated processing time."""
+    """Lazy-deletion priority queue keyed by accumulated processing time.
+
+    Every ``choose_server`` bump pushes a fresh tuple and merely marks
+    the old one invalid, so without compaction the heap grows O(#requests)
+    for the life of the trainer (the ISSUE-10 leak).  When invalidated
+    entries outnumber live ones the heap is rebuilt in place from the
+    survivors — amortized O(1) per update, keeping the heap O(#servers)."""
+
+    #: below this size compaction isn't worth the heapify (and the ratio
+    #: test would thrash on 2-3 entry heaps)
+    _COMPACT_MIN = 8
 
     def __init__(self):
         self._heap: list[tuple[float, int, _Entry]] = []
         self._entries: dict[Hashable, _Entry] = {}
         self._seq = 0
+        self._invalid = 0        # invalidated entries still in the heap
+
+    def _invalidate(self, e: _Entry) -> None:
+        e.valid = False
+        if e.priority != INF:    # INF entries were never pushed
+            self._invalid += 1
+
+    def _maybe_compact(self) -> None:
+        if self._invalid > self._COMPACT_MIN \
+                and 2 * self._invalid > len(self._heap):
+            self._heap = [t for t in self._heap if t[2].valid]
+            heapq.heapify(self._heap)
+            self._invalid = 0
 
     def update(self, server: Hashable, priority: float) -> None:
         old = self._entries.get(server)
         if old is not None:
-            old.valid = False
+            self._invalidate(old)
         self._seq += 1
         e = _Entry(priority, self._seq, server)
         self._entries[server] = e
         if priority != INF:
             heapq.heappush(self._heap, (priority, self._seq, e))
+        self._maybe_compact()
 
     def remove(self, server: Hashable) -> None:
         old = self._entries.pop(server, None)
         if old is not None:
-            old.valid = False
+            self._invalidate(old)
+            self._maybe_compact()
 
     def top(self) -> Optional[tuple[Hashable, float]]:
         while self._heap:
             priority, _, e = self._heap[0]
             if not e.valid:
                 heapq.heappop(self._heap)
+                self._invalid -= 1
                 continue
             return e.server, priority
         return None
+
+    def heap_size(self) -> int:
+        """Current physical heap length (leak diagnostics / tests)."""
+        return len(self._heap)
 
     def servers(self) -> list[Hashable]:
         return [s for s, e in self._entries.items() if e.priority != INF]
@@ -133,8 +163,25 @@ class StochasticWiring:
                    for s in stages)
 
     def refresh_from_dht(self, dht, stage_of_peer) -> None:
-        """Re-admit banned peers that re-announced (§3.2) and discover new
-        ones. ``stage_of_peer``: server -> stage from DHT records."""
+        """Reconcile routing state with the DHT's live view (§3.2).
+        ``stage_of_peer``: server -> stage from DHT records.
+
+        Three cases: evict peers ABSENT from the snapshot, re-admit
+        banned peers that re-announced, discover new ones.  Eviction is
+        the load-bearing half on preemptible fleets — a reclaimed spot
+        instance never says goodbye, its DHT records simply expire, so
+        a peer missing from the snapshot must leave the queues,
+        ``_stages_of`` and ``ema`` after ONE refresh.  Historically it
+        stayed forever: routing kept offering the dead peer until a
+        request failed, and under churn the maps grew without bound
+        (the ISSUE-10 leak).  A healthy peer is never evicted by this —
+        its own TTL'd announcement keeps it in every snapshot — and an
+        evicted peer that comes back is re-discovered below with a
+        fresh jittered EMA prior, exactly like a first join."""
+        for server in list(self._stages_of):
+            if server not in stage_of_peer:
+                self.remove_server(server)
+                self.ema.pop(server, None)
         for server, stage in stage_of_peer.items():
             cur = self._stages_of.get(server)
             if cur != [stage]:

@@ -157,6 +157,22 @@ class StagePlan:
         return tuple(self.boundary_bytes(b, batch, seq_len, compression)
                      for b in range(self.n_stages - 1))
 
+    def link_boundary_costs(self, batch: int, seq_len: int, *,
+                            regions, links,
+                            compression: str = "none"
+                            ) -> tuple[float, ...]:
+        """Per-boundary transfer SECONDS under an inter-region link
+        model: boundary ``b``'s bytes priced over the link between the
+        regions homing stages ``b`` and ``b+1`` (``links`` is a
+        :class:`repro.core.square_cube.LinkTable`, ``regions`` one
+        region name per stage).  This is what makes the span planners
+        region-aware — a boundary straddling a trans-ocean pair costs
+        its real wire time, so ``optimal_assignment`` fuses across slow
+        links first."""
+        return tuple(links.edge_costs(
+            [self.boundary_bytes(b, batch, seq_len, compression)
+             for b in range(self.n_stages - 1)], list(regions)))
+
     # ---- span fusion -------------------------------------------------
     def fusion_groups(self, span=None) -> list[tuple[int, int]]:
         """``(start, count)`` groups of structurally identical

@@ -143,6 +143,60 @@ def test_single_peer_span_serves_whole_pipeline(n_stages, boundary_cost):
     assert fused == 1.0 / n_stages   # interior boundaries cost nothing
 
 
+@settings(max_examples=20, deadline=None)
+@given(st.integers(65, 1000), st.integers(2, 48), st.integers(0, 10_000),
+       st.sampled_from([0.0, 0.25, 1.0]))
+def test_span_assignment_scales_to_preemptible_fleets(
+        n_peers, n_stages, seed, boundary_cost):
+    """ISSUE-10 fleet scale (above the exact-search peer limit): random
+    heterogeneous fleets up to 1000 peers still get a routable,
+    fully-covering span layout that never loses to the width-1 greedy
+    placement."""
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(0.1, 8.0, n_peers).tolist()
+    costs = rng.uniform(0.2, 4.0, n_stages).tolist()
+    spans = optimal_assignment(n_peers, n_stages, costs, speeds=speeds,
+                               spans=True, boundary_cost=boundary_cost)
+    assert len(spans) == n_peers
+    assert spans_route(n_stages, [tuple(sp) for sp in spans])
+    assert {s for lo, hi in spans
+            for s in range(lo, hi)} == set(range(n_stages))
+    thr = pipeline_throughput(spans, speeds, stage_costs=costs,
+                              boundary_cost=boundary_cost)
+    free = optimal_assignment(n_peers, n_stages, costs, speeds=speeds,
+                              spans=True, boundary_cost=boundary_cost,
+                              max_span=1)
+    thr_free = pipeline_throughput(free, speeds, stage_costs=costs,
+                                   boundary_cost=boundary_cost)
+    assert thr >= thr_free - 1e-9
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(4, 8), st.integers(1, 6), st.integers(0, 10_000),
+       st.sampled_from([0.0, 0.25, 1.0]))
+def test_fast_span_path_matches_exact_search_on_small_fleets(
+        n_peers, n_stages, seed, boundary_cost):
+    """The heap-based candidate scan used above ``_EXACT_PEER_LIMIT``
+    must reproduce the exhaustive search's decisions VERBATIM on the
+    4-8 peer fixture sizes — forcing the fast path via the limit must
+    not change a single span (the refactor's no-behavior-change bar)."""
+    from repro.core import rebalance as rb
+    rng = np.random.default_rng(seed)
+    speeds = rng.uniform(0.1, 8.0, n_peers).tolist()
+    costs = rng.uniform(0.2, 4.0, n_stages).tolist()
+    exact = optimal_assignment(n_peers, n_stages, costs, speeds=speeds,
+                               spans=True, boundary_cost=boundary_cost)
+    old = rb._EXACT_PEER_LIMIT
+    rb._EXACT_PEER_LIMIT = 0
+    try:
+        fast = optimal_assignment(n_peers, n_stages, costs,
+                                  speeds=speeds, spans=True,
+                                  boundary_cost=boundary_cost)
+    finally:
+        rb._EXACT_PEER_LIMIT = old
+    assert [tuple(sp) for sp in fast] == [tuple(sp) for sp in exact]
+
+
 # ------------------------------------------------------- stage plan
 _PLAN_KINDS = ["attn", "moe", "mla", "mla_moe", "mlstm", "slstm",
                "mamba", "hymba"]

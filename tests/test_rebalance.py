@@ -3,9 +3,10 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dht import DHT
-from repro.core.rebalance import (plan_migration, plan_span_change,
-                                  optimal_assignment, pipeline_throughput,
-                                  spans_route)
+from repro.core.rebalance import (ControlSnapshot, plan_migration,
+                                  plan_span_change, optimal_assignment,
+                                  pipeline_throughput, spans_route,
+                                  stage_loads)
 
 
 class FakeClock:
@@ -159,6 +160,52 @@ def test_span_change_split_tolerates_queue_jitter():
                            "c": {1: 0.001}})
     ch = plan_span_change(dht, 2, spans)
     assert ch is not None and ch.peer == "a" and ch.new_span == (0, 2)
+
+
+def test_counts_assignment_raises_below_one_peer_per_stage():
+    """``spans=False`` must allocate >= 1 peer per stage; a depleted pool
+    gets the informative error (pointing at spans=True), not a crash or
+    a silent zero-width stage."""
+    with pytest.raises(ValueError, match="spans=True"):
+        optimal_assignment(3, 4)
+    with pytest.raises(ValueError, match="spans=True"):
+        optimal_assignment(0, 2)
+    # exactly one per stage is fine
+    assert optimal_assignment(4, 4) == [1, 1, 1, 1]
+
+
+# --------------------------------------------------- control snapshot
+def test_snapshot_decisions_match_live_dht():
+    """One ControlSnapshot shared across the round must reproduce the
+    decisions of planners reading the DHT directly."""
+    dht, pps = _dht_with_loads([[0.1, 0.2, 0.3], [9.0, 8.0]])
+    snap = ControlSnapshot.capture(dht, 2)
+    assert stage_loads(snap, 2) == stage_loads(dht, 2)
+    assert plan_migration(snap, 2, pps) == plan_migration(dht, 2, pps)
+
+    spans = {"wide": (0, 2), "s0": (0, 1), "s1": (1, 2)}
+    dht2 = _span_dht(None, {"wide": {0: 5.0, 1: 5.0},
+                            "s0": {0: 0.1}, "s1": {1: 9.0}})
+    snap2 = ControlSnapshot.capture(dht2, 2)
+    assert plan_span_change(snap2, 2, spans) == \
+        plan_span_change(dht2, 2, spans)
+
+
+def test_snapshot_is_frozen_against_later_writes():
+    """Writes landing after capture must not leak into the round's
+    decisions — that is the point of the per-round snapshot."""
+    dht, pps = _dht_with_loads([[0.1, 0.2, 0.3], [9.0]])
+    snap = ControlSnapshot.capture(dht, 2)
+    dht.store(dht.load_key(0), "s0p0", 99.0, ttl=100)   # late announce
+    mig = plan_migration(snap, 2, pps)
+    assert mig is not None and mig.peer == "s0p0"       # pre-write view
+
+
+def test_snapshot_stage_count_mismatch_raises():
+    dht, pps = _dht_with_loads([[1.0], [1.0]])
+    snap = ControlSnapshot.capture(dht, 2)
+    with pytest.raises(ValueError, match="snapshot"):
+        plan_migration(snap, 3, pps)
 
 
 def test_repeated_migration_converges_to_balance():

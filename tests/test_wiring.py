@@ -4,7 +4,7 @@ import math
 import pytest
 from hypothesis import given, settings, strategies as st
 
-from repro.core.wiring import StochasticWiring, INF
+from repro.core.wiring import StagePriorityQueue, StochasticWiring, INF
 
 
 def test_single_server_always_chosen():
@@ -107,6 +107,75 @@ def test_ema_update_rule():
     w.ema["a"] = 0.5                # pin the (jittered) prior
     w.observe("a", 1.5)
     assert math.isclose(w.ema["a"], 0.1 * 1.5 + 0.9 * 0.5)
+
+
+def test_refresh_evicts_absent_peer():
+    """Kill-without-ban: a reclaimed spot instance never says goodbye —
+    its DHT records simply lapse.  ONE refresh against a snapshot that
+    no longer lists the peer must drop it from routing, ``_stages_of``
+    and ``ema`` (pre-fix it lingered forever: the ISSUE-10 leak)."""
+    w = StochasticWiring(1)
+    w.add_server("a", [0])
+    w.add_server("dead", [0])
+    for _ in range(10):
+        s = w.choose_server(0)
+        w.observe(s, 1.0)
+    w.refresh_from_dht(None, {"a": 0})    # 'dead' absent: TTL expired
+    assert "dead" not in w._stages_of
+    assert "dead" not in w.ema
+    assert all("dead" not in q._entries for q in w.queues)
+    assert all(w.choose_server(0) == "a" for _ in range(20))
+
+
+def test_refresh_evicted_peer_rejoins_like_new():
+    """An evicted peer that re-announces later is re-discovered with a
+    fresh prior, exactly like a first join."""
+    w = StochasticWiring(1)
+    w.add_server("a", [0])
+    w.add_server("b", [0])
+    w.refresh_from_dht(None, {"a": 0})
+    assert "b" not in w._stages_of
+    w.refresh_from_dht(None, {"a": 0, "b": 0})
+    chosen = {w.choose_server(0) for _ in range(30)}
+    assert "b" in chosen
+
+
+def test_heap_compaction_bounded_under_bumps():
+    """10k priority bumps over 4 servers must keep the physical heap
+    O(#servers) — lazy deletion without compaction grows it
+    O(#requests) for the life of the trainer (the ISSUE-10 leak)."""
+    q = StagePriorityQueue()
+    for i in range(4):
+        q.update(f"p{i}", float(i))
+    for _ in range(10_000):
+        server, priority = q.top()
+        q.update(server, priority + 1.0)
+    # compaction triggers once invalidated entries outnumber live ones
+    # past _COMPACT_MIN, so the heap never exceeds live + _COMPACT_MIN
+    # + the handful pushed since the last rebuild
+    bound = 2 * (4 + StagePriorityQueue._COMPACT_MIN)
+    assert q.heap_size() <= bound, q.heap_size()
+    # and the queue still routes: all four servers stay reachable
+    assert sorted(q.servers()) == [f"p{i}" for i in range(4)]
+
+
+def test_heap_compaction_with_bans_and_removes():
+    """Interleaved bans (INF updates, never pushed) and removes must not
+    corrupt the invalid-entry accounting that drives compaction."""
+    q = StagePriorityQueue()
+    for i in range(8):
+        q.update(f"p{i}", float(i))
+    for k in range(2_000):
+        server, priority = q.top()
+        q.update(server, priority + 1.0)
+        if k % 97 == 0:
+            q.update(f"p{k % 8}", INF)          # ban
+            q.update(f"p{k % 8}", float(k))     # re-admit
+        if k % 401 == 0:
+            q.remove(f"p{(k + 3) % 8}")
+            q.update(f"p{(k + 3) % 8}", float(k))
+    assert q.heap_size() <= 2 * (8 + StagePriorityQueue._COMPACT_MIN)
+    assert q.top() is not None
 
 
 def test_move_server_between_stages():
